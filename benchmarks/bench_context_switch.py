@@ -1,0 +1,76 @@
+"""Paper Table 2 — two-stage compilation and context-switch cost.
+
+Static compilation happens once at deployment; dynamic (re)compilation runs
+on every hardware re-allocation and must stay ~1 ms.  Context switch cost
+(Eq. 7) = T_recompile + T_transfer.  Measured as wall-clock over re-allocated
+core counts {1, 2, 4, 8, 16}, exactly like the paper's Table 2.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import DynamicCompiler, StaticCompiler, CNN_WORKLOADS
+
+from .common import CNNS, PAPER_TABLE2, small_core, write_csv
+
+CORE_COUNTS = (1, 2, 4, 8, 16)
+REPEATS = 7
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    hw = small_core()
+    for cnn in CNNS:
+        wl = CNN_WORKLOADS[cnn]()
+        t0 = time.perf_counter()
+        art = StaticCompiler(hw, n_tiles=16).compile(wl)
+        static_s = time.perf_counter() - t0
+        dyn = DynamicCompiler(art)
+        dyn_ms, ctx_ms, xfer_ms = [], [], []
+        for k in CORE_COUNTS:
+            best = None
+            for _ in range(REPEATS):
+                sch = dyn.compile(list(range(k)))
+                cost = dyn.context_switch_cost(sch, hw)
+                if best is None or cost["t_context"] < best["t_context"]:
+                    best = cost
+            dyn_ms.append(best["t_recompile"] * 1e3)
+            xfer_ms.append(best["t_transfer"] * 1e3)
+            ctx_ms.append(best["t_context"] * 1e3)
+        paper = PAPER_TABLE2[cnn]
+        rows.append({
+            "bench": "context_switch", "cnn": cnn,
+            "static_s": round(static_s, 3),
+            "dynamic_ms_min": round(min(dyn_ms), 3),
+            "dynamic_ms_max": round(max(dyn_ms), 3),
+            "transfer_ms_min": round(min(xfer_ms), 4),
+            "transfer_ms_max": round(max(xfer_ms), 4),
+            "ctx_ms_min": round(min(ctx_ms), 3),
+            "ctx_ms_max": round(max(ctx_ms), 3),
+            "paper_static_s": paper["static_s"],
+            "paper_dynamic_ms": f"{paper['dynamic_ms'][0]}-{paper['dynamic_ms'][1]}",
+            "paper_ctx_ms": f"{paper['ctx_ms'][0]}-{paper['ctx_ms'][1]}",
+            "static_over_dynamic": round(static_s * 1e3 / max(max(dyn_ms), 1e-9)),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("context_switch", rows)
+    print("\n# Table 2: compilation + context switch (ours vs paper)")
+    print(f"{'cnn':14s} {'static_s':>9s} {'dyn_ms':>13s} {'ctx_ms':>13s}  paper_ctx_ms  static/dyn")
+    for r in rows:
+        print(
+            f"{r['cnn']:14s} {r['static_s']:9.3f} "
+            f"{r['dynamic_ms_min']:.2f}-{r['dynamic_ms_max']:<7.2f} "
+            f"{r['ctx_ms_min']:.2f}-{r['ctx_ms_max']:<7.2f}  "
+            f"{r['paper_ctx_ms']:>11s}  {r['static_over_dynamic']:>8d}x"
+        )
+    print(f"csv -> {path}")
+
+
+if __name__ == "__main__":
+    main()

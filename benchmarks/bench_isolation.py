@@ -1,0 +1,138 @@
+"""Paper Figure 5 — performance isolation in the public cloud scenario.
+
+A fixed tenant holds x ∈ {100%, 75%, 50%, 25%} of the 16-core pool; the
+remaining cores are occupied by other tenants in every proportion.  The
+metric is the fixed tenant's throughput deviation (max-min)/max across the
+co-tenant mixes — the paper's SDM design keeps it <1% (vs 5.5-13.1% for the
+CUDA-MPS GPU baseline).
+
+Also runs the TDM counter-example the paper argues against: a single
+time-sliced core gives each tenant throughput that *depends on the number of
+co-tenants*, i.e. no isolation at all.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List
+
+from repro.core import ResourcePool, SwitchMode, VirtualEngine
+
+from .common import CNNS, small_core, static_artifact, write_csv
+
+POOL = 16
+HORIZON = 2.0  # simulated seconds
+
+
+def _partitions(total: int, parts: int) -> List[List[int]]:
+    """All compositions of ``total`` into ``parts`` positive integers."""
+    if parts == 1:
+        return [[total]]
+    out = []
+    for first in range(1, total - parts + 2):
+        for rest in _partitions(total - first, parts - 1):
+            out.append([first] + rest)
+    return out
+
+
+def fixed_tenant_fps(cnn: str, fixed_cores: int, others: List[int]) -> float:
+    pool = ResourcePool(n_cores=POOL)
+    eng = VirtualEngine(pool, small_core())
+    art = static_artifact(cnn)
+    eng.admit("fixed", art, fixed_cores)
+    for i, n in enumerate(others):
+        eng.admit(f"bg{i}", art, n)
+    metrics = eng.run(HORIZON)
+    return metrics["fixed"].throughput(HORIZON)
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    for cnn in ("resnet50", "mobilenet"):
+        for frac, fixed in ((1.0, 16), (0.75, 12), (0.5, 8), (0.25, 4)):
+            free = POOL - fixed
+            fps_list = []
+            if free == 0:
+                fps_list.append(fixed_tenant_fps(cnn, fixed, []))
+            else:
+                # co-tenant mixes: 1..3 background tenants in all proportions
+                seen = set()
+                for nbg in (1, 2, 3):
+                    if free < nbg:
+                        continue
+                    for comp in _partitions(free, nbg):
+                        key = tuple(sorted(comp))
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        fps_list.append(fixed_tenant_fps(cnn, fixed, comp))
+            dev = (max(fps_list) - min(fps_list)) / max(fps_list) if len(fps_list) > 1 else 0.0
+            rows.append({
+                "bench": "isolation_sdm", "cnn": cnn,
+                "fixed_pct": int(frac * 100), "fixed_cores": fixed,
+                "mixes": len(fps_list),
+                "fps_min": round(min(fps_list), 2), "fps_max": round(max(fps_list), 2),
+                "deviation_pct": round(100 * dev, 3),
+                "paper_gpu_deviation_pct": {100: 0.0, 75: "7.1-13.1", 50: "5.5-10.9", 25: "6.5-8.1"}[int(frac * 100)],
+            })
+
+    # ---- non-group-aligned leases: bounded arbiter crosstalk --------------
+    # the paper's x values (75/50/25%) align to whole DDR banks, giving
+    # structurally-zero crosstalk; odd-sized leases share a bank and see the
+    # §4.2.2 arbiter penalty — must stay bounded under the paper's 1%.
+    for fixed in (6, 10):
+        free = POOL - fixed
+        fps_list = [
+            fixed_tenant_fps("resnet50", fixed, comp)
+            for nbg in (1, 2)
+            if free >= nbg
+            for comp in _partitions(free, nbg)[:6]
+        ]
+        dev = (max(fps_list) - min(fps_list)) / max(fps_list)
+        rows.append({
+            "bench": "isolation_sdm_unaligned", "cnn": "resnet50",
+            "fixed_pct": round(100 * fixed / POOL), "fixed_cores": fixed,
+            "mixes": len(fps_list),
+            "fps_min": round(min(fps_list), 2), "fps_max": round(max(fps_list), 2),
+            "deviation_pct": round(100 * dev, 3),
+            "paper_gpu_deviation_pct": "-",
+        })
+
+    # ---- TDM single-core counter-example ---------------------------------
+    # one big core time-sliced: tenant throughput = single-core fps / n_tenants
+    from .common import single_core_fps
+
+    base = single_core_fps("resnet50", 8192)
+    for n in (1, 2, 4):
+        rows.append({
+            "bench": "isolation_tdm", "cnn": "resnet50",
+            "co_tenants": n - 1,
+            "tenant_fps": round(base / n, 2),
+            "deviation_vs_alone_pct": round(100 * (1 - 1 / n), 1),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("isolation", rows)
+    print("\n# Fig 5: performance isolation (deviation of fixed tenant)")
+    for r in rows:
+        if r["bench"] == "isolation_sdm":
+            print(
+                f"{r['cnn']:10s} fixed={r['fixed_pct']:3d}% "
+                f"({r['fixed_cores']:2d} cores) mixes={r['mixes']:2d} "
+                f"deviation={r['deviation_pct']:.3f}%  "
+                f"(paper GPU: {r['paper_gpu_deviation_pct']}%)"
+            )
+    for r in rows:
+        if r["bench"] == "isolation_tdm":
+            print(
+                f"TDM 1x8192: {r['co_tenants']} co-tenants -> tenant fps "
+                f"{r['tenant_fps']} (deviation {r['deviation_vs_alone_pct']}%)"
+            )
+    print(f"csv -> {path}")
+
+
+if __name__ == "__main__":
+    main()

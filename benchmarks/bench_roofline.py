@@ -1,0 +1,77 @@
+"""§Roofline — per-(arch × shape) roofline terms from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all``) and prints the single-pod roofline table: the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline
+fraction.  EXPERIMENTS.md §Roofline is generated from this output.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import write_csv
+
+DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def run(mesh_tag: str = "pod16x16") -> List[Dict]:
+    rows: List[Dict] = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh_tag}.json"))):
+        rec = json.load(open(path))
+        arch, shape = rec["arch"], rec["shape"]
+        if rec.get("skipped"):
+            rows.append({
+                "bench": "roofline", "arch": arch, "shape": shape,
+                "mesh": mesh_tag, "status": "skip", "reason": rec.get("reason", ""),
+            })
+            continue
+        if not rec.get("ok"):
+            rows.append({
+                "bench": "roofline", "arch": arch, "shape": shape,
+                "mesh": mesh_tag, "status": "FAIL",
+                "reason": rec.get("error", "")[:120],
+            })
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "bench": "roofline", "arch": arch, "shape": shape, "mesh": mesh_tag,
+            "status": "ok",
+            "t_compute_s": f"{r['t_compute']:.3e}",
+            "t_memory_s": f"{r['t_memory']:.3e}",
+            "t_collective_s": f"{r['t_collective']:.3e}",
+            "bound": r["bound"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+            "roofline_fraction": round(r["roofline_fraction"], 3),
+            "per_device_gib": round((rec.get("per_device_bytes") or 0) / 2**30, 2),
+            "compile_s": round(rec.get("compile_s", 0), 1),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("roofline", rows)
+    print("\n# Roofline (single-pod 16x16 = 256 chips)")
+    hdr = f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'bound':>10s} {'useful':>7s} {'frac':>6s} {'GiB/dev':>8s}"
+    print(hdr)
+    for r in rows:
+        if r["status"] == "ok":
+            print(
+                f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:>9s} "
+                f"{r['t_memory_s']:>9s} {r['t_collective_s']:>9s} "
+                f"{r['bound']:>10s} {r['useful_flops_ratio']:>7} "
+                f"{r['roofline_fraction']:>6} {r['per_device_gib']:>8}"
+            )
+        elif r["status"] == "skip":
+            print(f"{r['arch']:22s} {r['shape']:12s} SKIP ({r['reason'][:60]})")
+        else:
+            print(f"{r['arch']:22s} {r['shape']:12s} FAIL ({r['reason'][:60]})")
+    print(f"csv -> {path}")
+
+
+if __name__ == "__main__":
+    main()

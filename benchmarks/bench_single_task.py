@@ -1,0 +1,84 @@
+"""Paper Table 3 / Figure 6 — single-task throughput of the virtualized
+multi-core design under three tiling strategies (W / OC / optimized) vs. the
+static single-core baseline, across computation parallelism 512..16×512.
+
+Also reproduces the §6.3.2 MobileNet bandwidth ablation: MobileNet's
+parameter/compute ratio makes the 128-bit small core bandwidth-bound; the
+optimized multi-core loss collapses once the memory bandwidth is doubled.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import Strategy
+
+from .common import (
+    CNNS, PAPER_TABLE3_RESNET50, multi_core_fps, single_core_fps, write_csv,
+)
+
+CORE_COUNTS = (1, 2, 4, 8, 16)
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    for cnn in CNNS:
+        for k in CORE_COUNTS:
+            fps_w = multi_core_fps(cnn, k, strategy=Strategy.WIDTH)
+            fps_oc = multi_core_fps(cnn, k, strategy=Strategy.OC)
+            fps_opt = multi_core_fps(cnn, k)          # per-layer optimized
+            fps_single = single_core_fps(cnn, 512 * k)
+            row = {
+                "bench": "single_task", "cnn": cnn, "cores": k,
+                "fps_W": round(fps_w, 1), "fps_OC": round(fps_oc, 1),
+                "fps_opt": round(fps_opt, 1), "fps_single": round(fps_single, 1),
+                "loss_opt_vs_single_pct": round(100 * (1 - fps_opt / fps_single), 2),
+            }
+            if cnn == "resnet50":
+                for key, val in PAPER_TABLE3_RESNET50[k].items():
+                    if key != "linear":
+                        row[f"paper_{key}"] = val
+            rows.append(row)
+
+    # ---- MobileNet 2x-bandwidth ablation (§6.3.2) -------------------------
+    for bw in (1.0, 2.0):
+        losses = []
+        for k in CORE_COUNTS:
+            fps_opt = multi_core_fps("mobilenet", k, bw_factor=bw)
+            fps_single = single_core_fps("mobilenet", 512 * k, bw_factor=bw)
+            losses.append(1 - fps_opt / fps_single)
+        rows.append({
+            "bench": "mobilenet_bw_ablation", "cnn": "mobilenet",
+            "bw_factor": bw,
+            "avg_loss_pct": round(100 * sum(losses) / len(losses), 2),
+            "paper_avg_loss_pct": 31.64 if bw == 1.0 else 5.33,
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("single_task", rows)
+    # compact console table for the ResNet50 row (the calibration target)
+    print("\n# Table 3 (ResNet50): ours vs paper")
+    print("cores  W(o/p)        OC(o/p)       opt(o/p)      single(o/p)")
+    for r in rows:
+        if r.get("cnn") == "resnet50" and r.get("bench") == "single_task":
+            p = PAPER_TABLE3_RESNET50[r["cores"]]
+            print(
+                f"{r['cores']:5d}  {r['fps_W']:5.1f}/{p['W']:5.1f}  "
+                f"{r['fps_OC']:6.1f}/{p['OC']:5.1f}  "
+                f"{r['fps_opt']:6.1f}/{p['opt']:5.1f}  "
+                f"{r['fps_single']:6.1f}/{p['single']:5.1f}"
+            )
+    for r in rows:
+        if r.get("bench") == "mobilenet_bw_ablation":
+            print(
+                f"mobilenet bw x{r['bw_factor']:.0f}: avg opt loss "
+                f"{r['avg_loss_pct']:.2f}% (paper {r['paper_avg_loss_pct']}%)"
+            )
+    print(f"csv -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure, CSV per bench.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run single_task
+
+Order mirrors the paper: Table 1 (resources), Table 2 (context switch),
+Table 3/Fig 6 (single-task tiling), Fig 5 (isolation), Fig 7 (multi-task),
+plus the beyond-paper straggler bench and the §Roofline table.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = [
+    ("resources", "bench_resources", "Table 1 — resource/overhead accounting"),
+    ("context_switch", "bench_context_switch", "Table 2 — two-stage compile + ctx switch"),
+    ("single_task", "bench_single_task", "Table 3/Fig 6 — single-task tiling throughput"),
+    ("isolation", "bench_isolation", "Fig 5 — performance isolation"),
+    ("multi_task", "bench_multi_task", "Fig 7 — multi-task dynamic workload"),
+    ("straggler", "bench_straggler", "beyond-paper — straggler mitigation"),
+    ("roofline", "bench_roofline", "§Roofline — dry-run derived terms"),
+]
+
+
+def main() -> int:
+    only = set(sys.argv[1:])
+    failures = 0
+    t_all = time.time()
+    for name, module, desc in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n{'='*78}\n== {name}: {desc}\n{'='*78}")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{module}", fromlist=["main"])
+            mod.main()
+            print(f"[{name}] done in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001 — run every bench, report at end
+            failures += 1
+            import traceback
+
+            traceback.print_exc()
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+    print(f"\nbenchmarks finished in {time.time()-t_all:.1f}s, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""Elastic reconfiguration under a dynamic workload (paper Fig. 1c/1d + §6.3.3).
+
+    PYTHONPATH=src python examples/elastic_reconfig.py
+
+Simulates a private-cloud day: tenants arrive and leave; on every change the
+hypervisor re-balances core leases through the ~ms dynamic compiler.  Prints
+the running allocation and per-phase throughput, contrasting with the two
+static baselines (single big core TDM / fixed 16 small cores).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (
+    CNN_WORKLOADS, DynamicCompiler, ResourcePool, StaticCompiler,
+    VirtualEngine, fpga_core, fpga_small_core,
+)
+
+PHASES = [
+    # (description, {tenant: cores})
+    ("night: 1 tenant, whole pool", {"svc-a": 16}),
+    ("morning: second tenant joins", {"svc-a": 8, "svc-b": 8}),
+    ("peak: four tenants", {"svc-a": 4, "svc-b": 4, "svc-c": 4, "svc-d": 4}),
+    ("evening: back to two", {"svc-a": 12, "svc-b": 4}),
+]
+
+
+def main() -> None:
+    hw = fpga_small_core()
+    art = StaticCompiler(hw, n_tiles=16).compile(CNN_WORKLOADS["resnet50"]())
+
+    # static baselines
+    big = fpga_core(8192, 4 * 512)
+    art_big = StaticCompiler(big, n_tiles=1).compile(CNN_WORKLOADS["resnet50"]())
+    tdm_total = 1.0 / DynamicCompiler(art_big).compile([0]).estimated_latency(big)
+    small1 = 1.0 / DynamicCompiler(art).compile([0]).estimated_latency(hw)
+
+    print(f"{'phase':34s} {'virtualized':>12s} {'static-multi':>13s} {'static-1core':>13s}")
+    total_ctx_ms = 0.0
+    for desc, alloc in PHASES:
+        pool = ResourcePool(16)
+        eng = VirtualEngine(pool, hw)
+        ctx_ms = 0.0
+        for tenant, cores in alloc.items():
+            eng.admit(tenant, art, cores)
+            ctx_ms += eng.tenants[tenant].schedule.compile_seconds * 1e3
+        m = eng.run(1.0)
+        virt = sum(t.throughput(1.0) for t in m.values())
+        static_multi = len(alloc) * small1          # 1 fixed core per tenant
+        print(f"{desc:34s} {virt:9.1f} fps {static_multi:10.1f} fps "
+              f"{tdm_total:10.1f} fps   (recompile {ctx_ms:.2f} ms)")
+        total_ctx_ms += ctx_ms
+    print(f"\ntotal reconfiguration overhead across the day: {total_ctx_ms:.1f} ms "
+          f"(vs ~100 s per reconfiguration for bitstream/instruction regeneration)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end driver: serve a small LM with batched requests, multi-tenant.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+
+Two tenants share one node through the VirtualAcceleratorPool (disjoint
+leases = the paper's SDM isolation), each running a ContinuousBatcher: real
+prefill + decode over a reduced qwen3 model, continuous admission into free
+slots, greedy sampling, per-request completion tracking.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.tenancy import VirtualAcceleratorPool
+
+
+def main() -> None:
+    cfg = get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    pool = VirtualAcceleratorPool(devices=list(jax.devices()) * 16,
+                                  devices_per_core=1)
+    print(f"pool: {pool.n_cores} cores; model: {cfg.name} "
+          f"({cfg.param_count()/1e6:.1f}M params)")
+
+    for tenant, n_cores, n_req in (("alice", 12, 10), ("bob", 4, 6)):
+        lease = pool.lease(tenant, n_cores)
+        batcher = ContinuousBatcher(params, cfg, slots=4, prompt_len=12,
+                                    max_len=40)
+        reqs = []
+        for r in range(n_req):
+            plen = int(rng.integers(3, 12))
+            req = Request(rid=r,
+                          prompt=rng.integers(1, cfg.vocab, plen).astype(np.int32),
+                          max_new=10)
+            reqs.append(req)
+            batcher.submit(req)
+        stats = batcher.run()
+        print(f"{tenant}: {len(lease.cores)} cores, "
+              f"{stats.completed}/{n_req} requests done, "
+              f"{stats.steps} decode steps, {stats.prefills} prefills, "
+              f"occupancy {stats.occupancy:.2f}")
+        print(f"  sample output (req 0): {reqs[0].out}")
+
+    # isolation invariant held throughout
+    pool.pool.check_isolation()
+    pool.pool.check_bandwidth()
+    print("isolation + bandwidth budget invariants: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Core library: the paper's FPGA-virtualization technique in portable form.
+
+Pipeline:  workload (layer table)
+        -> StaticCompiler   (offline: tiled IFPs + latency LUT)     §5.2.1
+        -> DynamicCompiler  (online ~ms: workload-balanced realloc) §5.2.2
+        -> VirtualEngine    (HRP leases + two-level IDM + barriers) §4
+"""
+
+from .allocator import allocate, allocate_contiguous_dp, allocate_lpt, allocate_weighted
+from .dispatch import (
+    ContextSwitchController,
+    InstructionRouter,
+    MultiCoreSyncController,
+    SwitchMode,
+)
+from .dynamic_compiler import DynamicCompiler, Schedule
+from .hrp import HRPError, Lease, ResourcePool
+from .hwmodel import (
+    HardwareModel,
+    fpga_core,
+    fpga_large_core,
+    fpga_small_core,
+    tpu_v5e_chip,
+)
+from .ifp import IFP, Strategy, dedupe_onchip, make_layer_ifps
+from .isa import Chain, Instr, Op, Program, SYNC_PROGRAM, Unit, concat
+from .latency_sim import roofline_terms, simulate, simulate_layer_barrier
+from .static_compiler import StaticArtifact, StaticCompiler, compile_monolithic
+from .vengine import ReconfigRequest, TenantMetrics, VirtualEngine
+from .workloads import CNN_WORKLOADS, Layer, lm_layer_table, workload_stats
+
+__all__ = [
+    "allocate", "allocate_contiguous_dp", "allocate_lpt", "allocate_weighted",
+    "ContextSwitchController", "InstructionRouter", "MultiCoreSyncController",
+    "SwitchMode", "DynamicCompiler", "Schedule", "HRPError", "Lease",
+    "ResourcePool", "HardwareModel", "fpga_core", "fpga_large_core",
+    "fpga_small_core", "tpu_v5e_chip", "IFP", "Strategy", "dedupe_onchip",
+    "make_layer_ifps", "Chain", "Instr", "Op", "Program", "SYNC_PROGRAM",
+    "Unit", "concat",
+    "roofline_terms", "simulate", "simulate_layer_barrier", "StaticArtifact",
+    "StaticCompiler", "compile_monolithic", "ReconfigRequest", "TenantMetrics",
+    "VirtualEngine", "CNN_WORKLOADS", "Layer", "lm_layer_table",
+    "workload_stats",
+]

@@ -1,0 +1,149 @@
+"""Multi-core Hardware Resource Pool (HRP) — paper §4.2.2.
+
+The HRP divides the single large accelerator into ``n_cores`` basic shareable
+units and leases disjoint subsets to tenants.  Isolation invariants enforced
+here (they are *the* public-cloud requirement of the paper):
+
+* **Physical isolation** — leases never overlap; a tenant can only ever touch
+  its own cores.  On the TPU adaptation a lease maps to a disjoint sub-mesh.
+* **Bandwidth isolation** — every core owns a fixed off-chip port
+  (128-bit DDR slice in the paper; a chip's own HBM on TPU); the pool checks
+  that the per-DDR-group port-bit budget is never oversubscribed
+  (``sum(core ports) <= 512 bit`` per DDR bank, §4.2.2).
+
+The pool is pure bookkeeping — deliberately no JAX here; the serving glue
+(`repro.serving.tenancy`) turns leases into `jax.sharding.Mesh` slices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+
+class HRPError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    tenant: str
+    cores: tuple  # tuple[int, ...]
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.cores)
+
+
+class ResourcePool:
+    """Disjoint-lease manager over ``n_cores`` basic shareable units."""
+
+    def __init__(
+        self,
+        n_cores: int = 16,
+        *,
+        cores_per_ddr: int = 4,
+        ddr_port_bits: int = 512,
+        core_port_bits: int = 128,
+    ) -> None:
+        if cores_per_ddr * core_port_bits > ddr_port_bits:
+            raise HRPError(
+                "port budget violated at construction: "
+                f"{cores_per_ddr} cores x {core_port_bits}b > {ddr_port_bits}b/DDR"
+            )
+        self.n_cores = n_cores
+        self.cores_per_ddr = cores_per_ddr
+        self.ddr_port_bits = ddr_port_bits
+        self.core_port_bits = core_port_bits
+        self._leases: Dict[str, Lease] = {}
+        self._owner: List[Optional[str]] = [None] * n_cores
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def leases(self) -> Dict[str, Lease]:
+        return dict(self._leases)
+
+    def free_cores(self) -> List[int]:
+        return [i for i, o in enumerate(self._owner) if o is None]
+
+    def lease_of(self, tenant: str) -> Optional[Lease]:
+        return self._leases.get(tenant)
+
+    # -- invariants ----------------------------------------------------------
+    def check_isolation(self) -> None:
+        """Leases must be pairwise disjoint and owner table consistent."""
+        seen: Dict[int, str] = {}
+        for t, lease in self._leases.items():
+            for c in lease.cores:
+                if c in seen:
+                    raise HRPError(f"core {c} leased to both {seen[c]} and {t}")
+                if self._owner[c] != t:
+                    raise HRPError(f"owner table drift at core {c}")
+                seen[c] = t
+        for c, o in enumerate(self._owner):
+            if o is not None and c not in seen:
+                raise HRPError(f"owner table claims {c} -> {o} without a lease")
+
+    def check_bandwidth(self) -> None:
+        """Per-DDR-group port-bit budget (§4.2.2 hardware restriction)."""
+        n_groups = (self.n_cores + self.cores_per_ddr - 1) // self.cores_per_ddr
+        for g in range(n_groups):
+            lo, hi = g * self.cores_per_ddr, min((g + 1) * self.cores_per_ddr, self.n_cores)
+            bits = sum(
+                self.core_port_bits for c in range(lo, hi) if self._owner[c] is not None
+            )
+            if bits > self.ddr_port_bits:
+                raise HRPError(f"DDR group {g} oversubscribed: {bits}b")
+
+    # -- lifecycle ------------------------------------------------------------
+    def alloc(self, tenant: str, n: int) -> Lease:
+        if tenant in self._leases:
+            raise HRPError(f"tenant {tenant} already holds a lease; use resize()")
+        free = self.free_cores()
+        if n > len(free):
+            raise HRPError(f"want {n} cores, only {len(free)} free")
+        # prefer whole DDR groups: keeps tenants' traffic on dedicated banks
+        cores = tuple(sorted(free)[:n])
+        for c in cores:
+            self._owner[c] = tenant
+        lease = Lease(tenant, cores)
+        self._leases[tenant] = lease
+        self.check_isolation()
+        self.check_bandwidth()
+        return lease
+
+    def release(self, tenant: str) -> None:
+        lease = self._leases.pop(tenant, None)
+        if lease is None:
+            raise HRPError(f"tenant {tenant} holds no lease")
+        for c in lease.cores:
+            self._owner[c] = None
+
+    def resize(self, tenant: str, n: int) -> Lease:
+        """Grow/shrink a lease in place — the private-cloud reconfiguration
+        primitive.  Retains as many of the tenant's current cores as possible
+        (minimizes instruction/context migration)."""
+        lease = self._leases.get(tenant)
+        if lease is None:
+            return self.alloc(tenant, n)
+        cur = list(lease.cores)
+        if n < len(cur):
+            keep, drop = cur[:n], cur[n:]
+            for c in drop:
+                self._owner[c] = None
+            new = Lease(tenant, tuple(keep))
+        elif n > len(cur):
+            free = self.free_cores()
+            need = n - len(cur)
+            if need > len(free):
+                raise HRPError(f"resize wants {need} extra cores, only {len(free)} free")
+            extra = sorted(free)[:need]
+            for c in extra:
+                self._owner[c] = tenant
+            new = Lease(tenant, tuple(sorted(cur + extra)))
+        else:
+            new = lease
+        self._leases[tenant] = new
+        self.check_isolation()
+        self.check_bandwidth()
+        return new

@@ -1,0 +1,220 @@
+"""Virtualized multi-tenant execution engine (discrete-event).
+
+Ties the whole paper together: the HRP leases cores to tenants, the two-stage
+compiler produces per-core schedules, the two-level IDM controllers manage
+context switches and layer barriers, and the latency simulator supplies
+per-layer core times.  Because leases are disjoint and every core owns its
+off-chip port, tenants' timelines are independent — the engine simulates each
+tenant's clock separately, which *is* the isolation property (a small optional
+DDR-group crosstalk factor models the arbiter of §4.2.2 when tenants share a
+bank, bounded well under the paper's 1% deviation).
+
+Supports:
+  * closed-loop inference (each tenant re-issues back-to-back requests),
+  * hypervisor reconfiguration at a global time (task- or layer-level switch,
+    with measured dynamic-recompile + transfer cost added to the timeline),
+  * straggler injection (per-core slowdown) and mitigation (weighted
+    re-allocation of the remaining layers via the dynamic compiler).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .dispatch import ContextSwitchController, MultiCoreSyncController, SwitchMode
+from .dynamic_compiler import DynamicCompiler, Schedule
+from .hwmodel import HardwareModel
+from .hrp import ResourcePool
+from .latency_sim import simulate
+from .static_compiler import StaticArtifact
+
+
+@dataclasses.dataclass
+class ReconfigRequest:
+    t_request: float
+    n_cores: int
+    mode: SwitchMode = SwitchMode.LAYER_LEVEL
+
+
+@dataclasses.dataclass
+class TenantMetrics:
+    completions: List[float] = dataclasses.field(default_factory=list)
+    ctx_switches: int = 0
+    ctx_overhead: float = 0.0
+    rebalances: int = 0
+
+    def throughput(self, horizon: float) -> float:
+        return len(self.completions) / horizon if horizon > 0 else 0.0
+
+
+@dataclasses.dataclass
+class _Tenant:
+    name: str
+    artifact: StaticArtifact
+    dyn: DynamicCompiler
+    schedule: Schedule
+    clock: float = 0.0
+    layer_idx: int = 0
+    inference_id: int = 0
+    pending: List[ReconfigRequest] = dataclasses.field(default_factory=list)
+    metrics: TenantMetrics = dataclasses.field(default_factory=TenantMetrics)
+    # simulate() results per (schedule identity, hw name, layer) — schedules
+    # and their chains are immutable, so per-layer times are too.
+    _layer_cache: Dict[Tuple[int, str, int], Dict[int, float]] = dataclasses.field(
+        default_factory=dict
+    )
+
+
+class VirtualEngine:
+    def __init__(
+        self,
+        pool: ResourcePool,
+        hw_unit: HardwareModel,
+        *,
+        ddr_crosstalk: float = 0.004,
+        straggler_threshold: float = 1.5,
+        mitigate_stragglers: bool = False,
+    ) -> None:
+        self.pool = pool
+        self.hw = hw_unit
+        self.ddr_crosstalk = ddr_crosstalk
+        self.straggler_threshold = straggler_threshold
+        self.mitigate_stragglers = mitigate_stragglers
+        self.sync = MultiCoreSyncController()
+        self.ctx = ContextSwitchController()
+        self.tenants: Dict[str, _Tenant] = {}
+        self.core_slowdown: Dict[int, float] = {}
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, name: str, artifact: StaticArtifact, n_cores: int) -> None:
+        lease = self.pool.alloc(name, n_cores)
+        dyn = DynamicCompiler(artifact)
+        schedule = dyn.compile(lease.cores)
+        self.sync.configure(name, set(lease.cores))
+        self.tenants[name] = _Tenant(name, artifact, dyn, schedule)
+
+    def remove(self, name: str) -> None:
+        self.pool.release(name)
+        self.sync.deconfigure(name)
+        del self.tenants[name]
+
+    def request_resize(
+        self, name: str, n_cores: int, *, at: float = 0.0,
+        mode: SwitchMode = SwitchMode.LAYER_LEVEL,
+    ) -> None:
+        self.tenants[name].pending.append(ReconfigRequest(at, n_cores, mode))
+        self.tenants[name].pending.sort(key=lambda r: r.t_request)
+        self.ctx.request_switch(name, mode)
+
+    # -- crosstalk -------------------------------------------------------------
+    def _tenant_hw(self, tenant: _Tenant) -> HardwareModel:
+        """Effective per-core hardware for this tenant: tiny bandwidth loss on
+        DDR groups shared with other (active) tenants — §4.2.2 arbiter model."""
+        if self.ddr_crosstalk <= 0:
+            return self.hw
+        lease = self.pool.lease_of(tenant.name)
+        if lease is None:
+            return self.hw
+        g = self.pool.cores_per_ddr
+        shared = 0
+        for c in lease.cores:
+            group = range((c // g) * g, min((c // g + 1) * g, self.pool.n_cores))
+            if any(self.pool._owner[x] not in (None, tenant.name) for x in group):
+                shared += 1
+        frac = shared / max(len(lease.cores), 1)
+        return self.hw.with_bandwidth(1.0 - self.ddr_crosstalk * frac)
+
+    # -- one layer step ----------------------------------------------------------
+    def _layer_time(self, tenant: _Tenant) -> Tuple[float, Dict[int, float]]:
+        hw = self._tenant_hw(tenant)
+        li = tenant.layer_idx
+        key = (id(tenant.schedule), hw.name, li)
+        base = tenant._layer_cache.get(key)
+        if base is None:
+            base = {}
+            for local, phys in enumerate(tenant.schedule.core_ids):
+                prog = tenant.schedule.per_core_layers[local][li]
+                if len(prog) == 0:
+                    continue
+                base[phys] = simulate(prog, hw)
+            tenant._layer_cache[key] = base
+        per_core = {
+            phys: dt * self.core_slowdown.get(phys, 1.0) for phys, dt in base.items()
+        }
+        t_layer = (max(per_core.values()) if per_core else 0.0) + hw.sync_latency
+        return t_layer, per_core
+
+    def _maybe_mitigate(self, tenant: _Tenant, per_core: Dict[int, float]) -> None:
+        if not self.mitigate_stragglers or len(per_core) < 2:
+            return
+        times = sorted(per_core.values())
+        median = times[len(times) // 2]
+        slow = [c for c, t in per_core.items() if t > self.straggler_threshold * median]
+        if not slow:
+            return
+        speeds = [1.0 / self.core_slowdown.get(c, 1.0) for c in tenant.schedule.core_ids]
+        tenant.schedule = tenant.dyn.compile(
+            tenant.schedule.core_ids, core_speeds=speeds
+        )
+        tenant.metrics.rebalances += 1
+
+    def _apply_reconfig(self, tenant: _Tenant, req: ReconfigRequest) -> None:
+        n_layers = len(tenant.artifact.workload)
+        ctx = self.ctx.boundary(
+            tenant.name, tenant.layer_idx, n_layers, tenant.inference_id
+        )
+        if ctx is None and req.mode is SwitchMode.TASK_LEVEL:
+            return  # not at task end yet; retry at the next boundary
+        lease = self.pool.resize(tenant.name, req.n_cores)
+        self.sync.configure(tenant.name, set(lease.cores))
+        schedule = tenant.dyn.compile(lease.cores)
+        cost = tenant.dyn.context_switch_cost(schedule, self.hw)
+        tenant.clock += cost["t_context"]
+        tenant.schedule = schedule
+        tenant.metrics.ctx_switches += 1
+        tenant.metrics.ctx_overhead += cost["t_context"]
+        tenant.pending.remove(req)
+        if ctx is not None:
+            tenant.layer_idx = ctx.layer_idx  # resume from recorded context
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, horizon: float, *, max_inferences: Optional[int] = None) -> Dict[str, TenantMetrics]:
+        """Advance every tenant's clock to ``horizon`` (seconds)."""
+        for tenant in self.tenants.values():
+            n_layers = len(tenant.artifact.workload)
+            while tenant.clock < horizon:
+                if max_inferences is not None and len(tenant.metrics.completions) >= max_inferences:
+                    break
+                t_layer, per_core = self._layer_time(tenant)
+                tenant.clock += t_layer
+                tenant.layer_idx += 1
+                if tenant.layer_idx >= n_layers:
+                    tenant.inference_id += 1
+                    if tenant.clock <= horizon:
+                        tenant.metrics.completions.append(tenant.clock)
+                self._maybe_mitigate(tenant, per_core)
+                # layer boundary: honour any due reconfiguration request
+                # (while layer_idx may still equal n_layers => task boundary)
+                for req in list(tenant.pending):
+                    if req.t_request <= tenant.clock:
+                        self._apply_reconfig(tenant, req)
+                        break
+                if tenant.layer_idx >= n_layers:
+                    tenant.layer_idx = 0
+        return {n: t.metrics for n, t in self.tenants.items()}
+
+    # -- convenience -----------------------------------------------------------------
+    def single_inference_latency(self, name: str) -> float:
+        tenant = self.tenants[name]
+        total = 0.0
+        n_layers = len(tenant.artifact.workload)
+        hw = self._tenant_hw(tenant)
+        for li in range(n_layers):
+            t_layer = 0.0
+            for local, _ in enumerate(tenant.schedule.core_ids):
+                prog = tenant.schedule.per_core_layers[local][li]
+                if len(prog):
+                    t_layer = max(t_layer, simulate(prog, hw))
+            total += t_layer + hw.sync_latency
+        return total

@@ -1,0 +1,3 @@
+from .synthetic import global_batch, make_batch
+
+__all__ = ["global_batch", "make_batch"]

@@ -1,0 +1,28 @@
+"""Distribution layer: sharding rules, HLO analysis, gradient compression."""
+
+from .sharding import (
+    ActivationPolicy,
+    batch_shard,
+    cache_specs,
+    data_axes,
+    make_policy,
+    mesh_axis_size,
+    param_shardings,
+    param_specs,
+    train_batch_specs,
+)
+from .hlo_analysis import CollectiveStats, Roofline, collective_stats, cost_flops_bytes
+from .compression import (
+    dequantize_int8,
+    init_error_feedback,
+    pod_psum_compressed,
+    quantize_int8,
+)
+
+__all__ = [
+    "ActivationPolicy", "batch_shard", "cache_specs", "data_axes",
+    "make_policy", "mesh_axis_size", "param_shardings", "param_specs",
+    "train_batch_specs", "CollectiveStats", "Roofline", "collective_stats",
+    "cost_flops_bytes", "dequantize_int8", "init_error_feedback",
+    "pod_psum_compressed", "quantize_int8",
+]

@@ -1,0 +1,108 @@
+"""Gradient compression: block-wise int8 quantization with error feedback.
+
+Targets the cross-pod gradient all-reduce — the one collective that crosses
+the slow inter-pod links in the 2×16×16 multi-pod mesh.  Params are
+replicated across pods (pure DP), so each step moves
+``2·(P-1)/P · param_bytes`` per pod over DCI; int8 cuts that 2× vs bf16
+(4× vs f32) at the cost of one extra max-reduce for the scales.
+
+Error feedback (Seide et al.; EF-SGD) keeps the quantization bias from
+accumulating: the residual of each step's quantization is added back before
+the next step's quantization — convergence-neutral for smooth objectives
+(demonstrated on a quadratic in tests/test_compression.py).
+
+``pod_psum_compressed`` is designed for use inside shard_map with the "pod"
+axis manual and data/model auto (see training/steps.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _blockify(x, block: int):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = (n + block - 1) // block
+    pad = nb * block - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(nb, block), n
+
+
+def quantize_int8(x, *, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Block-wise symmetric int8.  Returns (q (nb, block) int8, scale (nb,1))."""
+    xb, _ = _blockify(x.astype(jnp.float32), block)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, shape, *, block: int = 256):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def quantization_error(x, *, block: int = 256):
+    q, s = quantize_int8(x, block=block)
+    return x - dequantize_int8(q, s, x.shape, block=block).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback compressed psum over a manual mesh axis
+# ---------------------------------------------------------------------------
+
+
+def init_error_feedback(params):
+    """Zero residual pytree matching the grads."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(g, e, *, block: int = 256):
+    """One tensor: returns (q, scale, new_residual)."""
+    corrected = g.astype(jnp.float32) + e
+    q, s = quantize_int8(corrected, block=block)
+    deq = dequantize_int8(q, s, g.shape, block=block)
+    return q, s, corrected - deq
+
+
+def pod_psum_compressed(grads, error_fb, *, axis: str = "pod", block: int = 256):
+    """All-reduce ``grads`` over the (manual) ``axis`` with an int8 wire.
+
+    Scheme (shared-scale, overflow-safe):
+      1. shared block scale  s = pmax(|g/n + e|) / (127 / n)   (4 B/block wire)
+      2. q = round(x / s) ∈ [-127/n, 127/n]  int8
+      3. psum(q) ∈ [-127, 127] — fits int8, so the big collective moves
+         1 B/element instead of 4 (f32) or 2 (bf16)
+      4. g_red = psum(q)·s ; error feedback keeps the n×-coarser grid
+         from biasing updates.
+
+    Returns (reduced mean-gradient f32 pytree, new error-feedback pytree).
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        x = g.astype(jnp.float32) / n + e
+        xb, total = _blockify(x, block)
+        local_max = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+        gmax = jax.lax.pmax(local_max, axis)               # tiny wire: 4 B/block
+        scale = jnp.maximum(gmax / (127.0 / n), 1e-12)
+        q = jnp.clip(jnp.round(xb / scale), -127.0 / n, 127.0 / n).astype(jnp.int8)
+        q_sum = jax.lax.psum(q, axis)                      # big wire: 1 B/elem
+        red = (q_sum.astype(jnp.float32) * scale).reshape(-1)[:total].reshape(g.shape)
+        e_new = (x - (q.astype(jnp.float32) * scale).reshape(-1)[:total].reshape(g.shape))
+        return red, e_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_fb)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    g_new = tdef.unflatten([o[0] for o in out])
+    e_new = tdef.unflatten([o[1] for o in out])
+    return g_new, e_new

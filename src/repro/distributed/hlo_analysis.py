@@ -1,0 +1,175 @@
+"""HLO analysis: collective-traffic extraction and roofline terms.
+
+``cost_analysis()`` reports FLOPs and bytes-accessed but NOT collective
+traffic, so we parse the (optimized) HLO text and sum the operand sizes of
+every communication op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+    (+ their -start async forms; -done forms are skipped to avoid double
+    counting, as are `*-update`s of the same op).
+
+Operand sizes are read from the typed operand list the HLO printer emits,
+e.g. ``%ar = bf16[256,1024] all-reduce(bf16[256,1024] %add.7), ...``.
+
+Roofline terms (per the brief, TPU v5e):
+    compute    = HLO_FLOPs      / (chips · 197e12 FLOP/s)
+    memory     = HLO_bytes      / (chips · 819e9  B/s)
+    collective = collective_B   / (chips · 50e9   B/s per ICI link)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+# typed tensor token, e.g. bf16[8,128]{1,0} or f32[] ; captures dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:[a-z0-9]*)?|pred|token)\[([0-9,]*)\]")
+# "%name = <result-type> <opcode>(<operands>)"
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\((.*)\)\s*(?:,|$)"
+)
+
+
+def shape_bytes(dtype: str, dims: str) -> float:
+    nb = DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0.0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nb
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, float]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{op}: {cnt}x {self.bytes_by_op[op] / 1e9:.3f} GB"
+            for op, cnt in sorted(self.count_by_op.items())
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in an HLO module dump."""
+    bytes_by: Dict[str, float] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        operands = m.group(3)
+        nb = sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operands))
+        bytes_by[op] = bytes_by.get(op, 0.0) + nb
+        count_by[op] = count_by.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op=bytes_by, count_by_op=count_by)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+TPU_V5E = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # B/s per chip
+    "ici_bw": 50e9,         # B/s per link
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * TPU_V5E["peak_flops"])
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * TPU_V5E["hbm_bw"])
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * TPU_V5E["ici_bw"])
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / dominant term — 1.0 means pure compute-bound
+        (the best the hardware can do for this program)."""
+        return self.t_compute / self.t_bound if self.t_bound else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bound": self.bound,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def cost_flops_bytes(cost: dict) -> tuple:
+    """Extract (flops, bytes-accessed) from compiled.cost_analysis()."""
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    if nbytes == 0.0:
+        nbytes = sum(
+            float(v) for k, v in cost.items() if k.startswith("bytes accessed")
+        )
+    return flops, nbytes

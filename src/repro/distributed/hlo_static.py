@@ -1,0 +1,516 @@
+"""Static analyzer for post-optimization HLO text: trip-count-aware cost.
+
+``compiled.cost_analysis()`` undercounts programs that keep their layer stack
+under ``lax.scan``: XLA's HloCostAnalysis visits a ``while`` body **once**,
+so a 28-layer model reports ~1/28th of its FLOPs (verified in
+tests/test_hlo_static.py).  Since every model here scans its blocks (the HLO
+must stay O(period) to compile 80-layer configs at 512 devices), the roofline
+would be garbage without correcting for trip counts.
+
+This module re-derives the three roofline inputs from ``compiled.as_text()``:
+
+* **flops** — 2 · prod(result dims) · prod(contracting dims) per ``dot``
+  (+ convolutions), summed over the call graph with every ``while`` body
+  multiplied by its trip count (XLA annotates ``known_trip_count`` in
+  ``backend_config``; fallback: the ``compare(..., constant)`` in the
+  condition computation).
+* **bytes** — HBM-traffic proxy: Σ (result + operand bytes) of every
+  *top-level* instruction in each executed computation.  Fusion interiors
+  are excluded (a fusion is one kernel: only its boundary tensors touch HBM)
+  but their dots still count toward flops.  parameter/constant/tuple/GTE/
+  bitcast contribute nothing.
+* **collective bytes** — wire traffic per device of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute.  Per-op convention
+  (ring algorithms, group size N):
+      all-reduce          2·size·(N-1)/N
+      all-gather          result·(N-1)/N
+      reduce-scatter      operand·(N-1)/N
+      all-to-all          size·(N-1)/N
+      collective-permute  size
+  ``raw_collective_bytes`` (Σ operand sizes, the brief's plain definition) is
+  reported alongside.
+
+All numbers are **per device**: the compiled module is the per-device SPMD
+program.  Aggregate with ×chips when comparing against global quantities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "tuple": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+# ops whose operands/results don't represent real HBM traffic (control flow
+# buffers are counted at their producers; tuples/GTE/bitcast are views)
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "while", "conditional", "call", "custom-call", "optimization-barrier",
+}
+
+
+_TYPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_instr_line(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """-> (name, result_type_text, opcode, rest-after-open-paren) or None.
+
+    Hand-parsed because tuple result types embed ``/*index=N*/`` comments and
+    nested layout braces that defeat a single regex.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i < len(line) and line[i] == "(":          # tuple type: scan to match
+        depth, j = 1, i + 1
+        while j < len(line) and depth:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+            j += 1
+        rtype = line[i:j]
+        i = j
+    else:                                          # scalar/array type token
+        j = i
+        while j < len(line) and not line[j].isspace():
+            j += 1
+        rtype = line[i:j]
+        i = j
+    om = _OPCODE_RE.match(line, i)
+    if not om:
+        return None
+    return name, rtype, om.group(1), line[om.end():]
+# header: `%name (params...) -> type {`  — params may nest parens (tuple
+# types), so just require: starts with optional ENTRY + %name(, contains ->,
+# ends with `{`.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_DIM_LABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+_WINDOW_SIZE_RE = re.compile(r"size=([0-9x]+)")
+_FEATURE_GROUPS_RE = re.compile(r"feature_group_count=(\d+)")
+
+
+def _shape_bytes(dtype: str, dims: List[int]) -> float:
+    nb = DTYPE_BYTES.get(dtype, 0)
+    n = 1
+    for d in dims:
+        n *= d
+    return n * nb
+
+
+def _parse_type(text: str) -> List[Tuple[str, List[int]]]:
+    """All dtype[dims] tensors in a (possibly tuple) type string."""
+    out = []
+    for m in _TYPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result: List[Tuple[str, List[int]]]     # one or more (dtype, dims)
+    rest: str                               # operand list + attributes
+
+    @property
+    def result_bytes(self) -> float:
+        return sum(_shape_bytes(dt, dims) for dt, dims in self.result)
+
+    def operand_names(self) -> List[str]:
+        # operands come before the first "),"; attrs can also contain %names
+        # (calls=%c) — cut at the closing paren of the operand list.
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return _OPERANDS_RE.findall(self.rest[:i])
+        return _OPERANDS_RE.findall(self.rest)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0           # modeled wire bytes / device
+    raw_collective_bytes: float = 0.0       # Σ operand sizes (brief's formula)
+    collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    def add(self, other: "CostTotals", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.collective_bytes += other.collective_bytes * scale
+        self.raw_collective_bytes += other.raw_collective_bytes * scale
+        for k, v in other.collective_by_op.items():
+            self.collective_by_op[k] = self.collective_by_op.get(k, 0.0) + v * scale
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = self.collective_count.get(k, 0) + int(v * scale)
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+
+class HloModule:
+    """Parsed post-optimization HLO text with cost roll-up."""
+
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._fusion_bodies: set = set()
+        self._parse(text)
+        self._memo: Dict[Tuple[str, bool], CostTotals] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            if cur is None:
+                if "->" in line and line.rstrip().endswith("{"):
+                    m = _COMP_HDR_RE.match(line)
+                    if m:
+                        cur = Computation(m.group(1), {}, [])
+                        if line.lstrip().startswith("ENTRY"):
+                            self.entry = cur.name
+                continue
+            if line.startswith("}"):
+                self.computations[cur.name] = cur
+                cur = None
+                continue
+            parsed = _parse_instr_line(line)
+            if parsed is None:
+                continue
+            name_, rtype, opcode, rest = parsed
+            ins = Instr(
+                name=name_, opcode=opcode,
+                result=_parse_type(rtype), rest=rest,
+            )
+            cur.instrs[ins.name] = ins
+            cur.order.append(ins.name)
+        # pre-scan for fusion/call targets (their interior bytes don't count)
+        for comp in self.computations.values():
+            for ins in comp.instrs.values():
+                if ins.opcode in ("fusion", "call", "async-start"):
+                    cm = _CALLS_RE.search(ins.rest)
+                    if cm:
+                        self._fusion_bodies.add(cm.group(1))
+
+    # ------------------------------------------------------------------
+    def _group_size(self, ins: Instr) -> int:
+        m = _GROUPS_IOTA_RE.search(ins.rest)
+        if m:
+            return max(int(m.group(2)), 1)
+        m = _GROUPS_LIST_RE.search(ins.rest)
+        if m:
+            return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+        return 1
+
+    def _operand_bytes(self, comp: Computation, ins: Instr) -> float:
+        total = 0.0
+        for name in ins.operand_names():
+            op = comp.instrs.get(name)
+            if op is not None:
+                total += op.result_bytes
+        return total
+
+    _SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+    _VIEW_OPS = {"bitcast", "reshape", "copy", "convert", "transpose"}
+
+    def _inplace_dus_fusion_bytes(self, ins: Instr) -> Optional[float]:
+        """Traffic of a dynamic-update-slice-rooted fusion, modeled as the
+        TPU backend executes it: the base buffer aliases in place and only
+        the updated region is written (2 × update bytes).
+
+        The CPU pipeline we compile on promotes bf16 DUS/scatter to f32,
+        which blocks aliasing and copies the whole loop-carried buffer every
+        scan iteration — e.g. the decode step's stacked KV-cache ys write
+        measured 2×279 GB/step/device of artifact traffic.  Those converts
+        do not exist on the TPU target, so the roofline charges the slice.
+        Returns None when the fusion root isn't a DUS on a parameter."""
+        cm = _CALLS_RE.search(ins.rest)
+        callee = self.computations.get(cm.group(1)) if cm else None
+        if callee is None or not callee.order:
+            return None
+        # root = last instruction; peel views (convert/bitcast inserted by
+        # CPU float normalization)
+        node = callee.instrs[callee.order[-1]]
+        for _ in range(3):
+            if node.opcode in self._VIEW_OPS:
+                nxt = callee.instrs.get(next(iter(node.operand_names()), ""))
+                if nxt is None:
+                    return None
+                node = nxt
+            else:
+                break
+        if node.opcode not in ("dynamic-update-slice", "scatter"):
+            return None
+        ops_ = node.operand_names()
+        upd_idx = 1 if node.opcode == "dynamic-update-slice" else 2
+        if len(ops_) <= upd_idx:
+            return None
+        # base must trace back to a fusion parameter (aliasable)
+        base = callee.instrs.get(ops_[0])
+        for _ in range(3):
+            if base is None:
+                return None
+            if base.opcode == "parameter":
+                break
+            if base.opcode in self._VIEW_OPS:
+                base = callee.instrs.get(next(iter(base.operand_names()), ""))
+            else:
+                return None
+        upd = callee.instrs.get(ops_[upd_idx])
+        upd_bytes = upd.result_bytes if upd is not None else 0.0
+        return 2.0 * upd_bytes
+
+    def _fusion_operand_bytes(self, comp: Computation, ins: Instr) -> float:
+        """Operand traffic of a fusion: a parameter consumed ONLY by
+        slice-type ops inside the fused computation reads the slice, not the
+        whole tensor (CPU wraps dynamic-slice in wrapped_* fusions; charging
+        the full stacked-params operand per scan iteration would overcount
+        the layer scan ~n_layers×)."""
+        cm = _CALLS_RE.search(ins.rest)
+        callee = self.computations.get(cm.group(1)) if cm else None
+        if callee is None:
+            return self._operand_bytes(comp, ins)
+        # positional parameter index -> instruction name in the callee
+        param_by_idx: Dict[int, str] = {}
+        for cn, ci in callee.instrs.items():
+            if ci.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", ci.rest)
+                if m:
+                    param_by_idx[int(m.group(1))] = cn
+        total = 0.0
+        for idx, name in enumerate(ins.operand_names()):
+            op = comp.instrs.get(name)
+            if op is None:
+                continue
+            pname = param_by_idx.get(idx)
+            if pname is None:
+                total += op.result_bytes
+                continue
+            # find the callee uses of this parameter (follow 1 view hop)
+            uses: List[Instr] = []
+            frontier = {pname}
+            for _hop in range(2):
+                nxt = set()
+                for ci in callee.instrs.values():
+                    if any(u in ci.operand_names() for u in frontier):
+                        if ci.opcode in self._VIEW_OPS:
+                            nxt.add(ci.name)
+                        else:
+                            uses.append(ci)
+                frontier = nxt
+                if not frontier:
+                    break
+            if uses and all(u.opcode in self._SLICE_OPS for u in uses):
+                total += sum(u.result_bytes for u in uses)
+            else:
+                total += op.result_bytes
+        return total
+
+    def _trip_count(self, comp: Computation, ins: Instr) -> Optional[int]:
+        m = _TRIP_RE.search(ins.rest)
+        if m:
+            return int(m.group(1))
+        # fallback: find `compare(..., constant)` in the condition computation
+        cm = _COND_RE.search(ins.rest)
+        if cm and cm.group(1) in self.computations:
+            cond = self.computations[cm.group(1)]
+            const_vals = {}
+            for ci in cond.instrs.values():
+                if ci.opcode == "constant":
+                    vm = re.search(r"constant\((-?\d+)\)", "constant(" + ci.rest)
+                    if vm:
+                        const_vals[ci.name] = int(vm.group(1))
+            for ci in cond.instrs.values():
+                if ci.opcode == "compare" and "direction=LT" in ci.rest:
+                    for name in ci.operand_names():
+                        if name in const_vals:
+                            return const_vals[name]
+        return None
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems = 1
+        for _, dims in ins.result:
+            for d in dims:
+                out_elems *= d
+        contract = 1
+        m = _LHS_CONTRACT_RE.search(ins.rest)
+        lhs_name = next(iter(ins.operand_names()), None)
+        lhs = comp.instrs.get(lhs_name) if lhs_name else None
+        if m and lhs is not None and lhs.result:
+            dims = lhs.result[0][1]
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(dims):
+                    contract *= dims[idx]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems = 1
+        for _, dims in ins.result:
+            for d in dims:
+                out_elems *= d
+        ops = ins.operand_names()
+        rhs = comp.instrs.get(ops[1]) if len(ops) > 1 else None
+        if rhs is None or not rhs.result:
+            return 2.0 * out_elems
+        # kernel total elems / output features = per-output MAC count
+        kdims = rhs.result[0][1]
+        kelems = 1
+        for d in kdims:
+            kelems *= d
+        ofeat = max(ins.result[0][1][-1] if ins.result[0][1] else 1, 1)
+        fg = 1
+        m = _FEATURE_GROUPS_RE.search(ins.rest)
+        if m:
+            fg = int(m.group(1))
+        per_out = kelems / max(ofeat, 1)
+        return 2.0 * out_elems * per_out / max(fg, 1) * fg  # fg cancels: kelems already /fg per group
+
+    # ------------------------------------------------------------------
+    def cost(self, comp_name: Optional[str] = None, *, top_level: bool = True) -> CostTotals:
+        """Roll up cost of ``comp_name`` (default: entry), scaling while
+        bodies by trip count.  ``top_level=False`` = fusion interior: flops
+        count, bytes don't."""
+        name = comp_name or self.entry
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.computations.get(name)
+        total = CostTotals()
+        if comp is None:
+            return total
+        self._memo[key] = total  # guards (benign) recursion
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            op = ins.opcode
+            base_op = op[:-6] if op.endswith("-start") else op
+            if op == "dot":
+                total.flops += self._dot_flops(comp, ins)
+            elif op == "convolution":
+                total.flops += self._conv_flops(comp, ins)
+            if base_op in COLLECTIVE_OPS and not op.endswith("-done"):
+                n = self._group_size(ins)
+                res = ins.result_bytes
+                opnd = self._operand_bytes(comp, ins)
+                frac = (n - 1) / n if n > 1 else 0.0
+                if base_op == "all-reduce":
+                    wire = 2.0 * res * frac
+                elif base_op == "all-gather":
+                    wire = res * frac
+                elif base_op == "reduce-scatter":
+                    wire = opnd * frac
+                elif base_op == "collective-permute":
+                    wire = res
+                else:  # all-to-all & friends
+                    wire = res * frac
+                total.collective_bytes += wire
+                total.raw_collective_bytes += opnd
+                total.collective_by_op[base_op] = (
+                    total.collective_by_op.get(base_op, 0.0) + wire
+                )
+                total.collective_count[base_op] = (
+                    total.collective_count.get(base_op, 0) + 1
+                )
+            if top_level and op not in _NO_TRAFFIC:
+                # slice-like ops touch only the slice region of their
+                # (possibly huge) operands — e.g. the layer scan's
+                # dynamic-slice of stacked params must not charge the whole
+                # stack every iteration.
+                if op in ("dynamic-slice", "slice", "gather"):
+                    total.bytes += 2.0 * ins.result_bytes          # read+write slice
+                elif op in ("dynamic-update-slice", "scatter"):
+                    ops_ = ins.operand_names()
+                    idx = 1 if op == "dynamic-update-slice" else 2
+                    upd = comp.instrs.get(ops_[idx]) if len(ops_) > idx else None
+                    total.bytes += 2.0 * (upd.result_bytes if upd else ins.result_bytes)
+                elif op == "broadcast":
+                    total.bytes += ins.result_bytes + min(
+                        self._operand_bytes(comp, ins), ins.result_bytes
+                    )
+                elif op == "fusion":
+                    dus_bytes = self._inplace_dus_fusion_bytes(ins)
+                    if dus_bytes is not None:
+                        total.bytes += dus_bytes
+                    else:
+                        total.bytes += ins.result_bytes + self._fusion_operand_bytes(comp, ins)
+                else:
+                    total.bytes += ins.result_bytes + self._operand_bytes(comp, ins)
+            # --- recurse into called computations -------------------------
+            if op == "while":
+                trip = self._trip_count(comp, ins)
+                if trip is None:
+                    trip = 1
+                    total.unknown_trip_counts += 1
+                bm = _BODY_RE.search(ins.rest)
+                cm = _COND_RE.search(ins.rest)
+                if bm:
+                    total.add(self.cost(bm.group(1), top_level=top_level), scale=trip)
+                if cm:
+                    total.add(self.cost(cm.group(1), top_level=top_level), scale=trip)
+            elif op in ("fusion", "async-start"):
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    total.add(self.cost(m.group(1), top_level=False))
+            elif op == "call":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    total.add(self.cost(m.group(1), top_level=top_level))
+            elif op == "conditional":
+                m = _BRANCH_RE.search(ins.rest)
+                if m:
+                    branches = [
+                        b.strip().lstrip("%") for b in m.group(1).split(",") if b.strip()
+                    ]
+                    costs = [self.cost(b, top_level=top_level) for b in branches]
+                    if costs:
+                        # charge the most expensive branch
+                        total.add(max(costs, key=lambda c: c.flops + c.bytes))
+        self._memo[key] = total
+        return total
+
+
+def analyze_hlo(text: str) -> CostTotals:
+    """Parse + roll up a compiled module's per-device cost."""
+    return HloModule(text).cost()

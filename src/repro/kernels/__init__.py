@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd model-layout wrapper), and ref.py (pure-jnp oracle).  On
+non-TPU backends kernels run with interpret=True (see common.py).
+
+  flash_attention  — prefill/training attention (GQA, causal, window)
+  decode_attention — flash-decoding vs ring-buffer KV cache
+  ssd_scan         — Mamba-2 chunked state-space scan
+  rmsnorm          — fused normalization
+  matmul           — Eq.-1 (PP, ICP, OCP) -> (block_m, block_k, block_n) tiling
+"""
+
+from . import common  # noqa: F401

@@ -1,0 +1,29 @@
+"""Shared kernel plumbing.
+
+All Pallas kernels in this package target TPU (BlockSpec VMEM tiling,
+128-aligned MXU dims).  On non-TPU backends (this CPU container) they run in
+``interpret=True`` mode, which executes the kernel body per grid step in
+Python — bit-exact semantics, no TPU required.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+NEG_INF = -1e30

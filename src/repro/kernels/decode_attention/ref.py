@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the decode-attention kernel (ring-buffer KV)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, pos, cur_pos, *, window: Optional[int] = None):
+    """q: (B, H, dh); k/v: (B, C, Hkv, dh); pos: (B, C) absolute positions
+    (-1 = empty slot); cur_pos: (B,).  Returns (B, H, dh)."""
+    B, H, dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, dh).astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    s = jnp.einsum("bgid,bkgd->bgik", qg, k.astype(jnp.float32))
+    valid = (pos >= 0) & (pos <= cur_pos[:, None])
+    if window is not None:
+        valid &= pos > (cur_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgik,bkgd->bgid", w, v.astype(jnp.float32))
+    return out.reshape(B, H, dh).astype(q.dtype)

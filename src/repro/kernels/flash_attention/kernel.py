@@ -1,0 +1,139 @@
+"""Flash-attention Pallas TPU kernel (forward).
+
+Layout: q (B, H, Sq, dh), k/v (B, Hkv, Sk, dh) — heads-major so each grid
+cell owns one (batch, head) pair and BlockSpec index maps implement GQA
+(kv head = q head // group) without materializing the expanded K/V.
+
+Grid = (B, H, nQ, nK) — the KV-block axis is the innermost (sequential on
+TPU), so the online-softmax state (m, l, acc) lives in VMEM scratch and is
+carried across the nK steps of each (b, h, qi) cell:
+
+  step ki == 0      → init scratch
+  every step        → one (block_q × block_k) score tile on the MXU,
+                      online-softmax rescale, accumulate P·V
+  step ki == nK-1   → normalize and write the output tile
+
+Fully-masked tiles (causal: k-block entirely above the diagonal; window:
+k-block entirely expired) are skipped with @pl.when, so the causal schedule
+does ~half the MXU work — the same utilization argument as the paper's
+tiling Eq. 2.
+
+VMEM budget per grid cell (block_q = block_k = 512, dh = 128, f32 scratch):
+q/k/v tiles 3·512·128·2B ≈ 0.4 MiB, acc 512·128·4B = 0.25 MiB — far under
+the ~128 MiB/core VMEM of v5e, leaving room for double-buffered prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import NEG_INF, cdiv
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, causal: bool, window: Optional[int], q_offset: int,
+    block_q: int, block_k: int, sk: int, n_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute row/col ranges of this tile
+    q_lo = qi * block_q + q_offset
+    k_lo = ki * block_k
+
+    # tile-level skip: causal ⇒ skip tiles fully above the diagonal;
+    # window ⇒ skip tiles fully expired.  (q rows are q_lo..q_lo+bq-1)
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_lo <= q_lo + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_lo + block_k - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) / jnp.sqrt(jnp.float32(q.shape[-1]))          # (bq, bk)
+
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < sk                                # Sk padding
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window is not None:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        scale = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * scale + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * scale + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    q_offset: int = 0, block_q: int = 512, block_k: int = 512,
+    interpret: bool = False,
+):
+    """q: (B, H, Sq, dh); k, v: (B, Hkv, Sk, dh) → (B, H, Sq, dh)."""
+    B, H, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    n_q = cdiv(Sq, block_q)
+    n_k = cdiv(Sk, block_k)
+    assert Sq % block_q == 0, (Sq, block_q)
+    pad_k = n_k * block_k - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (B, H, n_q, n_k)
+    kern = functools.partial(
+        _fa_kernel, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, sk=Sk, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # l
+            pltpu.VMEM((block_q, dh), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

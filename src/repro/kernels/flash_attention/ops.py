@@ -1,0 +1,38 @@
+"""jit'd public wrapper for flash attention.
+
+Accepts the model layout (B, S, H, dh) and handles transposition, GQA, and
+interpret-mode fallback.  ``flash_attention`` is what
+``models.attention.self_attention(impl="pallas")`` calls.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .kernel import flash_attention_kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    q_offset: int = 0, block_q: int = 512, block_k: int = 512,
+    interpret: Optional[bool] = None,
+):
+    """q: (B, Sq, H, dh); k, v: (B, Sk, Hkv, dh) → (B, Sq, H, dh)."""
+    interpret = default_interpret() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA + causal + window)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    q_offset: int = 0,
+):
+    """q: (B, H, Sq, dh); k, v: (B, Hkv, Sk, dh).  Returns (B, H, Sq, dh).
+
+    Materialized-scores reference in f32 — the ground truth every kernel
+    variant is asserted against.
+    """
+    B, H, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = H // Hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(dh))
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,81 @@
+"""Tiled matmul Pallas TPU kernel — the paper's Eq. 1 transposed to the MXU.
+
+The Angel-Eye PE array computes ``2·PP·ICP·OCP`` OPs/cycle by tiling the
+output feature map over (pixels, in-channels, out-channels).  On TPU the
+same three tiling degrees become the (block_m, block_k, block_n) VMEM tile
+of a matmul feeding the 128×128 systolic MXU:
+
+    PP  (pixel parallelism)          → block_m   (rows / tokens / pixels)
+    ICP (input-channel parallelism)  → block_k   (contraction)
+    OCP (output-channel parallelism) → block_n   (output features)
+
+The utilization-cliff argument of Eq. 2 (ceil-quantization of work to the
+tile) is exactly why block dims must divide into 128-multiples here; the
+latency simulator's ``compute_tile=(8, 128, 128)`` TPU model prices the same
+effect for the scheduling layer.
+
+Grid = (nM, nN, nK), K innermost; partial products accumulate in an f32
+VMEM scratch tile and are cast out once on the last K step (one HBM write
+per output tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import cdiv
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_kernel(
+    a, b, *, block_m: int = 512, block_n: int = 512, block_k: int = 512,
+    out_dtype=None, interpret: bool = False,
+):
+    """a: (M, K) @ b: (K, N) → (M, N) with f32 accumulation."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    out_dtype = out_dtype or a.dtype
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    nm, nn, nk = cdiv(M, block_m), cdiv(N, block_n), cdiv(K, block_k)
+    pm, pn, pk = nm * block_m - M, nn * block_n - N, nk * block_k - K
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((nm * block_m, nn * block_n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N] if (pm or pn) else out

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the tiled matmul."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from ..common import default_interpret
+from .kernel import matmul_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret")
+)
+def matmul(
+    a, b, *, block_m: int = 512, block_n: int = 512, block_k: int = 512,
+    out_dtype=None, interpret: Optional[bool] = None,
+):
+    """(..., K) @ (K, N) — leading dims of ``a`` are flattened into M."""
+    interpret = default_interpret() if interpret is None else interpret
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    out = matmul_kernel(
+        a2, b, block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return out.reshape(*lead, b.shape[-1])

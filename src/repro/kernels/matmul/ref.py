@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tiled matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, *, out_dtype=None):
+    """a: (M, K); b: (K, N) — f32 accumulation."""
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(out_dtype or a.dtype)

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import rmsnorm_kernel
+from .ops import rmsnorm
+
+__all__ = ["rmsnorm", "rmsnorm_kernel", "ops", "ref"]

@@ -1,0 +1,24 @@
+"""jit'd public wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from ..common import default_interpret
+from .kernel import rmsnorm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: Optional[bool] = None):
+    """x: (..., d); scale: (d,)."""
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    out = rmsnorm_kernel(
+        x.reshape(-1, shape[-1]), scale, eps=eps, block_rows=block_rows,
+        interpret=interpret,
+    )
+    return out.reshape(shape)

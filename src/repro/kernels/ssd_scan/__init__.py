@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import ssd_scan_kernel
+from .ops import ssd
+
+__all__ = ["ssd", "ssd_scan_kernel", "ops", "ref"]

@@ -1,0 +1,117 @@
+"""SSD (Mamba-2 state-space duality) chunked-scan Pallas TPU kernel.
+
+The hot spot of every SSM/hybrid arch.  The GPU reference implementation
+(Triton, mamba_ssm) fuses the chunk-local quadratic with a warp-level state
+carry; the TPU adaptation restructures it around the MXU and the sequential
+grid:
+
+Grid = (B, nh, nC) with the chunk axis innermost.  The inter-chunk state
+(hd × N, f32) lives in VMEM scratch and is carried across chunk steps —
+the TPU grid's sequential-minor-axis guarantee replaces the GPU's
+cross-block semaphore chain.  Per chunk step, four MXU contractions:
+
+  CB    = C_c · B_cᵀ            (L×N · N×L  → L×L)
+  y_in  = (CB ∘ decay ∘ dt) · x (L×L · L×hd → L×hd)   intra-chunk
+  y_st  = C_c · stateᵀ          (L×N · N×hd → L×hd)   inter-chunk read
+  state = exp(total)·state + xᵀ·(w ∘ B_c)             state write
+
+L (chunk) and hd are 128-multiples for MXU alignment; N = d_state = 128.
+VMEM per cell: x/B/C tiles + (L,L) decay ≈ (3·L·128 + L²)·4 B ≈ 0.4 MiB at
+L = 256 — small enough to double-buffer the streams.
+
+B and C are shared across nh/G heads (Mamba-2 grouping); the BlockSpec index
+map (h → h // rep) reads the shared tile without materializing the repeat.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, state_out_ref, state_ref,
+    *, n_c: int, chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (L, hd)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L,)
+    dA = dA_ref[0, 0].astype(jnp.float32)        # (L,)
+    Bc = b_ref[0, 0].astype(jnp.float32)         # (L, N)
+    Cc = c_ref[0, 0].astype(jnp.float32)         # (L, N)
+    L = chunk
+
+    cum = jnp.cumsum(dA)                         # (L,)
+    # decay[i, j] = exp(cum[i] - cum[j]) for j <= i else 0
+    M = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(cols <= rows, jnp.exp(M), 0.0)
+
+    CB = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # (L, L)
+    scores = CB * decay * dt[None, :]
+    y_intra = jax.lax.dot(scores, x, preferred_element_type=jnp.float32)
+
+    state = state_ref[...]                       # (hd, N)
+    y_inter = jax.lax.dot_general(
+        Cc, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]                    # (L, hd)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    total = cum[L - 1]
+    w = jnp.exp(total - cum) * dt                # (L,)
+    state_ref[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        x, Bc * w[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (hd, N)
+
+    @pl.when(ci == n_c - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_kernel(x, dt, dA, Bm, Cm, *, chunk: int, interpret: bool = False):
+    """x: (B, nh, S, hd); dt/dA: (B, nh, S); Bm/Cm: (B, G, S, N).
+    Returns (y (B, nh, S, hd), final_state (B, nh, hd, N) f32)."""
+    Bsz, nh, S, hd = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    rep = nh // G
+    assert S % chunk == 0, (S, chunk)
+    n_c = S // chunk
+
+    grid = (Bsz, nh, n_c)
+    kern = functools.partial(_ssd_kernel, n_c=n_c, chunk=chunk)
+    y, state = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, ci: (b, h, ci)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, ci: (b, h, ci)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, ci: (b, h // rep, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, ci: (b, h // rep, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nh, S, hd), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, nh, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, dA, Bm, Cm)
+    return y, state

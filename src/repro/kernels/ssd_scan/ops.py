@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the SSD scan (model layout adapters)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .kernel import ssd_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state", "interpret"))
+def ssd(
+    x, dt, A, Bm, Cm, *, chunk: int, return_state: bool = False,
+    interpret: Optional[bool] = None,
+):
+    """Model layout: x (B,S,nh,hd); dt (B,S,nh); A (nh,); Bm/Cm (B,S,G,N).
+    Returns y (B,S,nh,hd) [, final_state (B,nh,hd,N)]."""
+    interpret = default_interpret() if interpret is None else interpret
+    xt = jnp.moveaxis(x, 2, 1)                       # (B,nh,S,hd)
+    dtt = jnp.moveaxis(dt, 2, 1).astype(jnp.float32)  # (B,nh,S)
+    dAt = dtt * A[None, :, None]
+    Bt = jnp.moveaxis(Bm, 2, 1)                      # (B,G,S,N)
+    Ct = jnp.moveaxis(Cm, 2, 1)
+    y, state = ssd_scan_kernel(xt, dtt, dAt, Bt, Ct, chunk=chunk, interpret=interpret)
+    y = jnp.moveaxis(y, 1, 2)
+    if return_state:
+        return y, state
+    return y

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the SSD (Mamba-2) scan kernel.
+
+Two references:
+* :func:`ssd_naive` — the O(S²) "duality" form: one big masked quadratic,
+  mathematically the definition of the SSD operator.  Ground truth.
+* the chunked pure-JAX implementation in ``repro.models.ssm.ssd_chunked`` —
+  the lowering default, asserted against ssd_naive in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_naive(x, dt, A, Bm, Cm):
+    """Quadratic-form SSD.
+
+    x:  (B, S, nh, hd); dt: (B, S, nh); A: (nh,);
+    Bm, Cm: (B, S, G, N).  Returns y: (B, S, nh, hd) (f32).
+
+    y_i = sum_{j<=i} exp(sum_{t in (j, i]} dt_t A) * dt_j * (C_i·B_j) * x_j
+    """
+    Bsz, S, nh, hd = x.shape
+    G = Bm.shape[2]
+    rep = nh // G
+    dA = dt * A[None, None, :]                       # (B,S,nh)
+    cum = jnp.cumsum(dA, axis=1)
+    # decay[b,h,i,j] = exp(cum[i] - cum[j]) for j<=i
+    M = cum[:, :, None, :] - cum[:, None, :, :]      # (B,i,j,nh)
+    M = jnp.moveaxis(M, -1, 1)                       # (B,nh,i,j)
+    mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+    decay = jnp.where(mask[None, None], jnp.exp(M), 0.0)
+    CB = jnp.einsum("bign,bjgn->bgij", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    CB = jnp.repeat(CB, rep, axis=1)                 # (B,nh,i,j)
+    scores = CB * decay * jnp.moveaxis(dt, -1, 1)[:, :, None, :]
+    y = jnp.einsum("bhij,bjhp->bihp", scores, x.astype(jnp.float32))
+    return y

@@ -1,0 +1,184 @@
+"""Cell construction: (arch × shape × mesh) → lowered-ready program + args.
+
+A *cell* bundles everything the dry-run, roofline, and launchers need:
+
+    program          the step callable (train_step / prefill_step / serve_step)
+    abstract_args    ShapeDtypeStruct stand-ins (no allocation)
+    in_shardings     NamedShardings per arg
+    donate_argnums   buffers reused in place (params/opt for train, caches
+                     for decode) — affects the memory analysis, as on HW
+    model_flops      6·N_active·D (train) or 2·N_active·D (inference) for
+                     the useful-FLOPs ratio in §Roofline
+
+The same builder powers reduced smoke cells (tests) and full dry-run cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeConfig, get_config, get_reduced, SHAPES
+from repro.data.synthetic import VLM_PATCHES, VLM_PATCHES_REDUCED
+from repro.distributed.sharding import (
+    batch_shard, cache_specs, make_policy, param_specs, train_batch_specs,
+)
+from repro.models import init_caches, init_params
+from repro.optim import adamw_init, opt_state_specs
+from repro.serving.engine import ServeConfig, make_prefill_step, make_serve_step
+from repro.training.steps import TrainerConfig, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    mesh: Mesh
+    program: Callable
+    abstract_args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model_flops: float
+    cfg: Any
+    note: str = ""
+
+    def jitted(self):
+        return jax.jit(
+            self.program,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        with self.mesh:
+            return self.jitted().lower(*self.abstract_args)
+
+
+def trainer_defaults(cfg, shape: ShapeConfig, *, attn_impl: str = "xla",
+                     remat: str = "full") -> TrainerConfig:
+    big = cfg.param_count() > 40e9
+    return TrainerConfig(
+        quantize_opt=big,
+        remat=remat,
+        loss_chunk=128,
+        attn_impl=attn_impl,
+    )
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_batch(cfg, shape: ShapeConfig, *, with_labels: bool,
+                   reduced: bool = False) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    n_patch = 0
+    if cfg.family == "vlm":
+        n_patch = VLM_PATCHES_REDUCED if reduced else VLM_PATCHES
+    d: Dict[str, SDS] = {"tokens": SDS((B, S - n_patch), jnp.int32)}
+    if with_labels:
+        d["labels"] = SDS((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        d["extra_embeds"] = SDS((B, n_patch, cfg.d_model), dt)
+        d["positions"] = SDS((3, B, S), jnp.int32)
+    if cfg.family == "audio":
+        d["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), dt)
+    return d
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def build_cell(
+    arch: str, shape_name: str, mesh: Mesh, *, reduced: bool = False,
+    tcfg: Optional[TrainerConfig] = None, attn_impl: str = "xla",
+    remat: str = "full", fsdp: bool = True, moe_ep: bool = True,
+) -> Cell:
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    shape = SHAPES[shape_name]
+    if reduced:
+        shape = dataclasses.replace(
+            shape, seq_len=min(shape.seq_len, 64),
+            global_batch=min(shape.global_batch, 4),
+        )
+    B, S = shape.global_batch, shape.seq_len
+    ba = batch_shard(mesh, B)
+    policy = make_policy(cfg, mesh, batch=B, moe_ep=moe_ep)
+    p_specs = param_specs(cfg, mesh, fsdp=fsdp, moe_ep=moe_ep)
+    p_sh = _ns(mesh, p_specs)
+    params_abs = _abstract_params(cfg)
+    n_active = cfg.param_count(active_only=True)
+
+    if shape.kind == "train":
+        tcfg = tcfg or trainer_defaults(cfg, shape, attn_impl=attn_impl, remat=remat)
+        program = make_train_step(cfg, tcfg, policy=policy, mesh=mesh)
+        opt_abs = jax.eval_shape(
+            lambda p: adamw_init(p, quantize=tcfg.quantize_opt), params_abs
+        )
+        o_specs = opt_state_specs(
+            p_specs, quantize=tcfg.quantize_opt, params=params_abs, mesh=mesh
+        )
+        o_sh = _ns(mesh, o_specs)
+        batch_abs = abstract_batch(cfg, shape, with_labels=True, reduced=reduced)
+        b_specs = train_batch_specs(cfg, mesh, batch=B)
+        b_sh = _ns(mesh, {k: b_specs[k] for k in batch_abs})
+        return Cell(
+            arch=arch, shape=shape, mesh=mesh, program=program,
+            abstract_args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+            model_flops=6.0 * n_active * shape.tokens,
+            cfg=cfg,
+        )
+
+    scfg = ServeConfig(max_len=S, attn_impl=attn_impl)
+    c_specs = cache_specs(cfg, mesh, batch=B)
+    c_sh = _ns(mesh, c_specs)
+
+    if shape.kind == "prefill":
+        program = make_prefill_step(cfg, scfg, policy=policy)
+        batch_abs = abstract_batch(cfg, shape, with_labels=False, reduced=reduced)
+        b_specs = train_batch_specs(cfg, mesh, batch=B)
+        b_sh = _ns(mesh, {k: b_specs[k] for k in batch_abs})
+        logits_sh = NamedSharding(mesh, P(ba, "model" if cfg.vocab_padded % mesh.shape["model"] == 0 else None))
+        return Cell(
+            arch=arch, shape=shape, mesh=mesh, program=program,
+            abstract_args=(params_abs, batch_abs),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(),
+            model_flops=2.0 * n_active * shape.tokens,
+            cfg=cfg,
+        )
+
+    # decode: serve_step(params, tokens, caches, cur_pos, key)
+    program = make_serve_step(cfg, scfg, policy=policy)
+    caches_abs = jax.eval_shape(lambda: init_caches(cfg, B, S))
+    tok_abs = SDS((B,), jnp.int32)
+    pos_abs = SDS((B,), jnp.int32)
+    key_abs = SDS((2,), jnp.uint32)
+    tok_sh = NamedSharding(mesh, P(ba))
+    logits_sh = NamedSharding(mesh, P(ba, "model" if cfg.vocab_padded % mesh.shape["model"] == 0 else None))
+    return Cell(
+        arch=arch, shape=shape, mesh=mesh, program=program,
+        abstract_args=(params_abs, tok_abs, caches_abs, pos_abs, key_abs),
+        in_shardings=(p_sh, tok_sh, c_sh, tok_sh, None),
+        out_shardings=(tok_sh, logits_sh, c_sh),
+        donate_argnums=(2,),
+        model_flops=2.0 * n_active * B,
+        cfg=cfg,
+    )

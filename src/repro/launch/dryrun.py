@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This flag exists ONLY here — smoke tests and benches see the real device.
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+compiles, fits, and report its roofline inputs.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...,
+                           donate_argnums=...).lower(*input_specs(arch))
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective bytes (HLO parse)
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline benchmark and EXPERIMENTS.md tables read from there.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    python -m repro.launch.dryrun --all            # every runnable cell, 1 pod
+    python -m repro.launch.dryrun --all --multi-pod
+    python -m repro.launch.dryrun --all --both     # 1-pod then 2-pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             skip_existing: bool = True, attn_impl: str = "xla",
+             remat: str = "full", dp_tp=None, fsdp: bool = True,
+             moe_ep: bool = True) -> dict:
+    import jax
+
+    from repro.configs import cell_status
+    from repro.distributed.hlo_analysis import (
+        Roofline, collective_stats, cost_flops_bytes,
+    )
+    from repro.distributed.hlo_static import analyze_hlo
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            print(f"[skip] {arch} {shape_name} {mesh_tag} (cached)")
+            return rec
+
+    runs, reason = cell_status(arch, shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "multi_pod": multi_pod, "ok": False,
+    }
+    if not runs:
+        rec.update({"skipped": True, "reason": reason, "ok": True})
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[SKIP-by-design] {arch} {shape_name}: {reason}")
+        return rec
+
+    t_start = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod, dp_tp=dp_tp)
+        cell = build_cell(arch, shape_name, mesh, attn_impl=attn_impl,
+                          remat=remat, fsdp=fsdp, moe_ep=moe_ep)
+        t0 = time.time()
+        lowered = cell.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        flops_ca, nbytes_ca = cost_flops_bytes(cost)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        chips = int(len(mesh.devices.flat))
+        # Trip-count-aware static analysis of the per-device SPMD module.
+        # cost_analysis() visits while bodies once — a scanned 28-layer model
+        # reports ~1/28th of its FLOPs — so the roofline reads hlo_static
+        # instead (cost_analysis kept in the record for reference).
+        st = analyze_hlo(hlo)
+        roof = Roofline(
+            chips=chips,
+            hlo_flops=st.flops * chips,
+            hlo_bytes=st.bytes * chips,
+            collective_bytes=st.collective_bytes * chips,
+            model_flops=cell.model_flops,
+        )
+        mem_attrs = {}
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_attrs[k] = int(v)
+        # peak per-device estimate: args + temps - donated aliases, / devices
+        per_dev = None
+        if mem_attrs:
+            tot = (mem_attrs.get("argument_size_in_bytes", 0)
+                   + mem_attrs.get("temp_size_in_bytes", 0)
+                   + mem_attrs.get("output_size_in_bytes", 0)
+                   - mem_attrs.get("alias_size_in_bytes", 0))
+            per_dev = tot / chips
+        rec.update({
+            "ok": True,
+            "chips": chips,
+            "lower_s": t1 - t0,
+            "compile_s": t2 - t1,
+            "memory": mem_attrs,
+            "per_device_bytes": per_dev,
+            "cost_analysis_flops": flops_ca,
+            "cost_analysis_bytes": nbytes_ca,
+            "static_per_device": {
+                "flops": st.flops,
+                "bytes": st.bytes,
+                "collective_wire_bytes": st.collective_bytes,
+                "collective_raw_bytes": st.raw_collective_bytes,
+                "unknown_trip_counts": st.unknown_trip_counts,
+            },
+            "collectives": {
+                "total_bytes": st.collective_bytes,
+                "by_op_bytes": st.collective_by_op,
+                "by_op_count": st.collective_count,
+            },
+            "roofline": roof.as_dict(),
+        })
+        coll_str = ", ".join(
+            f"{op}:{cnt}x {st.collective_by_op.get(op, 0)/1e6:.1f}MB"
+            for op, cnt in sorted(st.collective_count.items())
+        )
+        print(
+            f"[ok] {arch} {shape_name} {mesh_tag}: "
+            f"lower {t1-t0:.0f}s compile {t2-t1:.0f}s "
+            f"per-dev {per_dev/2**30 if per_dev else -1:.2f} GiB "
+            f"bound={roof.bound} frac={roof.roofline_fraction:.2f} "
+            f"useful={roof.useful_flops_ratio:.2f} "
+            f"coll=[{coll_str}]"
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[FAIL] {arch} {shape_name} {mesh_tag}: {type(e).__name__}: {e}")
+    rec["wall_s"] = time.time() - t_start
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="run 1-pod and 2-pod")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true", help="ignore cached results")
+    ap.add_argument("--attn-impl", default="xla")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--dp-tp", default=None,
+                    help="override per-pod (data,model) split, e.g. 64,4")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="serving layout: params TP-only (no data-axis shard)")
+    ap.add_argument("--no-moe-ep", action="store_true",
+                    help="expert-TP instead of expert-parallel MoE sharding")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES
+
+    pairs = []
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    meshes = [args.multi_pod]
+    if args.both:
+        meshes = [False, True]
+
+    n_fail = 0
+    for mp in meshes:
+        for a, s in pairs:
+            dp_tp = tuple(int(x) for x in args.dp_tp.split(",")) if args.dp_tp else None
+            rec = run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                           skip_existing=not args.force,
+                           attn_impl=args.attn_impl, remat=args.remat,
+                           dp_tp=dp_tp, fsdp=not args.no_fsdp,
+                           moe_ep=not args.no_moe_ep)
+            if not rec.get("ok"):
+                n_fail += 1
+    print(f"dryrun finished: {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

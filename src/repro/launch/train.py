@@ -1,0 +1,107 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 50 --batch 8 --seq 128
+
+Production use (real TPU pod): drop --reduced; the mesh comes from
+``make_production_mesh`` and jax.distributed initializes from the TPU
+environment.  On this CPU container the reduced path trains a ~100M-class
+model for a few hundred steps (examples/train_lm.py drives it).
+
+Fault tolerance: async checkpointing every ``--ckpt-every`` steps; on start
+the latest checkpoint under --ckpt-dir is restored (elastic: the restore
+re-lays-out arrays for whatever mesh is active).  Simulated preemption via
+--die-at-step proves restartability in tests/examples.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="warmup_cosine")
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--loss-chunk", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--die-at-step", type=int, default=None,
+                    help="simulate preemption: exit(42) after this step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint.store import AsyncCheckpointer, latest_step, restore
+    from repro.configs import get_config, get_reduced
+    from repro.data.synthetic import make_batch
+    from repro.models import init_params
+    from repro.optim import adamw_init
+    from repro.training.steps import TrainerConfig, make_train_step
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    tcfg = TrainerConfig(
+        lr=args.lr, schedule=args.schedule, warmup=max(args.steps // 10, 1),
+        total_steps=args.steps, remat=args.remat, grad_accum=args.grad_accum,
+        loss_chunk=args.loss_chunk,
+    )
+    print(f"[train] arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    start_step = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        like = {
+            "params": jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params),
+            "opt": jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), opt),
+        }
+        got = restore(args.ckpt_dir, like)
+        params, opt = got["params"], got["opt"]
+        start_step = latest_step(args.ckpt_dir)
+        print(f"[train] restored checkpoint at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    t0 = time.time()
+    tokens_done = 0
+    for step in range(start_step, args.steps):
+        batch_np = make_batch(cfg, seq_len=args.seq, batch=args.batch,
+                              step=step, seed=args.seed, reduced=args.reduced)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        params, opt, m = step_fn(params, opt, batch)
+        tokens_done += args.batch * args.seq
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  lr {float(m['lr']):.2e}  "
+                  f"tok/s {tokens_done/max(dt,1e-9):,.0f}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_async(step + 1, {"params": params, "opt": opt},
+                            metadata={"arch": cfg.name})
+        if args.die_at_step is not None and step + 1 >= args.die_at_step:
+            if ckpt:
+                ckpt.wait()
+            print(f"[train] simulated preemption at step {step + 1}")
+            return 42
+    if ckpt:
+        ckpt.save_async(args.steps, {"params": params, "opt": opt},
+                        metadata={"arch": cfg.name})
+        ckpt.wait()
+    print(f"[train] done: final loss {float(m['loss']):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Pure-JAX model zoo: explicit pytrees, scan-stacked blocks, six families."""
+
+from .transformer import (
+    Caches,
+    FwdOut,
+    decode_step,
+    encoder_forward,
+    forward,
+    init_caches,
+    init_params,
+    lm_loss,
+    logits_fn,
+    n_blocks,
+    period_len,
+    period_structure,
+    prefill,
+)
+
+__all__ = [
+    "Caches", "FwdOut", "decode_step", "encoder_forward", "forward",
+    "init_caches", "init_params", "lm_loss", "logits_fn", "n_blocks",
+    "period_len", "period_structure", "prefill",
+]

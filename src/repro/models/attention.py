@@ -1,0 +1,472 @@
+"""Attention: GQA + qk_norm + RoPE/M-RoPE + sliding window + KV cache decode.
+
+Three compute paths, selected by ``impl``:
+
+* ``"xla"``     — chunked online-softmax attention in pure JAX (lax.scan over
+  KV blocks).  This is the default for lowering/dry-run: peak memory is
+  O(S·block) instead of O(S²), and the HLO stays small.  It is also the
+  numerical oracle for the Pallas kernel.
+* ``"pallas"``  — the flash-attention Pallas TPU kernel
+  (``repro.kernels.flash_attention``), validated in interpret mode.
+* ``"naive"``   — materialized-scores einsum, used only by tiny tests.
+
+Decode (single new token against a KV cache) uses a separate path; the
+sliding-window archs keep a **ring-buffer** cache of ``min(S, window)`` slots
+(the O(window) memory claim that makes long_500k runnable for Mixtral).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mrope, apply_rope, init_dense, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, *, cross: bool = False):
+    """cfg: ModelConfig.  ``cross=True`` builds encoder-decoder cross-attn
+    (no qk_norm, kv over encoder states)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, cfg.d_model, cfg.q_dim, cfg.dtype)["w"],
+        "wk": init_dense(kk, cfg.d_model, cfg.kv_dim, cfg.dtype)["w"],
+        "wv": init_dense(kv, cfg.d_model, cfg.kv_dim, cfg.dtype)["w"],
+        "wo": init_dense(ko, cfg.q_dim, cfg.d_model, cfg.dtype)["w"],
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = init_rmsnorm(cfg.d_head, cfg.dtype)
+        p["k_norm"] = init_rmsnorm(cfg.d_head, cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (shared by all impls)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(params, x, cfg, *, positions=None, rope: bool = True):
+    """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,Hkv,dh), rope applied."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = (x @ params["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ params["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm and "q_norm" in params:
+        q = rmsnorm(params["q_norm"], q, eps=cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, eps=cfg.norm_eps)
+    if rope and cfg.rope_theta > 0:
+        if positions is None:
+            positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        if cfg.m_rope:
+            if positions.ndim == 2:   # plain (B,S) ids (e.g. text-only decode):
+                positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+            q = apply_mrope(q, positions, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads: int):
+    """(B,S,Hkv,dh) -> (B,S,H,dh) by repeating each kv head (GQA)."""
+    B, S, Hkv, dh = k.shape
+    group = n_heads // Hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hkv, group, dh)).reshape(
+        B, S, n_heads, dh
+    )
+
+
+def naive_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    q_offset: int = 0):
+    """Materialized-scores reference.  q: (B,Sq,H,dh); k,v: (B,Sk,Hkv,dh)."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / jnp.sqrt(
+        jnp.float32(dh)
+    )
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out
+
+
+def chunked_flash_attention(
+    q, k, v, *, causal: bool, window: Optional[int] = None,
+    q_offset: int = 0, block_k: int = 512,
+):
+    """Online-softmax attention, lax.scan over KV blocks (pure JAX "flash").
+
+    Peak memory O(B·H·Sq·block_k) — this is what lets 32k-prefill cells lower
+    without an O(S²) score buffer.  Also the oracle for the Pallas kernel.
+    """
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    block_k = min(block_k, Sk)
+    n_blocks = (Sk + block_k - 1) // block_k
+    pad = n_blocks * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    group = H // Hkv
+    # (B, nb, bk, Hkv, dh)
+    kb = k.reshape(B, n_blocks, block_k, Hkv, dh)
+    vb = v.reshape(B, n_blocks, block_k, Hkv, dh)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    qg = qf.reshape(B, Sq, Hkv, group, dh)
+
+    qi = jnp.arange(Sq, dtype=jnp.int32) + q_offset          # (Sq,)
+
+    def body(carry, xs):
+        m, l, acc = carry                                     # (B,Sq,Hkv,g), ..., (B,Sq,Hkv,g,dh)
+        kc, vc, blk = xs                                      # (B,bk,Hkv,dh) x2, scalar
+        ki = blk * block_k + jnp.arange(block_k, dtype=jnp.int32)
+        s = jnp.einsum("bqgid,bkgd->bqgik", qg, kc.astype(jnp.float32))
+        valid = ki[None, :] < Sk
+        mask = jnp.broadcast_to(valid, (Sq, block_k))
+        if causal:
+            mask = mask & (ki[None, :] <= qi[:, None])
+        if window is not None:
+            mask = mask & (ki[None, :] > qi[:, None] - window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bqgik,bkgd->bqgid", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), dtype=jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, group, dh), dtype=jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)                             # (nb, B, bk, Hkv, dh)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb_t, vb_t, jnp.arange(n_blocks, dtype=jnp.int32))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with a custom VJP (blockwise-recompute backward)
+# ---------------------------------------------------------------------------
+#
+# The plain chunked attention above is correct but TRAINS badly: jax.grad
+# through the lax.scan saves each block's (B,Sq,Hkv,g,block_k) f32 residuals
+# (probabilities/scores), resurrecting the O(Sq·Sk) memory/traffic that
+# flash attention exists to avoid — measured as the dominant HLO-bytes term
+# of every train/prefill cell in the baseline roofline (EXPERIMENTS.md
+# §Perf).  The custom VJP saves only (q, k, v, out, LSE) and recomputes each
+# block's probabilities in the backward pass — the FlashAttention backward —
+# making train-time attention memory O(S·block) for real.
+
+
+def _flash_fwd_lse(q, k, v, *, causal, window, q_offset, block_k):
+    """Forward pass that also returns the log-sum-exp (B,Sq,Hkv,g)."""
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    block_k = min(block_k, Sk)
+    n_blocks = (Sk + block_k - 1) // block_k
+    pad = n_blocks * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    group = H // Hkv
+    kb = jnp.moveaxis(k.reshape(B, n_blocks, block_k, Hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, n_blocks, block_k, Hkv, dh), 1, 0)
+    qg = (q.astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))).reshape(B, Sq, Hkv, group, dh)
+    qi = jnp.arange(Sq, dtype=jnp.int32) + q_offset
+
+    def mask_for(blk):
+        ki = blk * block_k + jnp.arange(block_k, dtype=jnp.int32)
+        m = jnp.broadcast_to(ki[None, :] < Sk, (Sq, block_k))
+        if causal:
+            m = m & (ki[None, :] <= qi[:, None])
+        if window is not None:
+            m = m & (ki[None, :] > qi[:, None] - window)
+        return m
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, blk = xs
+        s = jnp.einsum("bqgid,bkgd->bqgik", qg, kc.astype(jnp.float32))
+        s = jnp.where(mask_for(blk)[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + p.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bqgik,bkgd->bqgid", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, group), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, group), dtype=jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, group, dh), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blocks, dtype=jnp.int32))
+    )
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).reshape(B, Sq, H, dh).astype(q.dtype)
+    lse = m + jnp.log(l_safe)                        # (B,Sq,Hkv,g)
+    return out, lse
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def flash_attention_vjp(q, k, v, causal, window, q_offset, block_k):
+    out, _ = _flash_fwd_lse(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, block_k=block_k)
+    return out
+
+
+def _fa_vjp_fwd(q, k, v, causal, window, q_offset, block_k):
+    out, lse = _flash_fwd_lse(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, block_k=block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_vjp_bwd(causal, window, q_offset, block_k, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, dh = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    group = H // Hkv
+    bk = min(block_k, Sk)
+    n_blocks = (Sk + bk - 1) // bk
+    pad = n_blocks * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sm = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qg = q.astype(jnp.float32).reshape(B, Sq, Hkv, group, dh)
+    dog = do.astype(jnp.float32).reshape(B, Sq, Hkv, group, dh)
+    og = out.astype(jnp.float32).reshape(B, Sq, Hkv, group, dh)
+    # D_i = rowsum(dO * O)  — the softmax-correction term
+    D = jnp.sum(dog * og, axis=-1)                   # (B,Sq,Hkv,g)
+    kb = jnp.moveaxis(k.reshape(B, n_blocks, bk, Hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, n_blocks, bk, Hkv, dh), 1, 0)
+    qi = jnp.arange(Sq, dtype=jnp.int32) + q_offset
+
+    def body(dq_acc, xs):
+        kc, vc, blk = xs                              # (B,bk,Hkv,dh)
+        ki = blk * bk + jnp.arange(bk, dtype=jnp.int32)
+        mask = jnp.broadcast_to(ki[None, :] < Sk, (Sq, bk))
+        if causal:
+            mask = mask & (ki[None, :] <= qi[:, None])
+        if window is not None:
+            mask = mask & (ki[None, :] > qi[:, None] - window)
+        s = jnp.einsum("bqgid,bkgd->bqgik", qg * sm, kc.astype(jnp.float32))
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])               # recomputed probs
+        dv = jnp.einsum("bqgik,bqgid->bkgd", p, dog)  # (B,bk,Hkv,dh)
+        dp = jnp.einsum("bqgid,bkgd->bqgik", dog, vc.astype(jnp.float32))
+        ds = p * (dp - D[..., None]) * sm
+        dq_acc = dq_acc + jnp.einsum("bqgik,bkgd->bqgid", ds, kc.astype(jnp.float32))
+        dk = jnp.einsum("bqgik,bqgid->bkgd", ds, qg)  # (B,bk,Hkv,dh)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, group, dh), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(n_blocks, dtype=jnp.int32))
+    )
+    dk = jnp.moveaxis(dk_b, 0, 1).reshape(B, n_blocks * bk, Hkv, dh)[:, :Sk]
+    dv = jnp.moveaxis(dv_b, 0, 1).reshape(B, n_blocks * bk, Hkv, dh)[:, :Sk]
+    return (
+        dq.reshape(B, Sq, H, dh).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+flash_attention_vjp.defvjp(_fa_vjp_fwd, _fa_vjp_bwd)
+
+
+def flash_attention_train(q, k, v, *, causal: bool = True,
+                          window: Optional[int] = None, q_offset: int = 0,
+                          block_k: int = 512):
+    """Differentiable flash attention (blockwise-recompute backward)."""
+    return flash_attention_vjp(q, k, v, causal, window, q_offset,
+                               min(block_k, k.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Full layers
+# ---------------------------------------------------------------------------
+
+
+def self_attention(
+    params, x, cfg, *, positions=None, causal: bool = True,
+    impl: str = "xla", q_offset: int = 0, block_k: int = 512,
+):
+    """Training/prefill self-attention.  Returns (out, (k, v)) so prefill can
+    seed the KV cache."""
+    q, k, v = _project_qkv(params, x, cfg, positions=positions)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window, q_offset=q_offset
+        )
+    elif impl == "naive":
+        out = naive_attention(q, k, v, causal=causal, window=cfg.sliding_window,
+                              q_offset=q_offset)
+    elif impl == "flash":
+        # custom-VJP path: O(S·block) memory THROUGH the backward pass
+        out = flash_attention_train(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            q_offset=q_offset, block_k=block_k,
+        )
+    else:
+        out = chunked_flash_attention(
+            q, k, v, causal=causal, window=cfg.sliding_window,
+            q_offset=q_offset, block_k=block_k,
+        )
+    B, S, _, _ = q.shape
+    y = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    return y, (k, v)
+
+
+def cross_attention(params, x, enc_kv, cfg, *, impl: str = "xla"):
+    """Decoder cross-attention over precomputed encoder (k, v)."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k, v = enc_kv
+    if impl == "naive":
+        out = naive_attention(q, k, v, causal=False)
+    else:
+        out = chunked_flash_attention(q, k, v, causal=False)
+    return out.reshape(B, S, cfg.q_dim) @ params["wo"]
+
+
+def encode_cross_kv(params, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output (once per request)."""
+    B, S, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = (enc_out @ params["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token vs. KV cache)
+# ---------------------------------------------------------------------------
+
+
+class KVCacheView(NamedTuple):
+    """One layer's cache: ring buffer when the arch has a sliding window.
+
+    k, v:  (B, C, Hkv, dh) with C = min(max_len, window or max_len)
+    pos:   (B, C) int32 — absolute position stored in each slot (-1 = empty)
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+
+
+def decode_attention(
+    params, x, cache: KVCacheView, cur_pos, cfg, *, impl: str = "xla",
+    policy=None,
+):
+    """x: (B, 1, D); cur_pos: (B,) absolute position of the new token.
+
+    Returns (out (B,1,D), updated cache).  The new token's K/V is written at
+    slot ``cur_pos % C`` (ring buffer ≡ plain buffer when C == max_len).
+
+    When the cache-length axis is model-sharded (kv heads don't divide the
+    axis), the slot write goes through ``policy.kv_slot_update`` — a
+    partial-manual shard_map masked write — instead of a scatter that GSPMD
+    can only implement by resharding the whole cache.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, x, cfg, positions=cur_pos[:, None], rope=True
+    )                                                          # q: (B,1,H,dh)
+    C = cache.k.shape[1]
+    # RoPE computes in f32 — cast BEFORE the slot write, or `.at[].set`
+    # promotes the whole cache to f32 and every decode step round-trips the
+    # full stacked cache through converts (measured 2×279 GB/step/device on
+    # command-r decode_32k — EXPERIMENTS.md §Perf iteration D3).
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+
+    if policy is not None and getattr(policy, "kv_len_sharded", False):
+        k, v, pos = policy.kv_slot_update(
+            cache.k, cache.v, cache.pos, k_new[:, 0], v_new[:, 0], cur_pos
+        )
+    else:
+        slot = (cur_pos % C).astype(jnp.int32)                 # (B,)
+        bidx = jnp.arange(B)
+        k = cache.k.at[bidx, slot].set(k_new[:, 0])
+        v = cache.v.at[bidx, slot].set(v_new[:, 0])
+        pos = cache.pos.at[bidx, slot].set(cur_pos.astype(jnp.int32))
+
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+
+        out = da_ops.decode_attention(
+            q[:, 0], k, v, pos, cur_pos, window=cfg.sliding_window
+        )[:, None]
+    else:
+        out = _decode_attn_xla(q, k, v, pos, cur_pos, cfg)
+    y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return y, KVCacheView(k=k, v=v, pos=pos)
+
+
+def _decode_attn_xla(q, k, v, pos, cur_pos, cfg):
+    """q: (B,1,H,dh); k/v: (B,C,Hkv,dh); pos: (B,C); cur_pos: (B,).
+
+    K/V stay in cache dtype; the contractions accumulate in f32 via
+    ``preferred_element_type`` — materializing ``k.astype(f32)`` copies the
+    whole cache every layer (measured ~26 GB/step/device on command-r
+    decode_32k before this change, EXPERIMENTS.md §Perf)."""
+    B, _, H, dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = (q.reshape(B, Hkv, group, dh) / jnp.sqrt(jnp.float32(dh))).astype(q.dtype)
+    s = jnp.einsum("bgid,bkgd->bgik", qg, k,
+                   preferred_element_type=jnp.float32)             # (B,Hkv,g,C)
+    valid = (pos >= 0) & (pos <= cur_pos[:, None])
+    if cfg.sliding_window is not None:
+        valid &= pos > (cur_pos[:, None] - cfg.sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgik,bkgd->bgid", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, *, dtype=None) -> KVCacheView:
+    """Cache for ONE attention layer.  Ring-buffer length = min(max_len,
+    window) for sliding-window archs — the O(window) decode-memory property."""
+    C = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return KVCacheView(
+        k=jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), dtype=dt),
+        v=jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), dtype=dt),
+        pos=jnp.full((batch, C), -1, dtype=jnp.int32),
+    )

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded sort dispatch.
+
+Two compute paths (selected automatically by token count):
+
+* **grouped-dispatch** (train / prefill) — per batch-row sort-based dispatch
+  with a capacity bound, Switch-Transformer style but WITHOUT the O(T·E·C)
+  one-hot dispatch tensor: tokens are argsorted by expert id, given a
+  position-in-expert via a running offset, scattered into an (E, C, d) buffer,
+  pushed through a stacked-expert einsum, and combined by a scatter-add.
+  FLOPs ≈ top_k · T · 3 · d · d_ff · capacity_factor — HLO-honest for the
+  roofline.  The sort is vmapped over the batch row, so with batch sharded on
+  the "data" axis the sort is *local* (no cross-device sort network).
+
+* **dense-decode** (few tokens) — compute every expert for every token and
+  weight by the (zeroed below top-k) router probs.  Decode is memory-bound on
+  expert weights regardless of dispatch (a 128-request batch activates nearly
+  all experts), so this trades a negligible FLOP increase for zero gather
+  traffic; recorded in DESIGN.md.
+
+Shared experts (DeepSeek-MoE) are mathematically a single always-on MLP of
+width n_shared·d_ff and are implemented as such (see test_moe_shared_equiv).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_dense, init_mlp, mlp
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg):
+    """cfg: ModelConfig with cfg.moe set."""
+    m = cfg.moe
+    kr, ke1, ke2, ks = jax.random.split(key, 4)
+    d, dff, E = cfg.d_model, m.expert_d_ff, m.n_experts
+    p = {
+        "router": init_dense(kr, d, E, "float32")["w"],   # router math in f32
+        "wi": (jax.random.normal(ke1, (E, d, 2 * dff), dtype=jnp.float32)
+               * (1.0 / jnp.sqrt(d))).astype(cfg.dtype),
+        "wo": (jax.random.normal(ke2, (E, dff, d), dtype=jnp.float32)
+               * (1.0 / jnp.sqrt(dff))).astype(cfg.dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(ks, d, m.n_shared_experts * (m.shared_d_ff or dff), cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def router_probs(params, x, cfg):
+    """(T, d) -> top-k (probs (T,k) normalized, expert ids (T,k), full probs)."""
+    m = cfg.moe
+    logits = (x.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+    return top_p, top_i, probs
+
+
+def load_balance_loss(probs, top_i, n_experts: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e (1.0 = perfectly balanced)."""
+    T = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(counts.sum(), 1.0)
+    P = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * P)
+
+
+# ---------------------------------------------------------------------------
+# Grouped (sort-based) dispatch — train / prefill
+# ---------------------------------------------------------------------------
+
+
+def _route_row(x, top_p, top_i, E: int, capacity: int):
+    """One batch row.  x: (T, d); top_p/top_i: (T, k).
+
+    Returns (buf (E, capacity, d), slot (T·k,), t_sorted, w_sorted, keep)."""
+    T, d = x.shape
+    k = top_i.shape[1]
+    Tk = T * k
+    expert = top_i.reshape(Tk)                      # assignment expert ids
+    token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    weight = top_p.reshape(Tk)
+
+    order = jnp.argsort(expert, stable=True)        # group by expert
+    e_sorted = expert[order]
+    t_sorted = token[order]
+    w_sorted = weight[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[expert].add(1)
+    starts = jnp.cumsum(counts) - counts            # first sorted index of e
+    pos = jnp.arange(Tk, dtype=jnp.int32) - starts[e_sorted]   # pos within expert
+    keep = pos < capacity                           # overflow tokens dropped
+    slot = jnp.where(keep, e_sorted * capacity + pos, E * capacity)  # OOB sink
+
+    buf = jnp.zeros((E * capacity + 1, d), dtype=x.dtype)
+    buf = buf.at[slot].set(x[t_sorted])             # dropped -> sink row
+    return buf[:-1].reshape(E, capacity, d), slot, t_sorted, w_sorted, keep
+
+
+def _combine_row(y, slot, t_sorted, w_sorted, keep, T: int):
+    """y: (E, capacity, d) expert outputs -> (T, d) combined tokens."""
+    E, capacity, d = y.shape
+    y_flat = jnp.concatenate([y.reshape(E * capacity, d),
+                              jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = y_flat[slot] * w_sorted[:, None].astype(y.dtype)
+    return jnp.zeros((T, d), dtype=y.dtype).at[t_sorted].add(
+        jnp.where(keep[:, None], contrib, 0)
+    )
+
+
+def moe_grouped(params, x, cfg, *, capacity: Optional[int] = None, policy=None):
+    """x: (B, S, d).  Per-row dispatch (sort local to each batch row); the
+    expert matmuls run in batch form so the expert axis of the capacity
+    buffers can be sharding-constrained over "model" (EP).  Without the
+    constraint GSPMD materializes + all-reduces the full (B, E, cap, 2·dff)
+    buffer every layer — measured 8×290 GB/step/device on jamba train_4k
+    (EXPERIMENTS.md §Perf cell 2, iteration J4)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    if capacity is None:
+        capacity = max(1, int(S * m.top_k / m.n_experts * m.capacity_factor))
+        capacity = min(capacity, S * m.top_k)
+    x2 = x.reshape(B, S, d)
+    top_p, top_i, probs = router_probs(params, x2.reshape(B * S, d), cfg)
+    top_p = top_p.reshape(B, S, m.top_k)
+    top_i = top_i.reshape(B, S, m.top_k)
+
+    bufs, slot, t_sorted, w_sorted, keep = jax.vmap(
+        lambda xr, pr, ir: _route_row(xr, pr, ir, m.n_experts, capacity)
+    )(x2, top_p, top_i)
+
+    def shard(t):
+        return policy(t, "moe_ecap") if policy is not None else t
+
+    bufs = shard(bufs)                              # (B, E, cap, d) E-sharded
+    h = jnp.einsum("becd,edf->becf", bufs, params["wi"])
+    h = shard(h)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("becf,efd->becd", h, params["wo"])
+    y = shard(y)
+
+    routed = jax.vmap(
+        lambda yr, sl, ts, ws, kp: _combine_row(yr, sl, ts, ws, kp, S)
+    )(y, slot, t_sorted, w_sorted, keep)
+    out = routed
+    if "shared" in params:
+        out = out + mlp(params["shared"], x)
+    aux = load_balance_loss(probs, top_i.reshape(-1, m.top_k), m.n_experts)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Dense decode path
+# ---------------------------------------------------------------------------
+
+
+def moe_dense_decode(params, x, cfg):
+    """x: (B, 1, d) or (B, S_small, d): all experts, prob-weighted combine."""
+    m = cfg.moe
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+    top_p, top_i, _ = router_probs(params, x2, cfg)
+    # scatter normalized top-k probs into a dense (T, E) weight matrix
+    w = jnp.zeros((B * S, m.n_experts), jnp.float32)
+    w = w.at[jnp.arange(B * S)[:, None], top_i].set(top_p)
+    h = jnp.einsum("td,edf->tef", x2, params["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("tef,efd->ted", h, params["wo"])
+    out = jnp.einsum("ted,te->td", y, w.astype(y.dtype)).reshape(B, S, d)
+    if "shared" in params:
+        out = out + mlp(params["shared"], x)
+    return out, jnp.float32(0.0)
+
+
+def moe_apply(params, x, cfg, *, decode: bool = False, policy=None):
+    """Entry point: grouped dispatch for training/prefill, dense for decode."""
+    if decode or x.shape[1] <= 4:
+        return moe_dense_decode(params, x, cfg)
+    return moe_grouped(params, x, cfg, policy=policy)

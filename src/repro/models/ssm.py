@@ -1,0 +1,280 @@
+"""Mamba-2 (SSD — state-space duality) blocks. [arXiv:2405.21060]
+
+Training/prefill uses the **chunked SSD algorithm**: the sequence is split
+into chunks of length L; within a chunk the recurrence is computed as a
+masked attention-like quadratic form (the "duality"), and chunk-to-chunk
+state is carried by a lax.scan.  Complexity O(S·L) instead of O(S²), state
+passing exact.  The per-chunk quadratic form is the compute hot-spot that the
+``repro.kernels.ssd_scan`` Pallas kernel implements for TPU; this module's
+pure-JAX version is its oracle and the default lowering path.
+
+Decode is the O(1) recurrent update: ``state = state·exp(dtA) + dt·x⊗B``,
+``y = C·state + D·x`` — the reason mamba2/jamba run the long_500k cell.
+
+Head/group layout follows Mamba-2: d_inner = expand·d_model split into
+``nh = d_inner/head_dim`` heads; B and C are shared across ``nh/n_groups``
+heads (the GQA analogue, "multi-value attention").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import gated_rmsnorm, init_dense, init_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_ssm_heads(cfg.d_model)
+    d_bc = 2 * s.n_groups * s.d_state
+    return d_in, nh, d_bc
+
+
+def init_ssm(key, cfg):
+    """Projections are SEPARATE matrices (wz/wx/wb/wc/wdt) rather than one
+    fused in_proj: slicing a fused output dim that is sharded on the "model"
+    mesh axis would cut across shard boundaries and force all-gathers; with
+    separate matrices each stream gets a clean tensor-parallel spec
+    (DESIGN.md §Sharding)."""
+    s = cfg.ssm
+    d_in, nh, d_bc = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "wz": init_dense(k1, cfg.d_model, d_in, cfg.dtype)["w"],
+        "wx": init_dense(k2, cfg.d_model, d_in, cfg.dtype)["w"],
+        "wb": init_dense(k3, cfg.d_model, gn, cfg.dtype)["w"],
+        "wc": init_dense(k5, cfg.d_model, gn, cfg.dtype)["w"],
+        "wdt": init_dense(k6, cfg.d_model, nh, cfg.dtype)["w"],
+        "conv_w": (jax.random.normal(k4, (s.d_conv, d_in + d_bc), dtype=jnp.float32)
+                   * (1.0 / jnp.sqrt(s.d_conv))).astype(cfg.dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),                 # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_rmsnorm(d_in, cfg.dtype),
+        "out_proj": init_dense(jax.random.fold_in(k4, 1), d_in, cfg.d_model, cfg.dtype)["w"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (d_conv is tiny: implemented as shifted adds)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, conv_w):
+    """x: (B, S, C); conv_w: (K, C).  y[t] = sum_i w[i] * x[t - (K-1) + i]."""
+    K = conv_w.shape[0]
+    B, S, C = x.shape
+    pad = jnp.zeros((B, K - 1, C), dtype=x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + xp[:, i : i + S, :] * conv_w[i]
+    return y
+
+
+def causal_conv_step(x_t, conv_state, conv_w):
+    """One decode step.  x_t: (B, C); conv_state: (B, K-1, C) (oldest first).
+    Returns (y_t, new_conv_state)."""
+    K = conv_w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)   # (B,K,C)
+    y_t = jnp.einsum("bkc,kc->bc", window, conv_w)
+    return y_t, window[:, 1:, :] if K > 1 else conv_state
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (pure JAX; oracle for kernels/ssd_scan)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(dA):
+    """dA: (..., L).  Returns M[..., i, j] = sum_{j < t <= i} dA[t]  (i >= j),
+    -inf above the diagonal — the log of the causal decay matrix."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    M = cs[..., :, None] - cs[..., None, :]   # sum over t in (j, i]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), k=0)
+    return jnp.where(mask, M, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int, return_state: bool = False):
+    """Chunked SSD.
+
+    x:  (B, S, nh, hd)   inputs per head
+    dt: (B, S, nh)       discretization steps (post-softplus)
+    A:  (nh,)            negative-real state decay
+    Bm: (B, S, G, N)     input projections (shared across nh/G heads)
+    Cm: (B, S, G, N)     output projections
+    Returns y: (B, S, nh, hd).
+    """
+    Bsz, S, nh, hd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # dt=0 padding is exact: dA=0 ⇒ within-chunk decay 1 (the state
+        # passes through untouched) and padded rows carry weight dt_j=0 in
+        # every output/state sum — ragged prompt lengths prefill correctly.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_out, S = S, S + pad
+    nc = S // L
+    rep = nh // G
+
+    # reshape to chunks; move chunk axis first for the scan
+    xc = x.reshape(Bsz, nc, L, nh, hd)
+    dtc = dt.reshape(Bsz, nc, L, nh)
+    Bc = Bm.reshape(Bsz, nc, L, G, N)
+    Cc = Cm.reshape(Bsz, nc, L, G, N)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,L,nh)
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    def body(state, inp):
+        """state: (B, nh, hd, N)."""
+        xk, dtk, Bk, Ck, dAk, cumk = inp
+        # ----- intra-chunk (quadratic duality form) ------------------
+        # decay matrix per head: (B, nh, L, L)
+        Mlog = _segsum(jnp.moveaxis(dAk, -1, 1))          # (B,nh,L,L)
+        decay = jnp.exp(Mlog)
+        CB = jnp.einsum("blgn,bmgn->bglm", Ck, Bk)        # (B,G,L,L)
+        CB = jnp.repeat(CB, rep, axis=1)                  # (B,nh,L,L)
+        scores = CB * decay * jnp.moveaxis(dtk, -1, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhlm,bmhp->blhp", scores.astype(xk.dtype), xk)
+        # ----- inter-chunk (carried state) ---------------------------
+        state_decay = jnp.exp(cumk)                       # (B,L,nh)
+        Crep = jnp.repeat(Ck, rep, axis=2)                # (B,L,nh,N)
+        y_inter = jnp.einsum("blhn,bhpn->blhp", Crep, state)
+        y_inter = y_inter * state_decay[..., None]
+        # ----- state update ------------------------------------------
+        total = cumk[:, -1, :]                            # (B,nh) total decay
+        w = jnp.exp(total[:, None, :] - cumk) * dtk       # (B,L,nh)
+        Brep = jnp.repeat(Bk, rep, axis=2)                # (B,L,nh,N)
+        state_new = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "blhp,blhn,blh->bhpn", xk.astype(jnp.float32),
+            Brep.astype(jnp.float32), w
+        )
+        return state_new, (y_intra + y_inter.astype(xk.dtype))
+
+    state0 = jnp.zeros((Bsz, nh, hd, N), dtype=jnp.float32)
+    xs = (
+        jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(dA, 1, 0), jnp.moveaxis(cum, 1, 0),
+    )
+    state_f, yc = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, nh, hd)[:, :S_out]
+    if return_state:
+        return y, state_f
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Block forward (train/prefill) and decode step
+# ---------------------------------------------------------------------------
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, K-1, d_in + d_bc)
+    ssm: jax.Array    # (B, nh, hd, N) f32
+
+
+def init_ssm_state(cfg, batch: int) -> SSMState:
+    s = cfg.ssm
+    d_in, nh, d_bc = ssm_dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, d_in + d_bc), dtype=jnp.dtype(cfg.dtype)),
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype=jnp.float32),
+    )
+
+
+def _split_proj(params, x, cfg):
+    """Per-stream projections; xBC is the concat fed through the causal conv
+    (conv is depthwise, so conv(concat) == concat(per-segment conv))."""
+    z = x @ params["wz"]
+    xc = x @ params["wx"]
+    bc = x @ params["wb"]
+    cc = x @ params["wc"]
+    dt = x @ params["wdt"]
+    xBC = jnp.concatenate([xc, bc, cc], axis=-1)
+    return z, xBC, dt
+
+
+def ssm_forward(params, x, cfg, *, impl: str = "xla", return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model).  Training/prefill path.
+
+    ``return_state=True`` additionally returns the :class:`SSMState` after
+    the last token (prefill seeding for decode)."""
+    s = cfg.ssm
+    d_in, nh, d_bc = ssm_dims(cfg)
+    G, N, hd = s.n_groups, s.d_state, s.head_dim
+    B, S, _ = x.shape
+
+    z, xBC_raw, dt = _split_proj(params, x, cfg)
+    xBC = causal_conv(xBC_raw, params["conv_w"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :d_in].reshape(B, S, nh, hd)
+    Bm = xBC[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_in + G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+
+        y, final_state = ssd_ops.ssd(xs, dt, A, Bm, Cm, chunk=s.chunk,
+                                     return_state=True)
+    else:
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk,
+                                     return_state=True)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B, S, d_in)
+    y = gated_rmsnorm(params["norm"], y, z, eps=cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    conv_state = xBC_raw[:, S - (s.d_conv - 1):, :]
+    return out, SSMState(conv=conv_state, ssm=final_state)
+
+
+def ssm_decode(params, x, state: SSMState, cfg) -> Tuple[jax.Array, SSMState]:
+    """One token.  x: (B, 1, d_model) -> (y (B,1,d_model), new state)."""
+    s = cfg.ssm
+    d_in, nh, d_bc = ssm_dims(cfg)
+    G, N, hd = s.n_groups, s.d_state, s.head_dim
+    B = x.shape[0]
+
+    z, xBC, dt = _split_proj(params, x[:, 0, :], cfg)
+    xBC, conv_new = causal_conv_step(xBC, state.conv, params["conv_w"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xt = xBC[..., :d_in].reshape(B, nh, hd)
+    Bt = xBC[..., d_in : d_in + G * N].reshape(B, G, N)
+    Ct = xBC[..., d_in + G * N :].reshape(B, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                               # (B,nh)
+
+    rep = nh // G
+    Brep = jnp.repeat(Bt, rep, axis=1)                                  # (B,nh,N)
+    Crep = jnp.repeat(Ct, rep, axis=1)
+    ssm_new = state.ssm * dA[..., None, None] + (
+        dt[..., None, None]
+        * xt.astype(jnp.float32)[..., :, None]
+        * Brep.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_new, Crep.astype(jnp.float32))
+    y = y.astype(x.dtype) + params["D"][None, :, None].astype(x.dtype) * xt
+    y = y.reshape(B, d_in)
+    y = gated_rmsnorm(params["norm"], y, z, eps=cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, SSMState(conv=conv_new, ssm=ssm_new)

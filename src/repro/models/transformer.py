@@ -1,0 +1,524 @@
+"""Model assembly: period-stacked blocks under lax.scan, all six families.
+
+Layer heterogeneity (hybrid attn/ssm interleave, MoE-every-k) is handled by
+grouping layers into **periods**: P = lcm(attn_every, moe.every).  One period
+of P layers is traced once; lax.scan runs it n_layers/P times over stacked
+params.  This keeps the HLO O(P) instead of O(n_layers) — essential for
+compiling 64–80-layer configs at 512 devices on the dry-run host — and makes
+remat policy application uniform (checkpoint around the period body).
+
+Params are nested dicts; caches are pytrees aligned with the period
+structure so prefill can emit them as scan ys and decode can consume/update
+them as scan xs/ys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .attention import KVCacheView
+from .layers import embed, init_embedding, init_mlp, init_rmsnorm, mlp, rmsnorm
+from .ssm import SSMState
+
+
+# ---------------------------------------------------------------------------
+# Period structure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str           # "attn" | "ssm"
+    mlp: Optional[str]   # "mlp" | "moe" | None (ssm family has no separate MLP)
+
+
+def period_len(cfg) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = cfg.attn_every
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def period_structure(cfg) -> List[LayerSpec]:
+    """Layer specs for positions 0..P-1 of one period."""
+    P = period_len(cfg)
+    specs = []
+    for i in range(P):
+        mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+        if cfg.family == "ssm" or (cfg.family == "hybrid" and mixer == "ssm" and not cfg.is_moe_layer(i)):
+            m = "moe" if cfg.is_moe_layer(i) else None
+        else:
+            m = "moe" if cfg.is_moe_layer(i) else "mlp"
+        if cfg.family == "ssm":
+            m = None   # pure mamba blocks carry their own gating/MLP
+        specs.append(LayerSpec(mixer=mixer, mlp=m))
+    return specs
+
+
+def n_blocks(cfg) -> int:
+    return cfg.n_layers // period_len(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_one_layer(key, cfg, spec: LayerSpec, *, cross: bool = False):
+    keys = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model, cfg.dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_mod.init_attention(keys[0], cfg)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(keys[0], cfg)
+    if cross:
+        p["ln_x"] = init_rmsnorm(cfg.d_model, cfg.dtype)
+        p["cross"] = attn_mod.init_attention(keys[1], cfg, cross=True)
+    if spec.mlp is not None:
+        p["ln2"] = init_rmsnorm(cfg.d_model, cfg.dtype)
+        if spec.mlp == "moe":
+            p["moe"] = moe_mod.init_moe(keys[2], cfg)
+        else:
+            p["mlp"] = init_mlp(keys[2], cfg.d_model, cfg.d_ff, cfg.dtype,
+                                kind=cfg.mlp_kind)
+    return p
+
+
+def _stack(trees: List[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    """Full parameter pytree.  Works under jax.eval_shape for the dry-run."""
+    specs = period_structure(cfg)
+    nb = n_blocks(cfg)
+    k_embed, k_blocks, k_head, k_enc = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(k_embed, cfg.vocab_padded, cfg.d_model, cfg.dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    cross = cfg.family == "audio"
+    blocks = []
+    for p, spec in enumerate(specs):
+        per_block = [
+            _init_one_layer(jax.random.fold_in(k_blocks, b * len(specs) + p), cfg, spec, cross=cross)
+            for b in range(nb)
+        ]
+        blocks.append(_stack(per_block))
+    params["blocks"] = blocks
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(k_head, cfg.vocab_padded, cfg.d_model, cfg.dtype)
+    if cfg.family == "audio":
+        enc_spec = LayerSpec(mixer="attn", mlp="mlp")
+        enc_blocks = [
+            _init_one_layer(jax.random.fold_in(k_enc, b), cfg, enc_spec)
+            for b in range(cfg.n_enc_layers)
+        ]
+        params["encoder"] = {
+            "blocks": [_stack(enc_blocks)],
+            "final_norm": init_rmsnorm(cfg.d_model, cfg.dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Shared block application
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(positions, d_model: int):
+    """On-the-fly sinusoidal embedding (no host table in the HLO)."""
+    half = d_model // 2
+    freq = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _shard(x, policy, name: str):
+    return policy(x, name) if policy is not None else x
+
+
+def _embed(params, tokens, policy):
+    """Vocab-parallel lookup when the policy provides one (distributed runs);
+    plain take otherwise."""
+    if policy is not None and hasattr(policy, "embed"):
+        return policy.embed(params["embed"]["w"], tokens)
+    return embed(params["embed"], tokens)
+
+
+class FwdOut(NamedTuple):
+    hidden: jax.Array
+    aux: jax.Array              # MoE load-balance loss (0 for non-MoE)
+
+
+def _apply_layer_train(
+    lp, spec: LayerSpec, x, cfg, *, positions, impl, policy, enc_kv=None,
+    causal: bool = True,
+):
+    """One layer, full-sequence (train/prefill shape).  Returns
+    (x, aux, kv_or_None, ssm_state_or_None)."""
+    aux = jnp.float32(0.0)
+    kv = None
+    sstate = None
+    h = rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+    if spec.mixer == "attn":
+        y, kv = attn_mod.self_attention(
+            lp["attn"], h, cfg, positions=positions, causal=causal, impl=impl
+        )
+    else:
+        y, sstate = ssm_mod.ssm_forward(lp["ssm"], h, cfg, impl=impl, return_state=True)
+    x = x + _shard(y, policy, "residual")
+    if enc_kv is not None and "cross" in lp:
+        hx = rmsnorm(lp["ln_x"], x, eps=cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], hx, enc_kv, cfg, impl=impl)
+    if spec.mlp is not None:
+        h2 = rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        if spec.mlp == "moe":
+            y2, aux = moe_mod.moe_apply(lp["moe"], h2, cfg, decode=False,
+                                        policy=policy)
+        else:
+            y2 = mlp(lp["mlp"], h2, kind=cfg.mlp_kind)
+        x = x + _shard(y2, policy, "residual")
+    return x, aux, kv, sstate
+
+
+def _apply_layer_decode(
+    lp, spec: LayerSpec, x, cfg, *, cur_pos, kv_cache, ssm_state, cross_kv,
+    impl, policy,
+):
+    """One layer, single-token decode.  Returns (x, new_kv, new_ssm)."""
+    h = rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+    new_kv, new_ssm = kv_cache, ssm_state
+    if spec.mixer == "attn":
+        y, new_kv = attn_mod.decode_attention(
+            lp["attn"], h, kv_cache, cur_pos, cfg, impl=impl, policy=policy
+        )
+    else:
+        y, new_ssm = ssm_mod.ssm_decode(lp["ssm"], h, ssm_state, cfg)
+    x = x + y
+    if cross_kv is not None and "cross" in lp:
+        hx = rmsnorm(lp["ln_x"], x, eps=cfg.norm_eps)
+        x = x + attn_mod.cross_attention(lp["cross"], hx, cross_kv, cfg, impl=impl)
+    if spec.mlp is not None:
+        h2 = rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        if spec.mlp == "moe":
+            y2, _ = moe_mod.moe_apply(lp["moe"], h2, cfg, decode=True,
+                                      policy=policy)
+        else:
+            y2 = mlp(lp["mlp"], h2, kind=cfg.mlp_kind)
+        x = x + y2
+    return x, new_kv, new_ssm
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    pol = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[remat]
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) — also the encoder stack driver
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params, tokens, cfg, *, positions=None, extra_embeds=None, enc_out=None,
+    impl: str = "xla", policy=None, remat: str = "none", causal: bool = True,
+) -> FwdOut:
+    """Full-sequence forward to final hidden states.
+
+    tokens:       (B, S_txt) int32
+    extra_embeds: (B, S_vis, d) precomputed patch/frame embeddings prepended
+                  to the token embeddings (VLM stub frontend).
+    enc_out:      (B, S_enc, d) encoder output (audio family).
+    """
+    specs = period_structure(cfg)
+    x = _embed(params, tokens, policy)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if cfg.family == "audio":
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = _shard(x, policy, "hidden")
+
+    enc_kvs = None
+    if enc_out is not None:
+        # Precompute per-position cross K/V once (stacked over blocks).
+        enc_kvs = []
+        for p, spec in enumerate(specs):
+            lp = params["blocks"][p]
+            enc_kvs.append(
+                jax.vmap(
+                    lambda lpb: attn_mod.encode_cross_kv(lpb["cross"], enc_out, cfg)
+                )(lp)
+            )
+
+    def body(carry, xs_in):
+        x, aux = carry
+        if enc_kvs is None:
+            (block_params,) = xs_in
+            ekv = [None] * len(specs)
+        else:
+            block_params, ekv = xs_in
+        for p, spec in enumerate(specs):
+            x, aux_p, _, _ = _apply_layer_train(
+                block_params[p], spec, x, cfg, positions=positions, impl=impl,
+                policy=policy, enc_kv=ekv[p], causal=causal,
+            )
+            aux = aux + aux_p
+        return (x, aux), None
+
+    body_w = _remat_wrap(body, remat)
+    xs = (params["blocks"],) if enc_kvs is None else (params["blocks"], enc_kvs)
+    (x, aux), _ = jax.lax.scan(body_w, (x, jnp.float32(0.0)), xs)
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    return FwdOut(hidden=x, aux=aux)
+
+
+def encoder_forward(params, frames, cfg, *, impl="xla", policy=None, remat="none"):
+    """Audio encoder over stub frame embeddings (B, S_enc, d)."""
+    enc = params["encoder"]
+    B, S, _ = frames.shape
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = frames + _sinusoid(pos, cfg.d_model).astype(frames.dtype)
+    spec = LayerSpec(mixer="attn", mlp="mlp")
+
+    def body(x, block_params):
+        y, _, _, _ = _apply_layer_train(
+            block_params, spec, x, cfg, positions=pos, impl=impl,
+            policy=policy, causal=False,
+        )
+        return y, None
+
+    x, _ = jax.lax.scan(_remat_wrap(body, remat), x, enc["blocks"][0])
+    return rmsnorm(enc["final_norm"], x, eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# LM head + chunked loss
+# ---------------------------------------------------------------------------
+
+
+def unembed_weight(params, cfg):
+    w = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    return w   # (Vp, d): logits = h @ w.T
+
+
+def logits_fn(params, hidden, cfg):
+    return hidden @ unembed_weight(params, cfg).T
+
+
+def lm_loss(
+    params, hidden, labels, cfg, *, chunk: int = 1024, policy=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over (B, S) labels; ignore label < 0.  Chunked over the
+    sequence axis with lax.map so the full (B,S,V) logits tensor is never
+    materialized.  Returns (sum_loss, count)."""
+    w = unembed_weight(params, cfg)            # (Vp, d)
+    B, S, d = hidden.shape
+    ck = min(chunk, S)
+    n = (S + ck - 1) // ck
+    pad = n * ck - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = jnp.moveaxis(hidden.reshape(B, n, ck, d), 1, 0)    # (n, B, ck, d)
+    lc = jnp.moveaxis(labels.reshape(B, n, ck), 1, 0)
+
+    def one(args):
+        h, l = args
+        logits = (h @ w.T).astype(jnp.float32)              # (B, ck, Vp)
+        logits = _shard(logits, policy, "logits")
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = l >= 0
+        return (
+            jnp.where(valid, lz - gold, 0.0).sum(),
+            valid.sum(),
+        )
+
+    sums, counts = jax.lax.map(one, (hc, lc))
+    return sums.sum(), counts.sum()
+
+
+# ---------------------------------------------------------------------------
+# Prefill and decode
+# ---------------------------------------------------------------------------
+
+
+class Caches(NamedTuple):
+    """Decode-time state, aligned with the period structure.
+
+    kv:    {str(p): KVCacheView stacked over blocks}   (attn positions)
+    ssm:   {str(p): SSMState stacked over blocks}      (ssm positions)
+    cross: {str(p): (k, v) stacked over blocks} | None (audio)
+    """
+
+    kv: Dict[str, KVCacheView]
+    ssm: Dict[str, SSMState]
+    cross: Optional[Dict[str, Tuple[jax.Array, jax.Array]]] = None
+
+
+def init_caches(cfg, batch: int, max_len: int) -> Caches:
+    specs = period_structure(cfg)
+    nb = n_blocks(cfg)
+    kv, ssm = {}, {}
+    for p, spec in enumerate(specs):
+        if spec.mixer == "attn":
+            one = attn_mod.init_kv_cache(cfg, batch, max_len)
+            kv[str(p)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape).copy(), one
+            )
+        else:
+            one = ssm_mod.init_ssm_state(cfg, batch)
+            ssm[str(p)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape).copy(), one
+            )
+    cross = None
+    if cfg.family == "audio":
+        # cross-attention K/V over the encoder output (seeded by prefill)
+        cross = {
+            str(p): (
+                jnp.zeros((nb, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+                          dtype=jnp.dtype(cfg.dtype)),
+                jnp.zeros((nb, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+                          dtype=jnp.dtype(cfg.dtype)),
+            )
+            for p in range(len(specs))
+        }
+    return Caches(kv=kv, ssm=ssm, cross=cross)
+
+
+def prefill(
+    params, tokens, cfg, *, max_len: int, positions=None, extra_embeds=None,
+    enc_out=None, impl: str = "xla", policy=None, remat: str = "none",
+):
+    """Run the full prompt, returning (last-token logits, seeded Caches).
+
+    The KV buffers are sized ``min(max_len, window)``; prompt K/V are
+    scattered in ring-buffer order (see serving.kv_cache.seed_cache).
+    """
+    from repro.serving.kv_cache import seed_kv_cache, seed_ssm_state
+
+    specs = period_structure(cfg)
+    x = _embed(params, tokens, policy)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if cfg.family == "audio":
+        pos0 = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = x + _sinusoid(pos0, cfg.d_model).astype(x.dtype)
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = _shard(x, policy, "hidden")
+
+    enc_kvs = None
+    if enc_out is not None:
+        enc_kvs = []
+        for p, spec in enumerate(specs):
+            lp = params["blocks"][p]
+            enc_kvs.append(
+                jax.vmap(
+                    lambda lpb: attn_mod.encode_cross_kv(lpb["cross"], enc_out, cfg)
+                )(lp)
+            )
+
+    def body(carry, xs_in):
+        x = carry
+        if enc_kvs is None:
+            (block_params,) = xs_in
+            ekv = [None] * len(specs)
+        else:
+            block_params, ekv = xs_in
+        outs = {}
+        for p, spec in enumerate(specs):
+            x, _, kv, sstate = _apply_layer_train(
+                block_params[p], spec, x, cfg, positions=positions, impl=impl,
+                policy=policy, enc_kv=ekv[p], causal=True,
+            )
+            outs[str(p)] = kv if spec.mixer == "attn" else sstate
+        return x, outs
+
+    body_w = _remat_wrap(body, remat)
+    xs = (params["blocks"],) if enc_kvs is None else (params["blocks"], enc_kvs)
+    x, ys = jax.lax.scan(body_w, x, xs)
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = logits_fn(params, last, cfg)[:, 0]
+
+    kv, ssm = {}, {}
+    for p, spec in enumerate(specs):
+        if spec.mixer == "attn":
+            k, v = ys[str(p)]
+            kv[str(p)] = seed_kv_cache(cfg, k, v, max_len=max_len, seq_positions=positions)
+        else:
+            ssm[str(p)] = seed_ssm_state(ys[str(p)])
+    cross = None
+    if enc_kvs is not None:
+        cross = {str(p): enc_kvs[p] for p in range(len(specs))}
+    return logits, Caches(kv=kv, ssm=ssm, cross=cross)
+
+
+def decode_step(
+    params, tokens, caches: Caches, cur_pos, cfg, *, impl: str = "xla",
+    policy=None,
+):
+    """One decode step.  tokens: (B,) int32; cur_pos: (B,) absolute position.
+    Returns (logits (B, Vp), updated Caches)."""
+    specs = period_structure(cfg)
+    x = _embed(params, tokens, policy)[:, None, :]     # (B, 1, d)
+    if cfg.family == "audio":
+        x = x + _sinusoid(cur_pos[:, None], cfg.d_model).astype(x.dtype)
+    x = _shard(x, policy, "hidden_decode")
+
+    have_cross = caches.cross is not None and len(caches.cross) > 0
+
+    def body(x, xs_in):
+        if have_cross:
+            block_params, kv_in, ssm_in, cross_in = xs_in
+        else:
+            block_params, kv_in, ssm_in = xs_in
+            cross_in = {}
+        kv_out, ssm_out = {}, {}
+        for p, spec in enumerate(specs):
+            x, nkv, nssm = _apply_layer_decode(
+                block_params[p], spec, x, cfg, cur_pos=cur_pos,
+                kv_cache=kv_in.get(str(p)), ssm_state=ssm_in.get(str(p)),
+                cross_kv=cross_in.get(str(p)), impl=impl, policy=policy,
+            )
+            if spec.mixer == "attn":
+                kv_out[str(p)] = nkv
+            else:
+                ssm_out[str(p)] = nssm
+        return x, (kv_out, ssm_out)
+
+    xs = (params["blocks"], caches.kv, caches.ssm)
+    if have_cross:
+        xs = xs + (caches.cross,)
+    x, (kv_new, ssm_new) = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)[:, 0]
+    return logits, Caches(kv=kv_new, ssm=ssm_new, cross=caches.cross)

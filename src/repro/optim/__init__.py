@@ -1,0 +1,16 @@
+from .adamw import (
+    AdamWState,
+    QTensor,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    opt_state_specs,
+)
+from .schedules import SCHEDULES, constant, warmup_cosine, warmup_linear
+
+__all__ = [
+    "AdamWState", "QTensor", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "global_norm", "opt_state_specs",
+    "SCHEDULES", "constant", "warmup_cosine", "warmup_linear",
+]

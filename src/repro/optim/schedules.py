@@ -1,0 +1,35 @@
+"""LR schedules as pure functions of the (traced) step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_linear(lr: float, warmup: int, total: int):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        decay = jnp.maximum(0.0, 1.0 - jnp.maximum(s - warmup, 0.0) / max(total - warmup, 1))
+        return jnp.float32(lr) * w * decay
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, *, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * w * cos
+    return f
+
+
+SCHEDULES = {
+    "constant": constant,
+    "warmup_linear": warmup_linear,
+    "warmup_cosine": warmup_cosine,
+}

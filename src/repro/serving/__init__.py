@@ -1,0 +1,15 @@
+from .engine import ServeConfig, generate, make_prefill_step, make_serve_step
+from .batcher import BatcherStats, ContinuousBatcher, Request
+from .kv_cache import cache_len, kv_cache_bytes, seed_kv_cache, seed_ssm_state
+from .tenancy import (
+    CompiledProgram,
+    TwoStageCompiler,
+    VirtualAcceleratorPool,
+)
+
+__all__ = [
+    "ServeConfig", "generate", "make_prefill_step", "make_serve_step",
+    "BatcherStats", "ContinuousBatcher", "Request", "cache_len",
+    "kv_cache_bytes", "seed_kv_cache", "seed_ssm_state", "CompiledProgram",
+    "TwoStageCompiler", "VirtualAcceleratorPool",
+]

@@ -1,0 +1,154 @@
+"""Continuous batching over fixed decode slots.
+
+The decode program has a fixed batch shape (XLA requirement); the batcher
+multiplexes a dynamic request stream onto B fixed slots:
+
+* new requests are prefillled (padded to the slot prompt length) and their
+  caches scattered into free slots;
+* every decode step advances all active slots together;
+* slots free on EOS/max-tokens and are immediately refillable — the
+  dynamic-workload serving pattern of the paper's private-cloud scenario,
+  with the slot pool playing the role of the core pool at request
+  granularity.
+
+Host-side bookkeeping is numpy; device work happens only in the two jitted
+steps.  (Paged/block KV is out of scope — the ring-buffer cache is already
+position-indexed, so slot reuse is a pure overwrite.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Caches
+from .engine import ServeConfig, make_prefill_step, make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new: int
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    steps: int = 0
+    prefills: int = 0
+    completed: int = 0
+    slot_busy_steps: int = 0
+    slot_total_steps: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        return self.slot_busy_steps / max(self.slot_total_steps, 1)
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batcher for one tenant's model."""
+
+    def __init__(self, params, cfg, *, slots: int, prompt_len: int,
+                 max_len: int, policy=None, attn_impl: str = "xla"):
+        self.params = params
+        self.cfg = cfg
+        self.B = slots
+        self.prompt_len = prompt_len
+        scfg = ServeConfig(max_len=max_len, attn_impl=attn_impl)
+        self.scfg = scfg
+        self._prefill = jax.jit(make_prefill_step(cfg, scfg, policy=policy))
+        self._serve = jax.jit(make_serve_step(cfg, scfg, policy=policy))
+        self.queue: Deque[Request] = deque()
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, dtype=np.int32)
+        self.slot_tok = np.zeros(slots, dtype=np.int32)
+        self.caches: Optional[Caches] = None
+        self.stats = BatcherStats()
+        self._key = jax.random.PRNGKey(0)
+
+    # -- request intake ------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert req.prompt.shape[0] <= self.prompt_len
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # -- admission: batched prefill into free slots ---------------------
+    def _admit(self) -> None:
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        joins = []
+        while free and self.queue:
+            joins.append((free.pop(0), self.queue.popleft()))
+        # pad prompts (left-pad with 0s; positions start at pad offset)
+        B = self.B
+        toks = np.zeros((B, self.prompt_len), dtype=np.int32)
+        for slot, req in joins:
+            p = req.prompt
+            toks[slot, self.prompt_len - len(p):] = p
+        logits, new_caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.stats.prefills += 1
+        if self.caches is None:
+            self.caches = new_caches
+        else:
+            sel = np.zeros((B,), dtype=bool)
+            for slot, _ in joins:
+                sel[slot] = True
+            selj = jnp.asarray(sel)
+
+            def merge(old, new):
+                # batch axis position differs per leaf rank: caches leaves are
+                # (nb, B, ...) for kv/ssm, broadcast select on axis 1
+                cond = selj.reshape((1, -1) + (1,) * (old.ndim - 2))
+                return jnp.where(cond, new, old)
+
+            self.caches = jax.tree.map(merge, self.caches, new_caches)
+        nxt = np.asarray(jnp.argmax(logits[..., : self.cfg.vocab], axis=-1))
+        for slot, req in joins:
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = self.prompt_len
+            self.slot_tok[slot] = nxt[slot]
+            req.out.append(int(nxt[slot]))
+
+    # -- one decode step over all slots ---------------------------------
+    def step(self) -> None:
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        self.stats.slot_total_steps += self.B
+        self.stats.slot_busy_steps += len(active)
+        if not active:
+            return
+        self._key, sub = jax.random.split(self._key)
+        toks, logits, self.caches = self._serve(
+            self.params, jnp.asarray(self.slot_tok), self.caches,
+            jnp.asarray(self.slot_pos), sub,
+        )
+        self.stats.steps += 1
+        toks_np = np.asarray(toks)
+        self.slot_pos[active] += 1
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(toks_np[i])
+            req.out.append(tok)
+            self.slot_tok[i] = tok
+            hit_eos = req.eos is not None and tok == req.eos
+            if len(req.out) >= req.max_new or hit_eos:
+                req.done = True
+                self.slot_req[i] = None
+                self.stats.completed += 1
+
+    def run(self, *, max_steps: int = 10_000) -> BatcherStats:
+        while (self.queue or any(r is not None for r in self.slot_req)) and \
+                self.stats.steps < max_steps:
+            self.step()
+        return self.stats

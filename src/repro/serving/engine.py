@@ -1,0 +1,100 @@
+"""Inference engine: prefill/serve step factories and a host generate loop.
+
+``prefill_step`` and ``serve_step`` are the two programs the dry-run lowers
+for the inference cells (prefill_32k → prefill_step; decode_32k / long_500k
+→ serve_step).  Both are pure functions of (params, inputs, caches) so the
+tenancy layer can AOT-compile them per (arch × shape × lease size) — the
+TPU-side "instruction frame package".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, encoder_forward, prefill
+from repro.models.transformer import Caches
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    attn_impl: str = "xla"       # xla | pallas
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def make_prefill_step(cfg, scfg: ServeConfig, *, policy=None):
+    """prefill_step(params, batch) -> (last-token logits, Caches).
+
+    batch: {"tokens": (B, S)} + family extras (extra_embeds/positions/frames).
+    """
+
+    def prefill_step(params, batch):
+        kw: Dict[str, Any] = dict(impl=scfg.attn_impl, policy=policy)
+        if cfg.family == "vlm":
+            kw["extra_embeds"] = batch["extra_embeds"]
+            kw["positions"] = batch["positions"]
+        if cfg.family == "audio":
+            kw["enc_out"] = encoder_forward(
+                params, batch["frames"], cfg, impl=scfg.attn_impl, policy=policy
+            )
+        return prefill(params, batch["tokens"], cfg, max_len=scfg.max_len, **kw)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, scfg: ServeConfig, *, policy=None):
+    """serve_step(params, tokens (B,), caches, cur_pos (B,), key) ->
+    (next_tokens (B,), logits, caches)."""
+
+    def serve_step(params, tokens, caches: Caches, cur_pos, key):
+        logits, caches = decode_step(
+            params, tokens, caches, cur_pos, cfg, impl=scfg.attn_impl,
+            policy=policy,
+        )
+        # mask vocab padding before selection
+        logits = logits.at[..., cfg.vocab:].set(-jnp.inf) if cfg.vocab_padded > cfg.vocab else logits
+        if scfg.greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, logits.astype(jnp.float32) / scfg.temperature, axis=-1
+            ).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return serve_step
+
+
+def generate(
+    params, cfg, prompt_tokens, *, n_new: int, scfg: Optional[ServeConfig] = None,
+    policy=None, extras: Optional[Dict[str, Any]] = None, seed: int = 0,
+):
+    """Host loop: prefill the prompt, then decode ``n_new`` tokens greedily.
+
+    prompt_tokens: (B, S) int32.  Returns (B, n_new) int32.
+    """
+    B, S = prompt_tokens.shape
+    scfg = scfg or ServeConfig(max_len=S + n_new)
+    batch = {"tokens": prompt_tokens, **(extras or {})}
+    prefill_step = jax.jit(make_prefill_step(cfg, scfg, policy=policy))
+    serve_step = jax.jit(make_serve_step(cfg, scfg, policy=policy))
+    logits, caches = prefill_step(params, batch)
+    if cfg.vocab_padded > cfg.vocab:
+        logits = logits.at[..., cfg.vocab:].set(-jnp.inf)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    offset = S
+    if cfg.family == "vlm" and extras and "extra_embeds" in extras:
+        offset = S + extras["extra_embeds"].shape[1]
+    out = [tok]
+    key = jax.random.PRNGKey(seed)
+    for i in range(n_new - 1):
+        key, sub = jax.random.split(key)
+        cur = jnp.full((B,), offset + i, dtype=jnp.int32)
+        tok, _, caches = serve_step(params, tok, caches, cur, sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

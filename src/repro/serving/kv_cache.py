@@ -1,0 +1,80 @@
+"""KV-cache and SSM-state containers for serving.
+
+The per-layer view types live next to their math (`models.attention.KVCacheView`,
+`models.ssm.SSMState`); this module owns cache *lifecycle*: allocation,
+seeding from prefill outputs (including ring-buffer placement for
+sliding-window archs), and the byte accounting the tenancy layer uses for
+admission control.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import KVCacheView
+from repro.models.ssm import SSMState
+
+
+def cache_len(cfg, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def seed_kv_cache(cfg, k, v, *, max_len: int, seq_positions=None) -> KVCacheView:
+    """Seed a decode cache from prefill K/V.
+
+    k, v: (nb, B, S, Hkv, dh) — stacked over blocks (scan ys).
+    Ring-buffer placement: absolute position s lands in slot s % C, so decode
+    can continue writing at cur_pos % C without any copy.  Only the last C
+    positions are kept (for sliding-window archs C = window; older K/V is
+    dead weight by definition of the mask).
+    """
+    nb, B, S, Hkv, dh = k.shape
+    C = cache_len(cfg, max_len)
+    keep = min(S, C)
+    pos = np.arange(S - keep, S)                  # absolute positions kept
+    slots = pos % C                               # ring slots (identity if S<=C)
+    kk = k[:, :, S - keep :, :, :]
+    vv = v[:, :, S - keep :, :, :]
+    ck = jnp.zeros((nb, B, C, Hkv, dh), dtype=k.dtype)
+    cv = jnp.zeros((nb, B, C, Hkv, dh), dtype=v.dtype)
+    cpos = jnp.full((nb, B, C), -1, dtype=jnp.int32)
+    slots_j = jnp.asarray(slots)
+    ck = ck.at[:, :, slots_j].set(kk)
+    cv = cv.at[:, :, slots_j].set(vv)
+    cpos = cpos.at[:, :, slots_j].set(jnp.asarray(pos, dtype=jnp.int32))
+    return KVCacheView(k=ck, v=cv, pos=cpos)
+
+
+def seed_ssm_state(state: SSMState) -> SSMState:
+    """Prefill already produces the exact decode state; pass through (the
+    hook exists so quantized-state serving can intercept here)."""
+    return state
+
+
+def kv_cache_bytes(cfg, batch: int, max_len: int) -> int:
+    """HBM bytes of the full decode cache for admission control."""
+    from repro.models.transformer import n_blocks, period_structure
+
+    specs = period_structure(cfg)
+    nb = n_blocks(cfg)
+    C = cache_len(cfg, max_len)
+    dt = jnp.dtype(cfg.dtype).itemsize
+    total = 0
+    for spec in specs:
+        if spec.mixer == "attn":
+            total += nb * batch * C * cfg.n_kv_heads * cfg.d_head * 2 * dt
+            total += nb * batch * C * 4                     # pos int32
+        else:
+            s = cfg.ssm
+            d_in = s.d_inner(cfg.d_model)
+            nh = s.n_ssm_heads(cfg.d_model)
+            d_bc = 2 * s.n_groups * s.d_state
+            total += nb * batch * (s.d_conv - 1) * (d_in + d_bc) * dt
+            total += nb * batch * nh * s.head_dim * s.d_state * 4   # f32
+    if cfg.family == "audio":
+        total += cfg.n_layers * batch * cfg.enc_seq * cfg.kv_dim * 2 * dt
+    return total

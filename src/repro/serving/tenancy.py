@@ -1,0 +1,181 @@
+"""Tenancy: the paper's virtualization machinery driving JAX meshes.
+
+This is the TPU-side realization of the paper's stack (DESIGN.md §2 table):
+
+  FPGA small core           → a fixed group of TPU devices ("core")
+  multi-core HRP            → :class:`VirtualAcceleratorPool` — the *same*
+                              ``repro.core.hrp.ResourcePool`` bookkeeping,
+                              leases mapped to disjoint device sub-meshes
+  instruction frame package → an AOT-compiled XLA executable for one
+                              (program × shape × lease size)
+  static compilation        → :meth:`TwoStageCompiler.static_compile` —
+                              offline lower+compile for every lease size the
+                              pool can grant (seconds, like the paper's 14-47 s)
+  dynamic compilation       → :meth:`TwoStageCompiler.reconfigure` — cache
+                              lookup + context migration (milliseconds)
+  layer-level ctx switch    → caches/params re-laid-out onto the new mesh
+                              (device_put); decode resumes at the same token
+  DDR-port budget check     → per-lease HBM admission via kv_cache_bytes
+
+Physical isolation is inherited: leases are disjoint device sets, so one
+tenant's programs literally cannot address another's HBM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hrp import HRPError, Lease, ResourcePool
+from repro.serving.kv_cache import kv_cache_bytes
+
+HBM_BYTES_PER_DEVICE = 16 << 30   # TPU v5e
+
+
+class VirtualAcceleratorPool:
+    """Device-backed hardware resource pool (paper §4.2.2 on a TPU slice)."""
+
+    def __init__(self, devices: Optional[Sequence] = None, *,
+                 devices_per_core: int = 1, cores_per_group: int = 4):
+        devices = list(devices if devices is not None else jax.devices())
+        assert len(devices) % devices_per_core == 0
+        self.devices_per_core = devices_per_core
+        self.core_devices: List[List] = [
+            devices[i * devices_per_core : (i + 1) * devices_per_core]
+            for i in range(len(devices) // devices_per_core)
+        ]
+        # DDR-group budget reused as an HBM/ICI locality group
+        self.pool = ResourcePool(
+            n_cores=len(self.core_devices), cores_per_ddr=cores_per_group,
+            ddr_port_bits=cores_per_group * 128, core_port_bits=128,
+        )
+
+    @property
+    def n_cores(self) -> int:
+        return self.pool.n_cores
+
+    def lease(self, tenant: str, n_cores: int) -> Lease:
+        return self.pool.alloc(tenant, n_cores)
+
+    def resize(self, tenant: str, n_cores: int) -> Lease:
+        return self.pool.resize(tenant, n_cores)
+
+    def release(self, tenant: str) -> None:
+        self.pool.release(tenant)
+
+    def mesh_for(self, lease: Lease, *, axis_names: Tuple[str, str] = ("data", "model")) -> Mesh:
+        """Disjoint sub-mesh over the leased cores: (n_cores, devices_per_core)."""
+        devs = np.array(
+            [self.core_devices[c] for c in lease.cores], dtype=object
+        ).reshape(len(lease.cores), self.devices_per_core)
+        return Mesh(devs, axis_names)
+
+    def check_hbm(self, cfg, lease: Lease, *, batch: int, max_len: int) -> None:
+        """Admission control: model + KV bytes must fit the lease's HBM
+        (the paper's DDR-port-budget rule, §4.2.2)."""
+        n_dev = len(lease.cores) * self.devices_per_core
+        param_bytes = cfg.param_count() * 2            # bf16
+        kv = kv_cache_bytes(cfg, batch, max_len)
+        need = (param_bytes + kv) / n_dev
+        if need > HBM_BYTES_PER_DEVICE:
+            raise HRPError(
+                f"lease of {n_dev} devices cannot hold {need/2**30:.1f} GiB/device "
+                f"(params {param_bytes/2**30:.1f} + kv {kv/2**30:.1f} GiB)"
+            )
+
+
+@dataclasses.dataclass
+class CompiledProgram:
+    executable: Any
+    lowered_seconds: float
+    compile_seconds: float
+    n_cores: int
+
+
+class TwoStageCompiler:
+    """Two-stage static→dynamic compilation for serving programs.
+
+    ``static_compile`` is the offline stage: for every lease size a tenant
+    may be resized to, AOT-lower and compile the program (seconds).
+    ``reconfigure`` is the online stage: resize the lease, fetch the cached
+    executable, and migrate live state (params/caches) onto the new mesh —
+    the measured millisecond path (Table 2 analogue;
+    benchmarks/bench_compile_cache.py).
+    """
+
+    def __init__(self, pool: VirtualAcceleratorPool):
+        self.pool = pool
+        self._cache: Dict[Tuple, CompiledProgram] = {}
+
+    # -- offline -------------------------------------------------------
+    def static_compile(
+        self, key: str, program: Callable, abstract_args: Tuple,
+        *, lease_sizes: Sequence[int], mesh_builder: Callable[[int], Mesh],
+        shardings_builder: Optional[Callable[[Mesh], Tuple]] = None,
+    ) -> Dict[int, CompiledProgram]:
+        """Compile ``program`` for every lease size; cache executables."""
+        out = {}
+        for n in lease_sizes:
+            mesh = mesh_builder(n)
+            in_sh = None
+            if shardings_builder is not None:
+                in_sh = shardings_builder(mesh)
+            t0 = time.perf_counter()
+            jitted = jax.jit(program, in_shardings=in_sh) if in_sh is not None else jax.jit(program)
+            with mesh:
+                lowered = jitted.lower(*abstract_args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+            prog = CompiledProgram(
+                executable=compiled, lowered_seconds=t1 - t0,
+                compile_seconds=t2 - t1, n_cores=n,
+            )
+            self._cache[(key, n)] = prog
+            out[n] = prog
+        return out
+
+    def lookup(self, key: str, n_cores: int) -> Optional[CompiledProgram]:
+        return self._cache.get((key, n_cores))
+
+    # -- online ----------------------------------------------------------
+    def reconfigure(
+        self, tenant: str, key: str, n_cores: int,
+        *, live_state: Any = None, state_specs: Any = None,
+    ) -> Tuple[CompiledProgram, Any, Dict[str, float]]:
+        """Resize ``tenant`` to ``n_cores``; return (program, migrated state,
+        timing breakdown).  Raises if the static stage didn't cover
+        ``n_cores`` (the paper's design rule: IFPs are pre-generated for
+        every allocatable core count)."""
+        t0 = time.perf_counter()
+        lease = self.pool.resize(tenant, n_cores)
+        prog = self.lookup(key, n_cores)
+        if prog is None:
+            raise HRPError(
+                f"no static artifact for ({key}, {n_cores}); "
+                f"static_compile must cover all lease sizes"
+            )
+        t1 = time.perf_counter()
+        migrated = live_state
+        if live_state is not None:
+            mesh = self.pool.mesh_for(lease)
+            if state_specs is not None:
+                sh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), state_specs,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+                migrated = jax.tree.map(jax.device_put, live_state, sh)
+            else:
+                migrated = jax.device_put(live_state, mesh.devices.flat[0])
+        t2 = time.perf_counter()
+        timing = {
+            "t_lookup": t1 - t0,
+            "t_migrate": t2 - t1,
+            "t_context": t2 - t0,
+        }
+        return prog, migrated, timing

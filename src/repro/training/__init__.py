@@ -1,0 +1,3 @@
+from .steps import TrainerConfig, make_loss_fn, make_train_step
+
+__all__ = ["TrainerConfig", "make_loss_fn", "make_train_step"]

@@ -1,0 +1,182 @@
+"""Step functions: loss, train_step, with remat/accumulation/compression.
+
+``make_train_step`` builds the jit-able step for one (arch, trainer) config:
+
+    params, opt_state, metrics = train_step(params, opt_state, batch)
+
+Features (all config-selected, all exercised by tests):
+  * family-aware loss (vlm patch embeddings, audio encoder, MoE aux loss)
+  * remat policy over the period body ("none" | "dots" | "full")
+  * gradient accumulation (lax.scan over microbatches, f32 accumulator)
+  * global-norm clipping, AdamW (f32 or 8-bit moments), LR schedules
+  * optional int8-compressed cross-pod gradient all-reduce via partial-manual
+    shard_map (axis_names={"pod"}) — the inter-pod links are the slow ones,
+    and this is the distributed-optimization trick the roofline's
+    collective-bound cells care about.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encoder_forward, forward, lm_loss
+from repro.optim import adamw_update, clip_by_global_norm
+from repro.optim.schedules import SCHEDULES
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    lr: float = 3e-4
+    schedule: str = "constant"
+    warmup: int = 100
+    total_steps: int = 1000
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    aux_coef: float = 0.01          # MoE load-balance loss weight
+    quantize_opt: bool = False      # 8-bit AdamW moments
+    remat: str = "none"             # none | dots | full
+    grad_accum: int = 1
+    compress_pods: bool = False     # int8 cross-pod grad all-reduce
+    attn_impl: str = "xla"          # xla | pallas | naive
+    loss_chunk: int = 1024
+
+    def lr_fn(self):
+        sched = SCHEDULES[self.schedule]
+        if self.schedule == "constant":
+            return sched(self.lr)
+        return sched(self.lr, self.warmup, self.total_steps)
+
+
+def _forward_kwargs(cfg, batch: Dict[str, Any], *, impl, policy, remat):
+    kw = dict(impl=impl, policy=policy, remat=remat)
+    if cfg.family == "vlm":
+        kw["extra_embeds"] = batch["extra_embeds"]
+        kw["positions"] = batch["positions"]
+    return kw
+
+
+def make_loss_fn(cfg, tcfg: TrainerConfig, *, policy=None):
+    """loss_fn(params, batch) -> (loss, metrics)."""
+
+    def loss_fn(params, batch):
+        kw = _forward_kwargs(cfg, batch, impl=tcfg.attn_impl, policy=policy,
+                             remat=tcfg.remat)
+        if cfg.family == "audio":
+            kw["enc_out"] = encoder_forward(
+                params, batch["frames"], cfg, impl=tcfg.attn_impl,
+                policy=policy, remat=tcfg.remat,
+            )
+        out = forward(params, batch["tokens"], cfg, **kw)
+        sum_loss, count = lm_loss(
+            params, out.hidden, batch["labels"], cfg,
+            chunk=tcfg.loss_chunk, policy=policy,
+        )
+        loss = sum_loss / jnp.maximum(count.astype(jnp.float32), 1.0)
+        total = loss + tcfg.aux_coef * out.aux
+        metrics = {"loss": loss, "aux": out.aux, "tokens": count}
+        return total, metrics
+
+    return loss_fn
+
+
+def _accumulate_grads(loss_fn, params, batch, n_accum: int):
+    """lax.scan over microbatches; f32 grad accumulator."""
+
+    def split(x):
+        if x.ndim == 0:
+            return x
+        # positions (3, B, S) carry batch on axis 1
+        axis = 1 if x.ndim == 3 and x.shape[0] == 3 and x.dtype == jnp.int32 else 0
+        B = x.shape[axis]
+        mb = B // n_accum
+        if axis == 0:
+            return x.reshape(n_accum, mb, *x.shape[1:])
+        return jnp.moveaxis(x.reshape(x.shape[0], n_accum, mb, *x.shape[2:]), 1, 0)
+
+    split_batch = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        g_acc, loss_acc, tok_acc, aux_acc = carry
+        (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (g_acc, loss_acc + metrics["loss"], tok_acc + metrics["tokens"],
+                aux_acc + metrics["aux"]), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (g, loss, toks, aux), _ = jax.lax.scan(
+        body, (g0, jnp.float32(0.0), jnp.int32(0), jnp.float32(0.0)), split_batch
+    )
+    g = jax.tree.map(lambda x: x / n_accum, g)
+    return g, {"loss": loss / n_accum, "aux": aux / n_accum, "tokens": toks}
+
+
+def make_train_step(cfg, tcfg: TrainerConfig, *, policy=None, mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With ``tcfg.compress_pods`` and a mesh that has a "pod" axis, gradients
+    are computed per-pod under partial-manual shard_map and combined with the
+    int8 wire (distributed.compression); otherwise GSPMD's implicit all-reduce
+    handles cross-pod combination.
+    """
+    loss_fn = make_loss_fn(cfg, tcfg, policy=policy)
+    lr_fn = tcfg.lr_fn()
+
+    def compute_grads(params, batch):
+        if tcfg.grad_accum > 1:
+            return _accumulate_grads(loss_fn, params, batch, tcfg.grad_accum)
+        (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return g, metrics
+
+    use_compressed = (
+        tcfg.compress_pods and mesh is not None and "pod" in mesh.axis_names
+        and mesh.shape["pod"] > 1
+    )
+    if use_compressed:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.compression import pod_psum_compressed
+
+        def per_pod(params, batch):
+            g, metrics = compute_grads(params, batch)
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), g)
+            g, _ = pod_psum_compressed(g, zeros, axis="pod")
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+            return g, metrics
+
+        def grads_entry(params, batch):
+            batch_specs = jax.tree.map(
+                lambda x: P("pod") if getattr(x, "ndim", 0) and x.shape[0] != 3 else P(None, "pod"),
+                batch,
+            )
+            return jax.shard_map(
+                per_pod,
+                mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: P(), params), batch_specs),
+                out_specs=(jax.tree.map(lambda _: P(), params), P()),
+                axis_names={"pod"},
+                check_vma=False,
+            )(params, batch)
+    else:
+        grads_entry = compute_grads
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = grads_entry(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = lr_fn(opt_state.step)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay, quantized=tcfg.quantize_opt,
+        )
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; only launch/dryrun.py forces 512 host devices."""
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def fpga_hw():
+    from repro.core import fpga_small_core
+
+    return fpga_small_core()
+
+
+@pytest.fixture(scope="session")
+def resnet_artifact(fpga_hw):
+    from repro.core import CNN_WORKLOADS, StaticCompiler
+
+    return StaticCompiler(fpga_hw, n_tiles=16).compile(CNN_WORKLOADS["resnet50"]())
+
+
+@pytest.fixture(scope="session")
+def mobilenet_artifact(fpga_hw):
+    from repro.core import CNN_WORKLOADS, StaticCompiler
+
+    return StaticCompiler(fpga_hw, n_tiles=16).compile(CNN_WORKLOADS["mobilenet"]())

@@ -1,0 +1,136 @@
+"""Workload-balanced allocator (paper Eqs. 4-6): exactness + invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (
+    allocate,
+    allocate_contiguous_bs,
+    allocate_contiguous_dp,
+    allocate_lpt,
+    allocate_weighted,
+    partition_candidates,
+)
+
+times_strategy = st.lists(
+    st.floats(min_value=1e-6, max_value=10.0, allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=24,
+)
+
+
+def brute_force_contiguous(times, k, run_overhead=0.0):
+    """Exact reference: try every contiguous split (small n only)."""
+    n = len(times)
+    k = min(k, n)
+    best = math.inf
+
+    def rec(i, parts_left, cur_max):
+        nonlocal best
+        if i == n:
+            if cur_max < best:
+                best = cur_max
+            return
+        if parts_left == 0:
+            return
+        s = 0.0
+        for j in range(i, n):
+            s += times[j]
+            if n - (j + 1) >= parts_left - 1 if parts_left > 1 else True:
+                rec(j + 1, parts_left - 1, max(cur_max, s + run_overhead))
+
+    rec(0, k, 0.0)
+    return best
+
+
+class TestContiguousSolvers:
+    @given(times=times_strategy, k=st.integers(1, 8),
+           overhead=st.floats(0, 1.0, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_bs_equals_dp(self, times, k, overhead):
+        """The binary-search solver is exact: same makespan as the DP."""
+        _, ms_bs = allocate_contiguous_bs(times, k, run_overhead=overhead)
+        _, ms_dp = allocate_contiguous_dp(times, k, run_overhead=overhead)
+        assert ms_bs == pytest.approx(ms_dp, rel=1e-9)
+
+    @given(times=st.lists(st.floats(1e-3, 5.0, allow_nan=False), min_size=1, max_size=9),
+           k=st.integers(1, 4))
+    @settings(max_examples=100, deadline=None)
+    def test_dp_equals_bruteforce(self, times, k):
+        _, ms = allocate_contiguous_dp(times, k)
+        assert ms == pytest.approx(brute_force_contiguous(times, k), rel=1e-9)
+
+    @given(times=times_strategy, k=st.integers(1, 20),
+           overhead=st.floats(0, 1.0, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_partition_property(self, times, k, overhead):
+        """Every IFP assigned exactly once (paper Eq. 5); contiguity holds."""
+        runs, ms = allocate_contiguous_bs(times, k, run_overhead=overhead)
+        flat = [i for r in runs for i in r]
+        assert sorted(flat) == list(range(len(times)))
+        assert flat == sorted(flat)          # contiguous, in order
+        assert len(runs) == k
+        # makespan consistency
+        worst = max(
+            (sum(times[i] for i in r) + overhead) for r in runs if r
+        )
+        assert ms == pytest.approx(worst, rel=1e-9)
+
+    def test_precomputed_matches_direct(self):
+        times = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+        pre = partition_candidates(times, run_overhead=0.5)
+        a = allocate_contiguous_bs(times, 3, run_overhead=0.5)
+        b = allocate_contiguous_bs(times, 3, run_overhead=0.5, precomputed=pre)
+        assert a[1] == pytest.approx(b[1])
+        assert a[0] == b[0]
+
+    def test_more_cores_than_tiles(self):
+        runs, ms = allocate_contiguous_bs([2.0, 3.0], 16)
+        assert runs[0] == [0] and runs[1] == [1]
+        assert all(r == [] for r in runs[2:])
+        assert ms == pytest.approx(3.0)
+
+
+class TestLPT:
+    @given(times=times_strategy, k=st.integers(1, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_lpt_within_greedy_bound(self, times, k):
+        """Graham's list-scheduling bound: makespan <= sum/k + max."""
+        _, ms = allocate_lpt(times, k)
+        assert ms <= sum(times) / k + max(times) + 1e-9
+        assert ms >= max(max(times), sum(times) / k) - 1e-9
+
+    @given(times=times_strategy, k=st.integers(1, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_lpt_partition(self, times, k):
+        runs, _ = allocate_lpt(times, k)
+        assert sorted(i for r in runs for i in r) == list(range(len(times)))
+
+
+class TestWeighted:
+    def test_slow_core_gets_less(self):
+        times = [1.0] * 16
+        runs, _ = allocate_weighted(times, [1.0, 1.0, 1.0, 0.25])
+        # the 4x-slow core must receive the least work
+        loads = [len(r) for r in runs]
+        assert loads[3] == min(loads)
+        assert loads[3] <= loads[0] / 2
+
+    @given(times=times_strategy,
+           speeds=st.lists(st.floats(0.1, 2.0, allow_nan=False), min_size=1, max_size=6))
+    @settings(max_examples=100, deadline=None)
+    def test_weighted_partition(self, times, speeds):
+        runs, ms = allocate_weighted(times, speeds)
+        assert sorted(i for r in runs for i in r) == list(range(len(times)))
+        assert ms >= 0
+
+
+class TestAllocateFrontend:
+    @given(times=times_strategy, k=st.integers(1, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_never_worse_than_contiguous(self, times, k):
+        """allocate() may use LPT when it beats contiguity, never worse."""
+        _, ms = allocate(times, k)
+        _, ms_bs = allocate_contiguous_bs(times, k)
+        assert ms <= ms_bs + 1e-12

@@ -1,0 +1,159 @@
+"""Attention numerics: chunked online-softmax == naive reference across
+causal / sliding-window / GQA / offset variants, and the decode path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    KVCacheView, _decode_attn_xla, chunked_flash_attention, naive_attention,
+)
+
+
+def rand_qkv(key, B=2, Sq=48, Sk=48, H=4, Hkv=2, dh=16):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Sq, H, dh), jnp.float32)
+    k = jax.random.normal(kk, (B, Sk, Hkv, dh), jnp.float32)
+    v = jax.random.normal(kv, (B, Sk, Hkv, dh), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("block_k", [8, 17, 48, 64])
+def test_chunked_matches_naive(causal, window, block_k):
+    q, k, v = rand_qkv(jax.random.PRNGKey(0))
+    ref = naive_attention(q, k, v, causal=causal, window=window)
+    got = chunked_flash_attention(q, k, v, causal=causal, window=window,
+                                  block_k=block_k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_q_offset_decode_prefix():
+    """Cross-attention of the LAST 8 queries against the full K/V with
+    q_offset equals the tail of full self-attention."""
+    q, k, v = rand_qkv(jax.random.PRNGKey(1), Sq=32, Sk=32)
+    full = chunked_flash_attention(q, k, v, causal=True)
+    tail = chunked_flash_attention(q[:, -8:], k, v, causal=True, q_offset=24)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, -8:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_equals_repeated_kv_mha():
+    """GQA with Hkv=2 equals MHA with each kv head repeated group times."""
+    q, k, v = rand_qkv(jax.random.PRNGKey(2), H=8, Hkv=2)
+    got = chunked_flash_attention(q, k, v, causal=True)
+    k_full = jnp.repeat(k, 4, axis=2)
+    v_full = jnp.repeat(v, 4, axis=2)
+    ref = chunked_flash_attention(q, k_full, v_full, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+class TestDecodeAttention:
+    def test_decode_equals_full_attention_row(self):
+        """One decode step against a seeded cache == the last row of
+        full-sequence attention."""
+        B, S, H, Hkv, dh = 2, 24, 4, 2, 16
+        q, k, v = rand_qkv(jax.random.PRNGKey(3), B=B, Sq=S, Sk=S, H=H, Hkv=Hkv, dh=dh)
+        full = naive_attention(q, k, v, causal=True)
+
+        class Cfg:
+            sliding_window = None
+
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        out = _decode_attn_xla(
+            q[:, -1:, :, :], k, v, pos, jnp.full((B,), S - 1), Cfg
+        )
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_empty_slots_masked(self):
+        """Slots with pos = -1 (never written) contribute nothing."""
+        B, C, H, Hkv, dh = 1, 16, 2, 1, 8
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = jax.random.normal(kq, (B, 1, H, dh))
+        k = jax.random.normal(kk, (B, C, Hkv, dh))
+        v = jax.random.normal(kv, (B, C, Hkv, dh))
+
+        class Cfg:
+            sliding_window = None
+
+        pos_half = jnp.where(jnp.arange(C) < 8, jnp.arange(C), -1)[None]
+        out_half = _decode_attn_xla(q, k, v, pos_half, jnp.array([7]), Cfg)
+        out_ref = _decode_attn_xla(
+            q, k[:, :8], v[:, :8],
+            jnp.arange(8)[None], jnp.array([7]), Cfg,
+        )
+        np.testing.assert_allclose(np.asarray(out_half), np.asarray(out_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestFlashVJP:
+    """Custom-VJP flash attention: identical gradients to the reference,
+    with O(S·block) residuals instead of per-block score tensors."""
+
+    @pytest.mark.parametrize("causal,window,q_offset", [
+        (True, None, 0), (False, None, 0), (True, 16, 0), (True, None, 32),
+    ])
+    def test_grads_match_naive(self, causal, window, q_offset):
+        from repro.models.attention import flash_attention_train
+
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        B, Sq, Sk, H, Hkv, dh = 2, 24, 24 + q_offset, 4, 2, 16
+        q = jax.random.normal(ks[0], (B, Sq, H, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Sk, Hkv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Sk, Hkv, dh), jnp.float32)
+
+        def f(fn):
+            return lambda q, k, v: (fn(q, k, v) ** 2).sum()
+
+        flash = f(lambda q, k, v: flash_attention_train(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, block_k=8))
+        ref = f(lambda q, k, v: naive_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset))
+        g1 = jax.grad(flash, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_train_step_with_flash_impl(self):
+        """End-to-end: a train step with attn_impl='flash' matches 'xla'."""
+        from repro.configs import get_reduced
+        from repro.models import init_params
+        from repro.optim import adamw_init
+        from repro.training.steps import TrainerConfig, make_train_step
+
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+                 "labels": jnp.ones((2, 16), jnp.int32)}
+        pa, _, ma = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8, attn_impl="xla")))(params, opt, batch)
+        pb, _, mb = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8, attn_impl="flash")))(params, opt, batch)
+        assert float(ma["loss"]) == pytest.approx(float(mb["loss"]), rel=1e-4)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-3, atol=1e-4)
+
+
+class TestCacheDtypeStability:
+    def test_decode_never_promotes_cache(self):
+        """Regression: RoPE's f32 K/V must not promote the bf16 cache via
+        .at[].set — that round-trips the whole stacked cache through f32
+        converts every layer (EXPERIMENTS.md §Perf D3)."""
+        from repro.configs import get_reduced
+        from repro.models import init_params
+        from repro.models.attention import decode_attention, init_kv_cache
+
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        lp = jax.tree.map(lambda a: a[0], params["blocks"][0])["attn"]
+        cache = init_kv_cache(cfg, batch=2, max_len=8)
+        assert cache.k.dtype == jnp.bfloat16
+        x = jnp.ones((2, 1, cfg.d_model), jnp.bfloat16)
+        _, new_cache = decode_attention(lp, x, cache, jnp.zeros((2,), jnp.int32), cfg)
+        assert new_cache.k.dtype == jnp.bfloat16
+        assert new_cache.v.dtype == jnp.bfloat16

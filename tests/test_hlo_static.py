@@ -1,0 +1,180 @@
+"""HLO static analyzer: trip-count-aware FLOPs/bytes/collectives.
+
+This module IS the roofline's measurement instrument, so it gets its own
+correctness tests against compiled programs with analytically-known costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.hlo_static import HloModule, analyze_hlo
+
+
+def compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestFlops:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+        c = analyze_hlo(compiled_text(lambda x, y: x @ y, a, b))
+        assert c.flops == pytest.approx(2 * 128 * 256 * 64, rel=0.01)
+
+    def test_scan_multiplies_by_trip_count(self):
+        """THE bug this analyzer exists to fix: cost_analysis sees a scanned
+        body once; we must see it trip_count times."""
+        w = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+        def f(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+
+        c = analyze_hlo(compiled_text(f, w, x))
+        expect = 7 * 2 * 8 * 64 * 64
+        assert c.flops == pytest.approx(expect, rel=0.02)
+
+    def test_nested_scan(self):
+        w = jax.ShapeDtypeStruct((3, 5, 32, 32), jnp.float32)
+        x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+        def f(w, x):
+            def outer(c, wo):
+                def inner(ci, wi):
+                    return ci @ wi, None
+                c2, _ = jax.lax.scan(inner, c, wo)
+                return c2, None
+            y, _ = jax.lax.scan(outer, x, w)
+            return y
+
+        c = analyze_hlo(compiled_text(f, w, x))
+        expect = 3 * 5 * 2 * 4 * 32 * 32
+        assert c.flops == pytest.approx(expect, rel=0.02)
+
+    def test_grad_flops_about_3x_forward(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        w = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+
+        def loss(w, x):
+            return jnp.sum((x @ w) ** 2)
+
+        fwd = analyze_hlo(compiled_text(loss, w, a))
+        bwd = analyze_hlo(compiled_text(jax.grad(loss), w, a))
+        assert bwd.flops >= 1.8 * fwd.flops   # dL/dw adds x^T @ g
+
+
+class TestBytes:
+    def test_dynamic_slice_counts_slice_not_operand(self):
+        """A scan's dynamic-slice of stacked params must charge the slice,
+        not the whole stack, per iteration."""
+        w = jax.ShapeDtypeStruct((100, 64, 64), jnp.float32)   # 1.6 MB stack
+        x = jax.ShapeDtypeStruct((1, 64), jnp.float32)
+
+        def f(w, x):
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+
+        c = analyze_hlo(compiled_text(f, w, x))
+        stack_bytes = 100 * 64 * 64 * 4
+        # total traffic should be ~O(stack) (each slice read ~once), NOT
+        # O(100 * stack)
+        assert c.bytes < 20 * stack_bytes
+
+    def test_elementwise_bytes_scale_with_size(self):
+        a = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+        c = analyze_hlo(compiled_text(lambda x: x * 2 + 1, a))
+        nb = (1 << 20) * 4
+        assert nb <= c.bytes <= 6 * nb
+
+
+class TestCollectives:
+    def test_psum_wire_bytes(self):
+        """shard_map psum over 4 devices: all-reduce of the full array."""
+        if len(jax.devices()) < 2:
+            # single-device CPU: GSPMD elides the collective; assert that
+            c = analyze_hlo(compiled_text(lambda x: x + 1, jax.ShapeDtypeStruct((8,), jnp.float32)))
+            assert c.collective_bytes == 0
+            return
+
+    def test_collective_parse_from_text(self):
+        """Parse a hand-written module with known collectives."""
+        txt = """
+HloModule test, entry_computation_layout={(f32[256]{0})->f32[256]{0}}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[256]) -> f32[256] {
+  %p = f32[256]{0} parameter(0)
+  %ar = f32[256]{0} all-reduce(%p), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  ROOT %cp = f32[256]{0} collective-permute(%ar), channel_id=2, source_target_pairs={{0,1},{1,0}}
+}
+"""
+        c = analyze_hlo(txt)
+        assert c.collective_count == {"all-reduce": 1, "collective-permute": 1}
+        nb = 256 * 4
+        # all-reduce ring: 2*nb*(4-1)/4; permute: nb
+        assert c.collective_bytes == pytest.approx(2 * nb * 3 / 4 + nb)
+        assert c.raw_collective_bytes == pytest.approx(nb + nb)
+
+    def test_while_scales_collectives(self):
+        txt = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (t: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %t = (s32[], f32[128]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[128]{0} get-tuple-element(%t), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %ar = f32[128]{0} all-reduce(%x), channel_id=1, replica_groups=[1,2]<=[2], to_apply=%add
+  ROOT %out = (s32[], f32[128]{0}) tuple(%i2, %ar)
+}
+
+%cond (t: (s32[], f32[128])) -> pred[] {
+  %t = (s32[], f32[128]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %n = s32[] constant(6)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (p: f32[128]) -> f32[128] {
+  %p = f32[128]{0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128]{0}) tuple(%zero, %p)
+  %w = (s32[], f32[128]{0}) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+        c = analyze_hlo(txt)
+        assert c.collective_count == {"all-reduce": 6}   # trip count from cond
+        assert c.collective_bytes == pytest.approx(6 * 2 * 128 * 4 * (1 / 2))
+
+
+class TestParsing:
+    def test_tuple_types_with_index_comments(self):
+        line = ("  %while.217 = (s32[], bf16[4,256,1024]{2,1,0}, "
+                "/*index=5*/pred[1,4,256]{2,1,0}) while(%tuple.170), "
+                "condition=%c, body=%b")
+        from repro.distributed.hlo_static import _parse_instr_line
+
+        parsed = _parse_instr_line(line)
+        assert parsed is not None
+        name, rtype, opcode, rest = parsed
+        assert opcode == "while"
+        assert "pred" in rtype

@@ -1,0 +1,126 @@
+"""HRP leases (isolation invariants) + two-level IDM controllers."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ContextSwitchController, HRPError, InstructionRouter,
+    MultiCoreSyncController, ResourcePool, SwitchMode,
+)
+
+
+class TestResourcePool:
+    def test_disjoint_leases(self):
+        pool = ResourcePool(16)
+        a = pool.alloc("a", 8)
+        b = pool.alloc("b", 8)
+        assert not set(a.cores) & set(b.cores)
+        pool.check_isolation()
+
+    def test_oversubscription_rejected(self):
+        pool = ResourcePool(16)
+        pool.alloc("a", 12)
+        with pytest.raises(HRPError):
+            pool.alloc("b", 8)
+
+    def test_double_alloc_rejected(self):
+        pool = ResourcePool(16)
+        pool.alloc("a", 2)
+        with pytest.raises(HRPError):
+            pool.alloc("a", 2)
+
+    def test_resize_retains_cores(self):
+        pool = ResourcePool(16)
+        lease = pool.alloc("a", 8)
+        kept = lease.cores[:4]
+        smaller = pool.resize("a", 4)
+        assert smaller.cores == kept          # minimal migration
+        bigger = pool.resize("a", 6)
+        assert set(kept) <= set(bigger.cores)
+
+    def test_release_frees(self):
+        pool = ResourcePool(16)
+        pool.alloc("a", 16)
+        pool.release("a")
+        assert len(pool.free_cores()) == 16
+
+    def test_port_budget_at_construction(self):
+        with pytest.raises(HRPError):
+            ResourcePool(16, cores_per_ddr=8, ddr_port_bits=512, core_port_bits=128)
+
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "resize", "release"]),
+                  st.sampled_from(["a", "b", "c", "d"]),
+                  st.integers(1, 8)),
+        max_size=30,
+    ))
+    @settings(max_examples=100, deadline=None)
+    def test_invariants_hold_under_any_sequence(self, ops):
+        """Property: after ANY alloc/resize/release sequence the pool
+        maintains disjointness and the DDR port budget."""
+        pool = ResourcePool(16)
+        for kind, tenant, n in ops:
+            try:
+                if kind == "alloc":
+                    pool.alloc(tenant, n)
+                elif kind == "resize":
+                    pool.resize(tenant, n)
+                else:
+                    pool.release(tenant)
+            except HRPError:
+                pass
+            pool.check_isolation()
+            pool.check_bandwidth()
+        total = sum(l.n_cores for l in pool.leases.values())
+        assert total + len(pool.free_cores()) == 16
+
+
+class TestSyncController:
+    def test_barrier_fires_once_all_arrive(self):
+        sync = MultiCoreSyncController()
+        sync.configure("t", {0, 1, 2})
+        assert not sync.sync_local("t", 0)
+        assert not sync.sync_local("t", 1)
+        assert sync.sync_local("t", 2)       # sync_global
+        # barrier resets
+        assert not sync.sync_local("t", 0)
+
+    def test_foreign_core_rejected(self):
+        sync = MultiCoreSyncController()
+        sync.configure("t", {0, 1})
+        with pytest.raises(KeyError):
+            sync.sync_local("t", 5)
+
+
+class TestContextSwitch:
+    def test_layer_level_captures_at_any_boundary(self):
+        ctx = ContextSwitchController()
+        ctx.request_switch("t", SwitchMode.LAYER_LEVEL)
+        c = ctx.boundary("t", layer_idx=17, n_layers=54, inference_id=3)
+        assert c is not None and c.layer_idx == 17
+        # request consumed
+        assert ctx.boundary("t", 18, 54, 3) is None
+
+    def test_task_level_waits_for_task_end(self):
+        ctx = ContextSwitchController()
+        ctx.request_switch("t", SwitchMode.TASK_LEVEL)
+        assert ctx.boundary("t", 17, 54, 3) is None       # mid-task: no switch
+        c = ctx.boundary("t", 54, 54, 3)
+        assert c is not None and c.layer_idx == 0          # restart clean
+
+    def test_load_pops_context(self):
+        ctx = ContextSwitchController()
+        ctx.request_switch("t", SwitchMode.LAYER_LEVEL)
+        ctx.boundary("t", 5, 10, 0)
+        assert ctx.load("t").layer_idx == 5
+        assert ctx.load("t") is None
+
+
+class TestRouter:
+    def test_rejects_core_outside_lease(self):
+        with pytest.raises(PermissionError):
+            InstructionRouter.route([0, 1, 9], {0, 1, 2})
+
+    def test_maps_local_to_physical(self):
+        m = InstructionRouter.route([4, 7], {4, 7})
+        assert m == {0: 4, 1: 7}

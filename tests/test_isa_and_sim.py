@@ -1,0 +1,114 @@
+"""Instruction IR + latency simulator: dependency/overlap semantics."""
+
+import pytest
+
+from repro.core import (
+    Chain, HardwareModel, Op, Program, Unit, concat, simulate,
+    simulate_layer_barrier,
+)
+from repro.core.isa import SYNC_PROGRAM
+
+
+def flat_hw(**kw):
+    """1 B/s, 1 FLOP/s hardware: durations == raw flops/bytes (no quant)."""
+    args = dict(name="flat", flops_per_sec=1.0, mem_bw=1.0, bw_eff=1.0,
+                sync_latency=0.0, instr_overhead=0.0)
+    args.update(kw)
+    return HardwareModel(**args)
+
+
+class TestProgram:
+    def test_emit_and_validate(self):
+        p = Program()
+        a = p.load(10.0)
+        b = p.emit(Op.CONV, flops=5.0, deps=[a])
+        p.save(3.0, deps=[b])
+        p.validate()
+        assert len(p) == 3
+        assert p.total_flops == 5.0
+        assert p.total_bytes == 13.0
+
+    def test_forward_dep_rejected(self):
+        p = Program()
+        p.emit(Op.CONV, flops=1.0, deps=[5])
+        with pytest.raises(ValueError):
+            p.validate()
+
+    def test_concat_relabels(self):
+        p1 = Program(); a = p1.load(1.0); p1.emit(Op.CONV, flops=1.0, deps=[a])
+        p2 = Program(); b = p2.load(2.0); p2.emit(Op.CONV, flops=2.0, deps=[b])
+        c = concat([p1, p2])
+        c.validate()
+        assert len(c) == 4
+        assert c.instrs[3].deps == [2]
+
+
+class TestSimulator:
+    def test_units_overlap(self):
+        """LOAD and CONV are different units: independent instrs overlap."""
+        p = Program()
+        p.load(10.0)                       # 10 s on LOAD
+        p.emit(Op.CONV, flops=10.0)        # 10 s on CONV, no dep -> parallel
+        assert simulate(p, flat_hw()) == pytest.approx(10.0)
+
+    def test_dependency_serializes(self):
+        p = Program()
+        a = p.load(10.0)
+        p.emit(Op.CONV, flops=10.0, deps=[a])
+        assert simulate(p, flat_hw()) == pytest.approx(20.0)
+
+    def test_same_unit_serializes(self):
+        p = Program()
+        p.load(10.0)
+        p.load(5.0)
+        assert simulate(p, flat_hw()) == pytest.approx(15.0)
+
+    def test_load_compute_pipeline(self):
+        """Grouped loads overlap with compute of the previous group — the
+        reason the ISA carries dependency fields (paper §5.1)."""
+        p = Program()
+        prev = None
+        for g in range(4):
+            ld = p.load(10.0)
+            cv = p.emit(Op.CONV, flops=10.0, deps=[ld])
+        # pipeline: 10 (first load) + 4*10 (compute, loads hidden) = 50
+        assert simulate(p, flat_hw()) == pytest.approx(50.0)
+
+    def test_chain_equals_concat(self):
+        p1 = Program(); a = p1.load(4.0); p1.emit(Op.CONV, flops=3.0, deps=[a])
+        p2 = Program(); b = p2.load(2.0); p2.emit(Op.CONV, flops=7.0, deps=[b])
+        hw = flat_hw()
+        assert simulate(Chain([p1, p2]), hw) == pytest.approx(
+            simulate(concat([p1, p2]), hw)
+        )
+
+    def test_compute_tile_quantization(self):
+        """Eq. 2 ceil-quantization: a 1-channel conv on an (1,1,8)-tile core
+        wastes 7/8 of the array."""
+        hw = flat_hw(flops_per_sec=8.0, compute_tile=(1, 1, 8))
+        p = Program()
+        p.emit(Op.CONV, flops=8.0, shape=(1, 1, 1))
+        assert simulate(p, hw) == pytest.approx(8.0)   # util 1/8 -> 8x slower
+        p2 = Program()
+        p2.emit(Op.CONV, flops=8.0, shape=(1, 1, 8))
+        assert simulate(p2, hw) == pytest.approx(1.0)
+
+    def test_layer_barrier_adds_sync(self):
+        hw = flat_hw(sync_latency=0.5)
+        mk = lambda f: Chain([_conv_prog(f)])
+        per_core = [[mk(4.0), mk(1.0)], [mk(2.0), mk(3.0)]]
+        t = simulate_layer_barrier(per_core, hw)
+        # layer0: max(4,2)=4; layer1: max(1,3)=3; +2 syncs
+        assert t == pytest.approx(4 + 3 + 1.0)
+
+
+def _conv_prog(flops):
+    p = Program()
+    p.emit(Op.CONV, flops=flops)
+    return p
+
+
+class TestSyncProgram:
+    def test_shared_sync_is_single_sync_instr(self):
+        assert len(SYNC_PROGRAM) == 1
+        assert SYNC_PROGRAM.instrs[0].is_sync

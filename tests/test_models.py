@@ -1,0 +1,180 @@
+"""Model zoo: per-arch smoke tests (reduced configs) + numerics invariants.
+
+Every assigned architecture instantiates its REDUCED config, runs one
+forward and one train step on CPU, and asserts output shapes + finiteness.
+Prefill→decode continuity is checked against the full-sequence forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.models import (
+    decode_step, encoder_forward, forward, init_caches, init_params, prefill,
+)
+from repro.models.transformer import n_blocks, period_len, period_structure
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=16):
+    batch = {"tokens": jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) % cfg.vocab}
+    kw = {}
+    if cfg.family == "vlm":
+        n_patch = 4
+        batch["tokens"] = batch["tokens"][:, : S - n_patch]
+        kw["extra_embeds"] = jnp.ones((B, n_patch, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.01
+        kw["positions"] = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (3, B, S)).copy()
+    return batch, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = get_reduced(arch)
+        params = init_params(cfg, KEY)
+        B, S = 2, 16
+        batch, kw = make_batch(cfg, B, S)
+        if cfg.family == "audio":
+            frames = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.01
+            kw["enc_out"] = encoder_forward(params, frames, cfg)
+        out = forward(params, batch["tokens"], cfg, **kw)
+        assert out.hidden.shape == (B, S, cfg.d_model)
+        assert bool(jnp.isfinite(out.hidden.astype(jnp.float32)).all())
+
+    def test_one_train_step(self, arch):
+        from repro.optim import adamw_init
+        from repro.training.steps import TrainerConfig, make_train_step
+
+        cfg = get_reduced(arch)
+        params = init_params(cfg, KEY)
+        B, S = 2, 16
+        batch, kw = make_batch(cfg, B, S)
+        batch["labels"] = jnp.ones((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            batch["extra_embeds"] = kw["extra_embeds"]
+            batch["positions"] = kw["positions"]
+        if cfg.family == "audio":
+            batch["frames"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.01
+        step = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8)))
+        p2, o2, m = step(params, adamw_init(params), batch)
+        assert bool(jnp.isfinite(m["loss"]))
+        assert bool(jnp.isfinite(m["grad_norm"]))
+        assert float(m["loss"]) < 2.0 * np.log(cfg.vocab_padded)
+        # params actually moved
+        moved = jax.tree.reduce(
+            lambda a, b: a or b,
+            jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, p2),
+        )
+        assert moved
+
+    def test_full_config_matches_assignment(self, arch):
+        """Full configs carry the exact assigned hyperparameters."""
+        cfg = get_config(arch)
+        assert cfg.n_layers % period_len(cfg) == 0
+        assert cfg.param_count() > 0
+        assert cfg.param_count(active_only=True) <= cfg.param_count()
+
+
+SPOT = {
+    # analytic param-count spot checks vs public figures (±12%: padding etc.)
+    "qwen3-0.6b": 0.60e9,          # 0.44B blocks + 0.156B tied embedding
+    "starcoder2-7b": 7.4e9,   # gelu 2-matrix MLP
+    "qwen3-32b": 32.8e9,
+    "command-r-plus-104b": 104e9,
+    "mixtral-8x22b": 141e9,
+    "deepseek-moe-16b": 16.4e9,
+    "mamba2-370m": 0.37e9,
+}
+
+
+@pytest.mark.parametrize("arch,expected", sorted(SPOT.items()))
+def test_param_count_spot(arch, expected):
+    got = get_config(arch).param_count()
+    assert got == pytest.approx(expected, rel=0.13), f"{arch}: {got/1e9:.2f}B"
+
+
+class TestPrefillDecodeContinuity:
+    @pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x22b", "mamba2-370m",
+                                      "jamba-1.5-large-398b", "whisper-base"])
+    def test_decode_matches_forward(self, arch):
+        """prefill(t[:‑1]) + decode(t[-1]) logits == forward(t) last logits."""
+        cfg = get_reduced(arch)
+        params = init_params(cfg, KEY)
+        B, S = 2, 12
+        toks = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 7) % cfg.vocab
+        kw = {}
+        if cfg.family == "audio":
+            frames = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)) * 0.01
+            kw["enc_out"] = encoder_forward(params, frames, cfg)
+
+        # ground truth: full forward over all S tokens
+        from repro.models import logits_fn
+
+        out = forward(params, toks, cfg, **kw)
+        ref = logits_fn(params, out.hidden[:, -1:, :], cfg)[:, 0]
+
+        # prefill first S-1, decode token S-1
+        logits_p, caches = prefill(params, toks[:, :-1], cfg, max_len=S + 4, **kw)
+        cur = jnp.full((B,), S - 1, dtype=jnp.int32)
+        got, _ = decode_step(params, toks[:, -1], caches, cur, cfg)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            rtol=0.05, atol=0.05,
+        )
+
+
+class TestSlidingWindow:
+    def test_ring_buffer_cache_is_window_sized(self):
+        cfg = get_reduced("mixtral-8x22b")
+        assert cfg.sliding_window == 64
+        caches = init_caches(cfg, batch=2, max_len=512)
+        for kv in caches.kv.values():
+            assert kv.k.shape[2] == cfg.sliding_window   # (nb, B, C, Hkv, dh)
+
+    def test_ring_buffer_holds_last_window_positions(self):
+        """After prefilling S > window tokens, the ring buffer contains
+        exactly positions [S-window, S) — older K/V were overwritten (the
+        O(window) memory property that makes long_500k runnable)."""
+        cfg = get_reduced("mixtral-8x22b")
+        params = init_params(cfg, KEY)
+        S, W = 80, cfg.sliding_window     # 80 > 64
+        toks = (jnp.arange(S, dtype=jnp.int32)[None] * 3) % cfg.vocab
+        _, caches = prefill(params, toks, cfg, max_len=S + 2)
+        for kv in caches.kv.values():
+            pos = np.asarray(kv.pos)      # (nb, B, C)
+            assert pos.shape[-1] == W
+            held = set(pos[0, 0].tolist())
+            assert held == set(range(S - W, S))
+
+    def test_single_layer_window_masks_expired(self):
+        """At the ATTENTION level (single layer — no cross-layer receptive
+        field), tokens outside the window are provably ignored."""
+        from repro.models.attention import naive_attention
+
+        kq, kk, kv = jax.random.split(KEY, 3)
+        B, S, H, dh, W = 1, 32, 2, 8, 8
+        q = jax.random.normal(kq, (B, S, H, dh))
+        k = jax.random.normal(kk, (B, S, H, dh))
+        v = jax.random.normal(kv, (B, S, H, dh))
+        out1 = naive_attention(q, k, v, causal=True, window=W)
+        # perturb K/V older than the window for the last query row
+        k2 = k.at[:, :8].set(0.0)
+        v2 = v.at[:, :8].set(0.0)
+        out2 = naive_attention(q, k2, v2, causal=True, window=W)
+        np.testing.assert_allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestPeriodStructure:
+    def test_jamba_interleave(self):
+        cfg = get_config("jamba-1.5-large-398b")
+        specs = period_structure(cfg)
+        assert len(specs) == cfg.attn_every
+        assert sum(1 for s in specs if s.mixer == "attn") == 1  # 1:7 ratio
+        assert n_blocks(cfg) * len(specs) == cfg.n_layers
+
+    def test_mamba_is_attention_free(self):
+        cfg = get_config("mamba2-370m")
+        assert all(s.mixer == "ssm" for s in period_structure(cfg))

@@ -1,0 +1,143 @@
+"""Serving stack: generate loop, continuous batcher, two-stage compiler
+cache + tenancy (the TPU-side instantiation of the paper's machinery)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.engine import ServeConfig, generate
+from repro.serving.tenancy import TwoStageCompiler, VirtualAcceleratorPool
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestGenerate:
+    def test_greedy_deterministic(self):
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        prompt = (jnp.arange(8, dtype=jnp.int32)[None] * 5) % cfg.vocab
+        a = generate(params, cfg, prompt, n_new=6)
+        b = generate(params, cfg, prompt, n_new=6)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.shape == (1, 6)
+        assert int(a.max()) < cfg.vocab      # padding never sampled
+
+    def test_generate_matches_teacher_forced_forward(self):
+        """Greedy decode token t+1 equals argmax of forward() at position t
+        when fed its own outputs — the serve path is the train path."""
+        from repro.models import forward, logits_fn
+
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        prompt = (jnp.arange(6, dtype=jnp.int32)[None] * 3 + 1) % cfg.vocab
+        out = generate(params, cfg, prompt, n_new=4)
+        seq = jnp.concatenate([prompt, out[:, :3]], axis=1)
+        h = forward(params, seq, cfg).hidden
+        logits = logits_fn(params, h, cfg)[..., : cfg.vocab]
+        ref_last = jnp.argmax(logits[:, -1], axis=-1)
+        np.testing.assert_array_equal(np.asarray(ref_last), np.asarray(out[:, 3]))
+
+
+class TestContinuousBatcher:
+    def test_all_requests_complete(self):
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        b = ContinuousBatcher(params, cfg, slots=4, prompt_len=8, max_len=32)
+        reqs = [
+            Request(rid=i, prompt=np.arange(1 + i % 7, dtype=np.int32) + 1,
+                    max_new=5 + i % 3)
+            for i in range(10)
+        ]
+        for r in reqs:
+            b.submit(r)
+        stats = b.run(max_steps=500)
+        assert stats.completed == 10
+        assert all(r.done for r in reqs)
+        assert all(len(r.out) >= 1 for r in reqs)
+        assert 0 < stats.occupancy <= 1
+
+    def test_batched_requests_match_solo_run(self):
+        """Isolation inside the batcher: a request's tokens are identical
+        whether it shares slots with others or runs alone."""
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        prompt = np.array([3, 1, 4, 1, 5], dtype=np.int32)
+
+        solo = ContinuousBatcher(params, cfg, slots=4, prompt_len=8, max_len=32)
+        r_solo = Request(rid=0, prompt=prompt, max_new=6)
+        solo.submit(r_solo)
+        solo.run(max_steps=100)
+
+        busy = ContinuousBatcher(params, cfg, slots=4, prompt_len=8, max_len=32)
+        r_busy = Request(rid=0, prompt=prompt, max_new=6)
+        busy.submit(r_busy)
+        for i in range(3):
+            busy.submit(Request(rid=i + 1,
+                                prompt=np.arange(2 + i, dtype=np.int32) + 2,
+                                max_new=6))
+        busy.run(max_steps=100)
+        assert r_solo.out == r_busy.out
+
+
+class TestTenancy:
+    def test_pool_leases_disjoint_meshes(self):
+        pool = VirtualAcceleratorPool(devices=jax.devices() * 8,
+                                      devices_per_core=1, cores_per_group=4)
+        la = pool.lease("a", 2)
+        lb = pool.lease("b", 2)
+        assert not set(la.cores) & set(lb.cores)
+        ma = pool.mesh_for(la)
+        assert ma.devices.shape == (2, 1)
+
+    def test_hbm_admission_control(self):
+        from repro.configs import get_config
+        from repro.core.hrp import HRPError
+
+        pool = VirtualAcceleratorPool(devices=jax.devices() * 4, devices_per_core=1)
+        lease = pool.lease("t", 1)
+        big = get_config("command-r-plus-104b")      # 104B params never fit 1 dev
+        with pytest.raises(HRPError):
+            pool.check_hbm(big, lease, batch=1, max_len=1024)
+        small = get_reduced("qwen3-0.6b")
+        pool.check_hbm(small, lease, batch=2, max_len=64)   # fits fine
+
+    def test_two_stage_reconfigure_uses_cache(self):
+        """Online reconfigure must never recompile: it resizes the lease and
+        swaps in the statically-compiled executable (~ms)."""
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        pool = VirtualAcceleratorPool(devices=jax.devices() * 4, devices_per_core=1)
+        comp = TwoStageCompiler(pool)
+
+        def program(x):
+            return x * 2.0
+
+        abstract = (jax.ShapeDtypeStruct((8,), jnp.float32),)
+        import jax.sharding as jsh
+
+        def mesh_builder(n):
+            devs = np.array(jax.devices() * n, dtype=object)[:n].reshape(n, 1)
+            return jsh.Mesh(devs, ("data", "model"))
+
+        progs = comp.static_compile("toy", program, abstract,
+                                    lease_sizes=[1, 2, 4], mesh_builder=mesh_builder)
+        assert set(progs) == {1, 2, 4}
+        static_cost = sum(p.compile_seconds + p.lowered_seconds for p in progs.values())
+
+        pool.lease("t", 1)
+        prog, _, timing = comp.reconfigure("t", "toy", 4)
+        assert prog.n_cores == 4
+        assert timing["t_context"] < max(0.05, static_cost / 10)
+
+    def test_reconfigure_uncovered_size_raises(self):
+        from repro.core.hrp import HRPError
+
+        pool = VirtualAcceleratorPool(devices=jax.devices() * 4, devices_per_core=1)
+        comp = TwoStageCompiler(pool)
+        pool.lease("t", 1)
+        with pytest.raises(HRPError):
+            comp.reconfigure("t", "missing", 2)

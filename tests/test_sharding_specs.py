@@ -1,0 +1,106 @@
+"""Sharding rules: spec pytrees match param pytrees structurally, and every
+sharded dim divides its mesh axis (the invariant the 512-device dry-run
+enforces for real)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.distributed.sharding import (
+    batch_shard, cache_specs, make_policy, param_specs, train_batch_specs,
+)
+from repro.models import init_caches, init_params
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """Structure-only mesh: abstract device array is fine for spec checks."""
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+MESH = fake_mesh()
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestParamSpecs:
+    def test_structure_matches_params(self, arch):
+        cfg = get_config(arch)
+        params_abs = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+        specs = param_specs(cfg, MESH)
+        # identical treedef
+        t1 = jax.tree.structure(params_abs)
+        t2 = jax.tree.structure(specs, is_leaf=_is_p)
+        assert t1 == t2
+
+    def test_sharded_dims_divide_axes(self, arch):
+        cfg = get_config(arch)
+        params_abs = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+        specs = param_specs(cfg, MESH)
+        flat_p = jax.tree.leaves(params_abs)
+        flat_s = jax.tree.leaves(specs, is_leaf=_is_p)
+        sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+        for leaf, spec in zip(flat_p, flat_s):
+            assert len(spec) <= len(leaf.shape), (leaf.shape, spec)
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+                if ax is None:
+                    continue
+                axs = (ax,) if isinstance(ax, str) else ax
+                n = int(np.prod([sizes[a] for a in axs]))
+                assert dim % n == 0, f"{arch}: dim {dim} !% {axs} in {spec}"
+
+    def test_cache_specs_structure(self, arch):
+        cfg = get_config(arch)
+        B = 32
+        caches_abs = jax.eval_shape(lambda: init_caches(cfg, 4, 64))
+        specs = cache_specs(cfg, MESH, batch=B)
+        # same top-level key sets (period-aligned, full config both sides)
+        assert set(specs.kv.keys()) == set(caches_abs.kv.keys())
+        assert set(specs.ssm.keys()) == set(caches_abs.ssm.keys())
+
+
+class TestBatchSharding:
+    def test_batch_shard_divisibility(self):
+        assert batch_shard(MESH, 256) == ("data",)
+        assert batch_shard(MESH, 7) is None
+        assert batch_shard(MESH, 16) == ("data",)
+
+    def test_multipod_batch_axes(self):
+        mesh3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+        assert batch_shard(mesh3, 256) == ("pod", "data")
+        assert batch_shard(mesh3, 2) == ("pod",)
+
+    def test_train_batch_specs_family_extras(self):
+        cfg = get_config("qwen2-vl-72b")
+        specs = train_batch_specs(cfg, MESH, batch=256)
+        assert "extra_embeds" in specs and "positions" in specs
+        # positions (3, B, S): batch on axis 1
+        assert specs["positions"][0] is None
+
+
+class TestPolicy:
+    def test_policy_constrains_known_names_only(self):
+        cfg = get_config("qwen3-32b")
+        pol = make_policy(cfg, MESH, batch=256)
+        x = jnp.zeros((4, 8, 16))
+        assert pol(x, "unknown-name") is x     # passthrough
+
+    def test_vocab_parallel_flag(self):
+        cfg = get_config("qwen3-32b")        # vocab_padded % 16 == 0
+        pol = make_policy(cfg, MESH, batch=256)
+        assert pol.vocab_parallel
+
+    def test_embed_fallback_without_vocab_parallel(self):
+        cfg = get_reduced("qwen3-0.6b")
+        pol = make_policy(cfg, MESH, batch=256)
+        pol.vocab_parallel = False
+        tbl = jnp.arange(20.0).reshape(10, 2)
+        ids = jnp.array([[1, 3], [2, 0]])
+        out = pol.embed(tbl, ids)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(tbl[ids]))

@@ -1,0 +1,121 @@
+"""Training loop: loss decreases, grad-accum equivalence, quantized AdamW,
+schedules, clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data.synthetic import make_batch
+from repro.models import init_params
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedules import SCHEDULES
+from repro.training.steps import TrainerConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestTrainingLoop:
+    def test_loss_decreases_on_fixed_batch(self):
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        step = jax.jit(make_train_step(cfg, TrainerConfig(lr=3e-3, loss_chunk=16)))
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, seq_len=32, batch=4, step=0).items()}
+        first = None
+        for i in range(25):
+            params, opt, m = step(params, opt, batch)
+            if first is None:
+                first = float(m["loss"])
+        last = float(m["loss"])
+        assert last < first * 0.7, (first, last)
+
+    def test_grad_accum_equivalence(self):
+        """grad_accum=2 on batch 4 == grad_accum=1 (same grads up to f32
+        accumulation noise) — the metrics and updated params must agree."""
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, seq_len=16, batch=4, step=0).items()}
+        s1 = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8, grad_accum=1)))
+        s2 = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8, grad_accum=2)))
+        p1, _, m1 = s1(params, opt, batch)
+        p2, _, m2 = s2(params, opt, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=2e-2, atol=2e-3,
+            )
+
+    def test_remat_full_matches_none(self):
+        """Activation checkpointing changes memory, not math."""
+        cfg = get_reduced("qwen3-0.6b")
+        params = init_params(cfg, KEY)
+        opt = adamw_init(params)
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, seq_len=16, batch=2, step=0).items()}
+        pa, _, ma = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8, remat="none")))(params, opt, batch)
+        pb, _, mb = jax.jit(make_train_step(cfg, TrainerConfig(loss_chunk=8, remat="full")))(params, opt, batch)
+        assert float(ma["loss"]) == pytest.approx(float(mb["loss"]), rel=1e-4)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), rtol=1e-3, atol=1e-4)
+
+
+class TestAdamW:
+    def test_quantized_close_to_f32(self):
+        """8-bit AdamW tracks full-precision AdamW within quantization noise
+        over a few steps."""
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.asarray(rng.normal(size=(64, 64)) * 0.1, jnp.float32)}
+        g = {"w": jnp.asarray(rng.normal(size=(64, 64)) * 0.01, jnp.float32)}
+        p_f, s_f = dict(params), adamw_init(params)
+        p_q, s_q = dict(params), adamw_init(params, quantize=True)
+        for _ in range(5):
+            p_f, s_f = adamw_update(g, s_f, p_f, lr=1e-2)
+            p_q, s_q = adamw_update(g, s_q, p_q, lr=1e-2, quantized=True)
+        diff = np.abs(np.asarray(p_q["w"]) - np.asarray(p_f["w"]))
+        # int8 sqrt-space moments: per-element drift bounded, mean tiny
+        assert float(diff.mean()) < 2e-3
+        assert float(diff.max()) < 5e-2
+        corr = np.corrcoef(np.asarray(p_q["w"]).ravel(), np.asarray(p_f["w"]).ravel())[0, 1]
+        assert corr > 0.999
+
+    def test_quantized_state_memory(self):
+        """8-bit moments cost ~2 B/param vs 8 B for f32."""
+        params = {"w": jnp.zeros((1024, 256), jnp.float32)}
+        s = adamw_init(params, quantize=True)
+        q_bytes = (s.m["w"].q.size * 1 + s.m["w"].scale.size * 4) * 2
+        f_bytes = 2 * params["w"].size * 4
+        assert q_bytes < f_bytes / 3
+
+    def test_weight_decay_shrinks_params(self):
+        params = {"w": jnp.ones((8,), jnp.float32)}
+        g = {"w": jnp.zeros((8,), jnp.float32)}
+        s = adamw_init(params)
+        p2, _ = adamw_update(g, s, params, lr=1e-1, weight_decay=0.5)
+        assert float(p2["w"][0]) < 1.0
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 10.0), "b": jnp.full((4,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(np.sqrt(800), rel=1e-5)
+        from repro.optim import global_norm
+
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+class TestSchedules:
+    def test_warmup_cosine(self):
+        fn = SCHEDULES["warmup_cosine"](1e-3, 10, 100)
+        assert float(fn(0)) < float(fn(9))
+        assert float(fn(10)) == pytest.approx(1e-3, rel=1e-3)
+        assert float(fn(99)) < 1e-3 * 0.2
+
+    def test_constant(self):
+        fn = SCHEDULES["constant"](5e-4)
+        assert float(fn(0)) == float(fn(1000)) == pytest.approx(5e-4)
