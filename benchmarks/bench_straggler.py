@@ -14,23 +14,28 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import ResourcePool, VirtualEngine
+from repro.core import Hypervisor, ResourcePool, TenantSpec, VirtualEngine
 
 from .common import small_core, static_artifact, write_csv
 
 HORIZON = 2.0
 CORES = 8
+PROBE_EVERY = 0.05   # hypervisor straggler-probe period (simulated seconds)
 
 
 def _throughput(slowdown: float, mitigate: bool) -> tuple:
+    """Mitigation is hypervisor-driven: periodic straggler-probe events sweep
+    every tenant's lease and re-balance through the weighted dynamic compiler
+    when a core exceeds the threshold."""
     pool = ResourcePool(n_cores=16)
-    eng = VirtualEngine(pool, small_core(), mitigate_stragglers=mitigate,
-                        straggler_threshold=1.3)
+    eng = VirtualEngine(pool, small_core(), straggler_threshold=1.3)
     art = static_artifact("resnet50")
-    eng.admit("t0", art, CORES)
+    hv = Hypervisor(pool, policy="no_realloc", executor=eng,
+                    probe_interval=PROBE_EVERY if mitigate else None)
+    hv.schedule_arrival(TenantSpec("t0", CORES, artifact=art), at=0.0)
     if slowdown != 1.0:
         eng.core_slowdown[0] = slowdown   # core 0 of the lease is slow
-    m = eng.run(HORIZON)
+    m = hv.run(HORIZON)
     return m["t0"].throughput(HORIZON), m["t0"].rebalances
 
 

@@ -6,6 +6,11 @@ Two tenants share one node through the VirtualAcceleratorPool (disjoint
 leases = the paper's SDM isolation), each running a ContinuousBatcher: real
 prefill + decode over a reduced qwen3 model, continuous admission into free
 slots, greedy sampling, per-request completion tracking.
+
+Placement goes through the same Hypervisor as the simulation engine: the
+``priority`` policy grants alice (priority 2) her full request and bob the
+rest; when bob departs, a policy-driven reconfiguration grows alice — the
+serving stack never calls the pool ad-hoc.
 """
 
 import sys
@@ -16,9 +21,10 @@ import numpy as np
 import jax
 
 from repro.configs import get_reduced
+from repro.core import TenantSpec
 from repro.models import init_params
 from repro.serving.batcher import ContinuousBatcher, Request
-from repro.serving.tenancy import VirtualAcceleratorPool
+from repro.serving.tenancy import VirtualAcceleratorPool, make_serving_hypervisor
 
 
 def main() -> None:
@@ -28,11 +34,15 @@ def main() -> None:
 
     pool = VirtualAcceleratorPool(devices=list(jax.devices()) * 16,
                                   devices_per_core=1)
+    hv, ex = make_serving_hypervisor(pool, policy="priority")
     print(f"pool: {pool.n_cores} cores; model: {cfg.name} "
-          f"({cfg.param_count()/1e6:.1f}M params)")
+          f"({cfg.param_count()/1e6:.1f}M params); policy: priority")
 
-    for tenant, n_cores, n_req in (("alice", 12, 10), ("bob", 4, 6)):
-        lease = pool.lease(tenant, n_cores)
+    for tenant, n_cores, n_req, prio in (("alice", 12, 10, 2.0),
+                                         ("bob", 4, 6, 1.0)):
+        if not hv.admit(TenantSpec(tenant, n_cores, priority=prio)):
+            raise RuntimeError(f"{tenant} was not admitted (waiting: {hv.waiting_tenants()})")
+        lease = pool.pool.lease_of(tenant)
         batcher = ContinuousBatcher(params, cfg, slots=4, prompt_len=12,
                                     max_len=40)
         reqs = []
@@ -50,7 +60,14 @@ def main() -> None:
               f"occupancy {stats.occupancy:.2f}")
         print(f"  sample output (req 0): {reqs[0].out}")
 
-    # isolation invariant held throughout
+    # bob's service drains; the hypervisor reclaims his cores and the policy
+    # regrows alice via an explicit reconfiguration signal
+    hv.depart("bob")
+    hv.resize_request("alice", 16)
+    print(f"after bob departs + policy regrow: {hv.allocation()} "
+          f"({len(ex.reconfig_log)} policy-driven reconfigurations)")
+
+    # isolation invariant held throughout (also re-checked after every event)
     pool.pool.check_isolation()
     pool.pool.check_bandwidth()
     print("isolation + bandwidth budget invariants: OK")

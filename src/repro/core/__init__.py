@@ -4,6 +4,21 @@ Pipeline:  workload (layer table)
         -> StaticCompiler   (offline: tiled IFPs + latency LUT)     §5.2.1
         -> DynamicCompiler  (online ~ms: workload-balanced realloc) §5.2.2
         -> VirtualEngine    (HRP leases + two-level IDM + barriers) §4
+        -> Hypervisor       (global event loop + realloc policies)  §4.1
+
+The Hypervisor layer is the scheduling core everything else rides on: one
+time-ordered event queue (`repro.core.events`) of tenant arrivals,
+departures, request completions, reconfiguration signals and straggler
+probes, consumed by `repro.core.hypervisor.Hypervisor`, which owns the
+`ResourcePool` and asks a pluggable reallocation policy (``even_split``,
+``weighted_by_workload``, ``priority``, or the ``no_realloc`` baseline) how
+to divide the pool on every event.  Tenants that cannot get their floor
+park in a FIFO admission wait-queue.  Decisions are executed by whichever
+backend is attached: the discrete-event ``VirtualEngine`` (simulation), a
+bookkeeping-only ``PoolExecutor`` (analytic sweeps), or the JAX serving
+adapter (`repro.serving.tenancy.ServingExecutor`), where a resize decision
+becomes a ``TwoStageCompiler.reconfigure`` call.  HRP isolation invariants
+are re-checked after every handled event.
 """
 
 from .allocator import allocate, allocate_contiguous_dp, allocate_lpt, allocate_weighted
@@ -14,6 +29,7 @@ from .dispatch import (
     SwitchMode,
 )
 from .dynamic_compiler import DynamicCompiler, Schedule
+from .events import Event, EventKind, EventQueue
 from .hrp import HRPError, Lease, ResourcePool
 from .hwmodel import (
     HardwareModel,
@@ -21,6 +37,14 @@ from .hwmodel import (
     fpga_large_core,
     fpga_small_core,
     tpu_v5e_chip,
+)
+from .hypervisor import (
+    POLICIES,
+    Hypervisor,
+    PolicyContext,
+    PoolExecutor,
+    TenantSpec,
+    resolve_policy,
 )
 from .ifp import IFP, Strategy, dedupe_onchip, make_layer_ifps
 from .isa import Chain, Instr, Op, Program, SYNC_PROGRAM, Unit, concat
@@ -32,9 +56,12 @@ from .workloads import CNN_WORKLOADS, Layer, lm_layer_table, workload_stats
 __all__ = [
     "allocate", "allocate_contiguous_dp", "allocate_lpt", "allocate_weighted",
     "ContextSwitchController", "InstructionRouter", "MultiCoreSyncController",
-    "SwitchMode", "DynamicCompiler", "Schedule", "HRPError", "Lease",
+    "SwitchMode", "DynamicCompiler", "Schedule", "Event", "EventKind",
+    "EventQueue", "HRPError", "Lease",
     "ResourcePool", "HardwareModel", "fpga_core", "fpga_large_core",
-    "fpga_small_core", "tpu_v5e_chip", "IFP", "Strategy", "dedupe_onchip",
+    "fpga_small_core", "tpu_v5e_chip", "POLICIES", "Hypervisor",
+    "PolicyContext", "PoolExecutor", "TenantSpec", "resolve_policy",
+    "IFP", "Strategy", "dedupe_onchip",
     "make_layer_ifps", "Chain", "Instr", "Op", "Program", "SYNC_PROGRAM",
     "Unit", "concat",
     "roofline_terms", "simulate", "simulate_layer_barrier", "StaticArtifact",

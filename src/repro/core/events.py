@@ -1,0 +1,99 @@
+"""Global event model for the hypervisor's discrete-event loop.
+
+The paper's hypervisor (§4.1) multiplexes one physical accelerator among many
+tenants whose tasks arrive and leave at millisecond granularity.  We model
+that as a single time-ordered queue of :class:`Event` records — tenant
+arrivals, departures, request completions, explicit reconfiguration signals,
+and straggler probes — consumed by :class:`repro.core.hypervisor.Hypervisor`.
+
+Determinism rules (they make event-driven runs reproducible and testable):
+
+* events pop in non-decreasing ``time`` order;
+* at equal time, departures are handled before arrivals (so a simultaneous
+  arrival sees the cores a departing tenant frees), completions and explicit
+  reconfiguration signals in between, probes last;
+* remaining ties break by insertion order (``seq``), never by dict/hash order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import Any, Dict, List, Optional
+
+
+class EventKind(enum.Enum):
+    """What happened at ``Event.time`` (ordered by handling priority)."""
+
+    DEPARTURE = "departure"      # tenant leaves; its lease is released
+    COMPLETION = "completion"    # a tenant request finished (accounting hook)
+    RECONFIG = "reconfig"        # explicit resize signal for one tenant
+    ARRIVAL = "arrival"          # tenant asks for admission
+    PROBE = "probe"              # pool-wide straggler probe
+
+    @property
+    def rank(self) -> int:
+        return _KIND_RANK[self]
+
+
+_KIND_RANK = {
+    EventKind.DEPARTURE: 0,
+    EventKind.COMPLETION: 1,
+    EventKind.RECONFIG: 2,
+    EventKind.ARRIVAL: 3,
+    EventKind.PROBE: 4,
+}
+
+
+@dataclasses.dataclass
+class Event:
+    """One point on the global timeline.
+
+    ``payload`` carries kind-specific data: the :class:`TenantSpec` for an
+    arrival, the target core count for a reconfiguration signal, free-form
+    accounting fields for completions.
+    """
+
+    time: float
+    kind: EventKind
+    tenant: Optional[str] = None
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    seq: int = -1   # assigned by the queue; insertion-order tie-break
+
+    def __repr__(self) -> str:  # compact, for traces in test failures
+        who = f" {self.tenant}" if self.tenant else ""
+        return f"<{self.kind.value}{who} @ {self.time:g}>"
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, kind rank, insertion seq)."""
+
+    def __init__(self) -> None:
+        self._heap: List[tuple] = []
+        self._count = itertools.count()
+
+    def push(self, event: Event) -> Event:
+        event.seq = next(self._count)
+        heapq.heappush(self._heap, (event.time, event.kind.rank, event.seq, event))
+        return event
+
+    def schedule(self, kind: EventKind, time: float, *, tenant: Optional[str] = None,
+                 **payload: Any) -> Event:
+        return self.push(Event(time=time, kind=kind, tenant=tenant, payload=payload))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[-1]
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0][-1] if self._heap else None
+
+    def next_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

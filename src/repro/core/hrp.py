@@ -95,6 +95,72 @@ class ResourcePool:
             if bits > self.ddr_port_bits:
                 raise HRPError(f"DDR group {g} oversubscribed: {bits}b")
 
+    # -- placement ------------------------------------------------------------
+    def _groups(self) -> List[range]:
+        g = self.cores_per_ddr
+        return [range(lo, min(lo + g, self.n_cores)) for lo in range(0, self.n_cores, g)]
+
+    def _select_cores(self, n: int, *, tenant: Optional[str] = None) -> List[int]:
+        """Pick ``n`` free cores, DDR-group-aware: whole free groups first
+        (dedicated banks for the tenant), then groups the tenant already
+        partially holds, then best-fit partial groups (fewest free cores —
+        keeps remaining whole groups intact), and only then break a fresh
+        group.  Caller has verified ``n`` cores are free."""
+        groups = self._groups()
+        free = {gi: [c for c in grp if self._owner[c] is None]
+                for gi, grp in enumerate(groups)}
+        chosen: List[int] = []
+        need = n
+
+        def take(gi: int, k: int) -> None:
+            nonlocal need
+            grabbed, free[gi] = free[gi][:k], free[gi][k:]
+            chosen.extend(grabbed)
+            need -= len(grabbed)
+
+        # 1) whole free DDR groups while a full group's worth is still needed
+        for gi, grp in enumerate(groups):
+            if need >= len(grp) and len(free[gi]) == len(grp):
+                take(gi, len(grp))
+            if need == 0:
+                return chosen
+        # 2) extend groups the tenant already partially holds
+        if tenant is not None:
+            for gi, grp in enumerate(groups):
+                if free[gi] and any(self._owner[c] == tenant for c in grp):
+                    take(gi, need)
+                if need == 0:
+                    return chosen
+        # 3) best-fit partial groups: fewest free cores first
+        partial = sorted(
+            (gi for gi, grp in enumerate(groups) if 0 < len(free[gi]) < len(grp)),
+            key=lambda gi: (len(free[gi]), gi),
+        )
+        for gi in partial:
+            take(gi, need)
+            if need == 0:
+                return chosen
+        # 4) break a whole free group (lowest index)
+        for gi in range(len(groups)):
+            if free[gi]:
+                take(gi, need)
+            if need == 0:
+                return chosen
+        raise HRPError(f"internal: could not place {n} cores")  # pragma: no cover
+
+    def _shrink_keep(self, cur: Sequence[int], n: int) -> List[int]:
+        """Choose which ``n`` of ``cur`` to retain on a shrink: drop cores
+        from the groups where the tenant holds the fewest first (consolidates
+        the lease onto whole dedicated banks), highest index first within a
+        group."""
+        g = self.cores_per_ddr
+        held: Dict[int, int] = {}
+        for c in cur:
+            held[c // g] = held.get(c // g, 0) + 1
+        drop_order = sorted(cur, key=lambda c: (held[c // g], -c))
+        dropped = set(drop_order[: len(cur) - n])
+        return sorted(c for c in cur if c not in dropped)
+
     # -- lifecycle ------------------------------------------------------------
     def alloc(self, tenant: str, n: int) -> Lease:
         if tenant in self._leases:
@@ -103,7 +169,7 @@ class ResourcePool:
         if n > len(free):
             raise HRPError(f"want {n} cores, only {len(free)} free")
         # prefer whole DDR groups: keeps tenants' traffic on dedicated banks
-        cores = tuple(sorted(free)[:n])
+        cores = tuple(sorted(self._select_cores(n, tenant=tenant)))
         for c in cores:
             self._owner[c] = tenant
         lease = Lease(tenant, cores)
@@ -128,8 +194,8 @@ class ResourcePool:
             return self.alloc(tenant, n)
         cur = list(lease.cores)
         if n < len(cur):
-            keep, drop = cur[:n], cur[n:]
-            for c in drop:
+            keep = self._shrink_keep(cur, n)
+            for c in set(cur) - set(keep):
                 self._owner[c] = None
             new = Lease(tenant, tuple(keep))
         elif n > len(cur):
@@ -137,7 +203,7 @@ class ResourcePool:
             need = n - len(cur)
             if need > len(free):
                 raise HRPError(f"resize wants {need} extra cores, only {len(free)} free")
-            extra = sorted(free)[:need]
+            extra = self._select_cores(need, tenant=tenant)
             for c in extra:
                 self._owner[c] = tenant
             new = Lease(tenant, tuple(sorted(cur + extra)))

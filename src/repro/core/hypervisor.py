@@ -1,0 +1,521 @@
+"""Hypervisor — the paper's §4.1 scheduling layer as a global event loop.
+
+The seed reproduction simulated each tenant's clock separately inside
+:class:`~repro.core.vengine.VirtualEngine.run`; dynamic arrivals, departures
+and pool-wide rebalancing had to be faked outside the engine.  This module
+owns that logic: a :class:`Hypervisor` holds the
+:class:`~repro.core.hrp.ResourcePool`, consumes a single time-ordered
+:class:`~repro.core.events.EventQueue`, and on every event asks a pluggable
+**reallocation policy** how the pool should be divided among the tenants that
+exist *now*.  Decisions are carried out by an **executor** — the
+discrete-event :class:`VirtualEngine` for simulation, a bookkeeping-only
+:class:`PoolExecutor` for analytic sweeps, or the JAX serving adapter
+(:class:`repro.serving.tenancy.ServingExecutor`) where a resize decision
+becomes a ``TwoStageCompiler.reconfigure`` call.
+
+Policies (registered in :data:`POLICIES`):
+
+* ``even_split``           — the paper's Figure-7 elastic scheme: divide the
+                             pool evenly among tenants, capped at each
+                             tenant's request, leftovers redistributed;
+* ``weighted_by_workload`` — cores proportional to per-tenant workload
+                             weight (defaults to total FLOPs of the tenant's
+                             static artifact);
+* ``priority``             — reserve every tenant's floor, then satisfy
+                             requests in priority order;
+* ``no_realloc``           — baseline: residents keep their leases; newcomers
+                             are admitted all-or-nothing from the free pool.
+                             This is the seed engine's behaviour — the
+                             degenerate one-policy case.
+
+Tenants whose policy share would fall below ``min_cores`` are not admitted;
+they park in a FIFO **wait queue** and are retried after every departure or
+reconfiguration (head-of-line order, deterministic).
+
+Executor protocol (duck-typed; every hook is optional except the ``exec_*``
+trio when the corresponding event is used):
+
+    begin(horizon)                    -> None   # run() starts
+    advance(until)                    -> None   # simulate up to global time
+    exec_admit(spec, n_cores, at)     -> None
+    exec_resize(name, n_cores, at, mode) -> None
+    exec_remove(name, at)             -> None
+    probe(at)                         -> int    # straggler sweep, #rebalances
+    metrics()                         -> dict   # returned by run()
+
+The HRP isolation invariants (`check_isolation`, `check_bandwidth`) are
+re-verified after *every* handled event — a violated invariant raises
+immediately at the event that caused it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from .dispatch import SwitchMode
+from .events import Event, EventKind, EventQueue
+from .hrp import ResourcePool
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """What a tenant asks of the hypervisor (the admission contract).
+
+    ``artifact`` is executor-specific payload: a
+    :class:`~repro.core.static_compiler.StaticArtifact` for the simulation
+    engine, a program-key string for the serving stack, or ``None`` for
+    bookkeeping-only pools.
+    """
+
+    name: str
+    requested_cores: int
+    min_cores: int = 1
+    priority: float = 1.0
+    weight: Optional[float] = None     # None -> derived from artifact workload
+    artifact: Any = None
+    arrived_at: float = 0.0            # stamped by the hypervisor on admission
+
+
+@dataclasses.dataclass
+class PolicyContext:
+    """Snapshot a policy decides over: the pool size, the tenants that should
+    hold cores after the decision (arrival order preserved; may include a
+    not-yet-admitted candidate), and the current lease sizes of residents."""
+
+    n_cores: int
+    tenants: List[TenantSpec]
+    current: Dict[str, int]
+    time: float
+
+
+Policy = Callable[[PolicyContext], Dict[str, int]]
+
+
+# ---------------------------------------------------------------------------
+# reallocation policies
+# ---------------------------------------------------------------------------
+
+def _arrival_order(specs: List[TenantSpec]) -> List[TenantSpec]:
+    return sorted(specs, key=lambda s: (s.arrived_at, s.name))
+
+
+def _cap_and_redistribute(order: List[TenantSpec], shares: Dict[str, int],
+                          n_cores: int) -> Dict[str, int]:
+    """Clamp each share to the tenant's request; hand leftover cores one at a
+    time to tenants still below their request (arrival order)."""
+    alloc = {s.name: min(shares[s.name], s.requested_cores) for s in order}
+    leftover = n_cores - sum(alloc.values())
+    progress = True
+    while leftover > 0 and progress:
+        progress = False
+        for s in order:
+            if leftover == 0:
+                break
+            if alloc[s.name] < s.requested_cores:
+                alloc[s.name] += 1
+                leftover -= 1
+                progress = True
+    return alloc
+
+
+def even_split(ctx: PolicyContext) -> Dict[str, int]:
+    """Figure-7 elastic scheme: pool // T each, remainder to the earliest
+    arrivals, capped at each tenant's request."""
+    order = _arrival_order(ctx.tenants)
+    if not order:
+        return {}
+    base, rem = divmod(ctx.n_cores, len(order))
+    shares = {s.name: base + (1 if i < rem else 0) for i, s in enumerate(order)}
+    return _cap_and_redistribute(order, shares, ctx.n_cores)
+
+
+def _spec_weight(spec: TenantSpec) -> float:
+    if spec.weight is not None:
+        return max(spec.weight, 0.0)
+    workload = getattr(spec.artifact, "workload", None)
+    if workload:
+        try:
+            return max(sum(layer.flops for layer in workload), 1.0)
+        except (AttributeError, TypeError):
+            pass
+    return 1.0
+
+
+def weighted_by_workload(ctx: PolicyContext) -> Dict[str, int]:
+    """Cores proportional to tenant weight (largest-remainder rounding) on
+    top of a one-core floor, capped at each tenant's request."""
+    order = _arrival_order(ctx.tenants)
+    if not order:
+        return {}
+    # floors clamped to remaining capacity (arrival order) so shares can
+    # never oversubscribe the pool; a tenant clamped below its min_cores is
+    # simply not admitted (the hypervisor's floor check parks it)
+    floors: Dict[str, int] = {}
+    free = ctx.n_cores
+    for s in order:
+        floors[s.name] = min(max(s.min_cores, 1), s.requested_cores, free)
+        free -= floors[s.name]
+    spare = ctx.n_cores - sum(floors.values())
+    shares = dict(floors)
+    if spare > 0:
+        weights = {s.name: _spec_weight(s) for s in order}
+        total_w = sum(weights.values()) or 1.0
+        raw = {s.name: spare * weights[s.name] / total_w for s in order}
+        for s in order:
+            shares[s.name] += int(raw[s.name])
+        left = spare - sum(int(raw[s.name]) for s in order)
+        by_remainder = sorted(
+            order, key=lambda s: (-(raw[s.name] - int(raw[s.name])),
+                                  s.arrived_at, s.name),
+        )
+        for s in by_remainder[:left]:
+            shares[s.name] += 1
+    return _cap_and_redistribute(order, shares, ctx.n_cores)
+
+
+def priority(ctx: PolicyContext) -> Dict[str, int]:
+    """Reserve every tenant's floor (arrival order), then satisfy requests in
+    descending priority order with what remains."""
+    order = _arrival_order(ctx.tenants)
+    alloc: Dict[str, int] = {s.name: 0 for s in order}
+    free = ctx.n_cores
+    for s in order:
+        floor = min(max(s.min_cores, 1), s.requested_cores, free)
+        alloc[s.name] = floor
+        free -= floor
+    for s in sorted(order, key=lambda s: (-s.priority, s.arrived_at, s.name)):
+        give = min(s.requested_cores - alloc[s.name], free)
+        if give > 0:
+            alloc[s.name] += give
+            free -= give
+    return alloc
+
+
+def no_realloc(ctx: PolicyContext) -> Dict[str, int]:
+    """Baseline (the seed engine's semantics): residents keep their leases —
+    except honouring their *own* explicit resize requests — and newcomers are
+    admitted all-or-nothing from the free pool."""
+    free = ctx.n_cores - sum(ctx.current.values())
+    alloc: Dict[str, int] = {}
+    for s in _arrival_order(ctx.tenants):
+        cur = ctx.current.get(s.name)
+        want = s.requested_cores
+        if cur is None:                      # newcomer: all-or-nothing
+            grant = want if want <= free else 0
+        elif want < cur:                     # voluntary shrink
+            grant = want
+        elif want > cur:                     # voluntary grow, best-effort
+            grant = cur + min(want - cur, free)
+        else:
+            grant = cur
+        free -= grant - (cur or 0)
+        alloc[s.name] = grant
+    return alloc
+
+
+POLICIES: Dict[str, Policy] = {
+    "even_split": even_split,
+    "weighted_by_workload": weighted_by_workload,
+    "priority": priority,
+    "no_realloc": no_realloc,
+}
+
+
+def resolve_policy(policy: Union[str, Policy]) -> Policy:
+    if callable(policy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown reallocation policy {policy!r}; "
+            f"choose from {sorted(POLICIES)} or pass a callable"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+class PoolExecutor:
+    """Bookkeeping-only executor: policy decisions act on the
+    :class:`ResourcePool` directly, with no timeline behind them.  Used when
+    the hypervisor only *places* tenants and an external runtime executes
+    them (e.g. the Figure-7 analytic throughput sweep)."""
+
+    def __init__(self, pool: ResourcePool) -> None:
+        self.pool = pool
+
+    def begin(self, horizon: float) -> None:
+        pass
+
+    def advance(self, until: float) -> None:
+        pass
+
+    def exec_admit(self, spec: TenantSpec, n_cores: int, at: float) -> None:
+        self.pool.alloc(spec.name, n_cores)
+
+    def exec_resize(self, name: str, n_cores: int, at: float, mode: SwitchMode) -> None:
+        self.pool.resize(name, n_cores)
+
+    def exec_remove(self, name: str, at: float) -> None:
+        self.pool.release(name)
+
+    def probe(self, at: float) -> int:
+        return 0
+
+    def metrics(self) -> Dict[str, Any]:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# the hypervisor
+# ---------------------------------------------------------------------------
+
+class Hypervisor:
+    """Global event-driven scheduler over one :class:`ResourcePool`.
+
+    Two usage styles share one code path:
+
+    * **simulated time** — schedule arrivals/departures/reconfigs on the
+      queue, then ``run(horizon)``; the executor's ``advance`` is called to
+      bring the simulation to each event's timestamp before it is handled;
+    * **immediate mode** — call :meth:`admit` / :meth:`depart` /
+      :meth:`resize_request` directly (the serving stack, where time is real
+      and the loop is an ordered decision log).
+
+    ``on_event(hypervisor, event)`` is invoked after every handled event —
+    a hook for traces and invariant assertions in tests.
+    """
+
+    def __init__(
+        self,
+        pool: Optional[ResourcePool] = None,
+        *,
+        policy: Union[str, Policy] = "even_split",
+        executor: Any = None,
+        probe_interval: Optional[float] = None,
+        switch_mode: SwitchMode = SwitchMode.LAYER_LEVEL,
+        on_event: Optional[Callable[["Hypervisor", Event], None]] = None,
+    ) -> None:
+        if pool is None:
+            if executor is None or not hasattr(executor, "pool"):
+                raise ValueError("pass a ResourcePool or an executor exposing .pool")
+            pool = executor.pool
+        self.pool = pool
+        self.policy = resolve_policy(policy)
+        self.executor = executor if executor is not None else PoolExecutor(pool)
+        self.queue = EventQueue()
+        self.specs: Dict[str, TenantSpec] = {}
+        self.waiting: List[TenantSpec] = []
+        self.probe_interval = probe_interval
+        self.switch_mode = switch_mode
+        self.on_event = on_event
+        self.clock = 0.0
+        self.trace: List[Event] = []
+
+    @staticmethod
+    def _validate(spec: TenantSpec) -> None:
+        if spec.requested_cores < 1:
+            raise ValueError(
+                f"tenant {spec.name!r} requests {spec.requested_cores} cores; "
+                "a tenant needs at least 1"
+            )
+
+    # -- scheduling ---------------------------------------------------------
+    def schedule_arrival(self, spec: TenantSpec, *, at: float = 0.0) -> Event:
+        self._validate(spec)
+        return self.queue.schedule(EventKind.ARRIVAL, at, tenant=spec.name, spec=spec)
+
+    def schedule_departure(self, name: str, *, at: float) -> Event:
+        return self.queue.schedule(EventKind.DEPARTURE, at, tenant=name)
+
+    def schedule_reconfig(self, name: str, n_cores: int, *, at: float,
+                          mode: Optional[SwitchMode] = None) -> Event:
+        return self.queue.schedule(
+            EventKind.RECONFIG, at, tenant=name, n_cores=n_cores, mode=mode,
+        )
+
+    def schedule_completion(self, name: str, *, at: float, **payload: Any) -> Event:
+        return self.queue.schedule(EventKind.COMPLETION, at, tenant=name, **payload)
+
+    def schedule_probe(self, *, at: float) -> Event:
+        return self.queue.schedule(EventKind.PROBE, at)
+
+    # -- immediate mode -----------------------------------------------------
+    def admit(self, spec: TenantSpec, *, at: Optional[float] = None) -> bool:
+        """Try to admit ``spec`` now; on failure it parks in the wait queue.
+        Returns True when the tenant holds a lease on return."""
+        self._validate(spec)
+        t = self.clock if at is None else at
+        ev = Event(time=t, kind=EventKind.ARRIVAL, tenant=spec.name,
+                   payload={"spec": spec})
+        self._handle(ev, t)
+        self._post_event(ev)
+        return spec.name in self.specs
+
+    def depart(self, name: str, *, at: Optional[float] = None) -> None:
+        t = self.clock if at is None else at
+        ev = Event(time=t, kind=EventKind.DEPARTURE, tenant=name)
+        self._handle(ev, t)
+        self._post_event(ev)
+
+    def resize_request(self, name: str, n_cores: int, *,
+                       at: Optional[float] = None) -> None:
+        t = self.clock if at is None else at
+        ev = Event(time=t, kind=EventKind.RECONFIG, tenant=name,
+                   payload={"n_cores": n_cores, "mode": None})
+        self._handle(ev, t)
+        self._post_event(ev)
+
+    # -- queries ------------------------------------------------------------
+    def allocation(self) -> Dict[str, int]:
+        return {t: lease.n_cores for t, lease in self.pool.leases.items()}
+
+    def waiting_tenants(self) -> List[str]:
+        return [s.name for s in self.waiting]
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, horizon: float) -> Dict[str, Any]:
+        """Handle every queued event with ``time <= horizon`` in order,
+        advancing the executor's simulation between events, then advance to
+        ``horizon``.  Returns ``executor.metrics()`` when available."""
+        if hasattr(self.executor, "begin"):
+            self.executor.begin(horizon)
+        if self.probe_interval:
+            t = self.clock + self.probe_interval
+            while t <= horizon + 1e-12:
+                self.schedule_probe(at=t)
+                t += self.probe_interval
+        while self.queue and self.queue.next_time() <= horizon:
+            ev = self.queue.pop()
+            t = max(ev.time, self.clock)
+            self.executor.advance(t)
+            self.clock = t
+            self._handle(ev, t)
+            self._post_event(ev)
+        self.executor.advance(horizon)
+        self.clock = max(self.clock, horizon)
+        if hasattr(self.executor, "metrics"):
+            return self.executor.metrics()
+        return {}
+
+    # -- event handling -----------------------------------------------------
+    def _post_event(self, ev: Event) -> None:
+        self.pool.check_isolation()
+        self.pool.check_bandwidth()
+        self.trace.append(ev)
+        if self.on_event is not None:
+            self.on_event(self, ev)
+
+    def _handle(self, ev: Event, t: float) -> None:
+        if ev.kind is EventKind.ARRIVAL:
+            spec: TenantSpec = ev.payload["spec"]
+            if spec.name in self.specs:
+                # re-submission of a resident: an updated contract, not a
+                # second lease (pool.alloc would reject the duplicate name)
+                resident = self.specs[spec.name]
+                resident.requested_cores = spec.requested_cores
+                resident.min_cores = spec.min_cores
+                resident.priority = spec.priority
+                resident.weight = spec.weight
+                if not self._drain_waiting(t):
+                    self._rebalance(t)
+                return
+            # a re-submitted waiter replaces its stale queue entry
+            self.waiting = [w for w in self.waiting if w.name != spec.name]
+            spec.arrived_at = t
+            if not self._try_admit(spec, t):
+                self.waiting.append(spec)
+        elif ev.kind is EventKind.DEPARTURE:
+            name = ev.tenant
+            if name in self.specs:
+                del self.specs[name]
+                self.executor.exec_remove(name, t)
+                # admitting a waiter re-applies the policy over the full new
+                # tenant set, so residents are resized exactly once; only
+                # rebalance separately when nobody could be admitted
+                if not self._drain_waiting(t):
+                    self._rebalance(t)
+            else:
+                self.waiting = [w for w in self.waiting if w.name != name]
+        elif ev.kind is EventKind.RECONFIG:
+            name = ev.tenant
+            if name in self.specs:
+                n = ev.payload.get("n_cores")
+                if n is not None:
+                    self.specs[name].requested_cores = n
+                mode = ev.payload.get("mode")
+                if not self._drain_waiting(t, mode=mode):
+                    self._rebalance(t, mode=mode)
+        elif ev.kind is EventKind.PROBE:
+            self.executor.probe(t)
+        elif ev.kind is EventKind.COMPLETION:
+            pass  # accounting hook; executors track their own completions
+
+    def _current(self) -> Dict[str, int]:
+        return {
+            name: lease.n_cores
+            for name, lease in self.pool.leases.items()
+            if name in self.specs
+        }
+
+    def _try_admit(self, spec: TenantSpec, t: float,
+                   mode: Optional[SwitchMode] = None) -> bool:
+        candidates = list(self.specs.values()) + [spec]
+        targets = self.policy(
+            PolicyContext(self.pool.n_cores, candidates, self._current(), t)
+        )
+        floor = max(spec.min_cores, 1)
+        if targets.get(spec.name, 0) < floor:
+            return False
+        for s in self.specs.values():
+            if targets.get(s.name, 0) < max(s.min_cores, 1):
+                return False  # admitting would starve a resident below floor
+        self._apply(targets, t, admit={spec.name: spec}, mode=mode)
+        self.specs[spec.name] = spec
+        return True
+
+    def _rebalance(self, t: float, mode: Optional[SwitchMode] = None) -> None:
+        if not self.specs:
+            return
+        targets = self.policy(
+            PolicyContext(self.pool.n_cores, list(self.specs.values()),
+                          self._current(), t)
+        )
+        self._apply(targets, t, mode=mode)
+
+    def _apply(self, targets: Dict[str, int], t: float, *,
+               admit: Optional[Dict[str, TenantSpec]] = None,
+               mode: Optional[SwitchMode] = None) -> None:
+        """Carry a policy decision out through the executor: shrinks first
+        (they free the cores the grows need), then grows, then admissions."""
+        admit = admit or {}
+        mode = mode or self.switch_mode
+        current = {
+            name: lease.n_cores for name, lease in self.pool.leases.items()
+        }
+        resident = [n for n in sorted(targets) if n in current and n not in admit]
+        for name in resident:
+            if 0 < targets[name] < current[name]:
+                self.executor.exec_resize(name, targets[name], t, mode)
+        for name in resident:
+            # >= not >: an equal target must still reach the executor so a
+            # stale deferred (task-level) decision gets dropped
+            if targets[name] >= current[name]:
+                self.executor.exec_resize(name, targets[name], t, mode)
+        for name, spec in admit.items():
+            self.executor.exec_admit(spec, targets[name], t)
+
+    def _drain_waiting(self, t: float, mode: Optional[SwitchMode] = None) -> int:
+        """FIFO admission: admit waiters from the head until one doesn't fit
+        (head-of-line blocking keeps admission order deterministic).  Returns
+        how many were admitted — each admission already re-applied the policy
+        over the full tenant set, so the caller skips its own rebalance when
+        this is non-zero."""
+        admitted = 0
+        while self.waiting and self._try_admit(self.waiting[0], t, mode=mode):
+            self.waiting.pop(0)
+            admitted += 1
+        return admitted

@@ -4,17 +4,28 @@ Ties the whole paper together: the HRP leases cores to tenants, the two-stage
 compiler produces per-core schedules, the two-level IDM controllers manage
 context switches and layer barriers, and the latency simulator supplies
 per-layer core times.  Because leases are disjoint and every core owns its
-off-chip port, tenants' timelines are independent — the engine simulates each
-tenant's clock separately, which *is* the isolation property (a small optional
+off-chip port, tenants' timelines are independent — each tenant's clock
+advances separately, which *is* the isolation property (a small optional
 DDR-group crosstalk factor models the arbiter of §4.2.2 when tenants share a
 bank, bounded well under the paper's 1% deviation).
+
+Since the Hypervisor refactor the engine is an **executor** for the global
+event loop (:class:`repro.core.hypervisor.Hypervisor`): the hypervisor pops
+time-ordered arrival/departure/reconfig/probe events, calls :meth:`advance`
+to bring every tenant's clock to the event's timestamp, and carries policy
+decisions out through :meth:`exec_admit` / :meth:`exec_resize` /
+:meth:`exec_remove`.  :meth:`run` is the degenerate case — a ``no_realloc``
+hypervisor with an empty event queue — and reproduces the seed engine's
+per-tenant independent clocks exactly.
 
 Supports:
   * closed-loop inference (each tenant re-issues back-to-back requests),
   * hypervisor reconfiguration at a global time (task- or layer-level switch,
     with measured dynamic-recompile + transfer cost added to the timeline),
+  * dynamic tenant arrival/departure with policy-driven pool rebalancing,
   * straggler injection (per-core slowdown) and mitigation (weighted
-    re-allocation of the remaining layers via the dynamic compiler).
+    re-allocation of the remaining layers via the dynamic compiler), either
+    inline per layer or via hypervisor-scheduled straggler probes.
 """
 
 from __future__ import annotations
@@ -26,6 +37,7 @@ from .dispatch import ContextSwitchController, MultiCoreSyncController, SwitchMo
 from .dynamic_compiler import DynamicCompiler, Schedule
 from .hwmodel import HardwareModel
 from .hrp import ResourcePool
+from .hypervisor import Hypervisor, TenantSpec
 from .latency_sim import simulate
 from .static_compiler import StaticArtifact
 
@@ -59,9 +71,15 @@ class _Tenant:
     inference_id: int = 0
     pending: List[ReconfigRequest] = dataclasses.field(default_factory=list)
     metrics: TenantMetrics = dataclasses.field(default_factory=TenantMetrics)
-    # simulate() results per (schedule identity, hw name, layer) — schedules
-    # and their chains are immutable, so per-layer times are too.
-    _layer_cache: Dict[Tuple[int, str, int], Dict[int, float]] = dataclasses.field(
+    # speeds the last probe-driven rebalance compiled for (avoids recompiling
+    # the same weighted schedule on every probe tick)
+    probe_speeds: Optional[List[float]] = None
+    # simulate() results per (hw name, layer) for the *current* schedule —
+    # schedules and their chains are immutable, so per-layer times are too;
+    # the cache is cleared whenever the schedule is replaced (id()-based keys
+    # would risk stale hits after CPython address reuse and grow unboundedly
+    # under policy-driven recompile churn).
+    _layer_cache: Dict[Tuple[str, int], Dict[int, float]] = dataclasses.field(
         default_factory=dict
     )
 
@@ -85,19 +103,29 @@ class VirtualEngine:
         self.ctx = ContextSwitchController()
         self.tenants: Dict[str, _Tenant] = {}
         self.core_slowdown: Dict[int, float] = {}
+        # metrics of departed tenants survive removal (event-driven runs)
+        self.history: Dict[str, TenantMetrics] = {}
+        # latest deferred (task-level) hypervisor decision per tenant, so a
+        # newer policy decision supersedes a not-yet-applied one
+        self._deferred_hv: Dict[str, ReconfigRequest] = {}
+        self._horizon = float("inf")
+        self._max_inferences: Optional[int] = None
 
     # -- admission ------------------------------------------------------------
-    def admit(self, name: str, artifact: StaticArtifact, n_cores: int) -> None:
+    def admit(self, name: str, artifact: StaticArtifact, n_cores: int,
+              *, at: float = 0.0) -> None:
         lease = self.pool.alloc(name, n_cores)
         dyn = DynamicCompiler(artifact)
         schedule = dyn.compile(lease.cores)
         self.sync.configure(name, set(lease.cores))
-        self.tenants[name] = _Tenant(name, artifact, dyn, schedule)
+        self.tenants[name] = _Tenant(name, artifact, dyn, schedule, clock=at)
 
     def remove(self, name: str) -> None:
+        tenant = self.tenants.pop(name)
+        self.history[name] = tenant.metrics
+        self._deferred_hv.pop(name, None)
         self.pool.release(name)
         self.sync.deconfigure(name)
-        del self.tenants[name]
 
     def request_resize(
         self, name: str, n_cores: int, *, at: float = 0.0,
@@ -106,6 +134,109 @@ class VirtualEngine:
         self.tenants[name].pending.append(ReconfigRequest(at, n_cores, mode))
         self.tenants[name].pending.sort(key=lambda r: r.t_request)
         self.ctx.request_switch(name, mode)
+
+    def metrics(self) -> Dict[str, TenantMetrics]:
+        out = dict(self.history)
+        out.update({n: t.metrics for n, t in self.tenants.items()})
+        return out
+
+    @staticmethod
+    def _set_schedule(tenant: _Tenant, schedule: Schedule) -> None:
+        tenant.schedule = schedule
+        tenant._layer_cache.clear()
+
+    # -- hypervisor executor protocol ------------------------------------------
+    def begin(self, horizon: float) -> None:
+        self._horizon = horizon
+
+    def exec_admit(self, spec: TenantSpec, n_cores: int, at: float) -> None:
+        self.admit(spec.name, spec.artifact, n_cores, at=at)
+
+    def _drop_deferred(self, tenant: _Tenant) -> None:
+        stale = self._deferred_hv.pop(tenant.name, None)
+        if stale is not None and stale in tenant.pending:
+            tenant.pending.remove(stale)
+
+    def exec_resize(self, name: str, n_cores: int, at: float,
+                    mode: SwitchMode = SwitchMode.LAYER_LEVEL) -> None:
+        """Apply a hypervisor reallocation decision.  ``advance`` has already
+        brought the tenant to a layer boundary at clock >= ``at``, so a
+        layer-level switch applies synchronously (context = layer index,
+        §4.2.1).  Under task-level mode only *grows* wait for the task
+        boundary (parked as a pending request, superseding any earlier
+        deferred decision); **shrinks always preempt at the layer boundary**
+        — a deferred shrink would leave the pool over-committed against the
+        admissions and grows the same policy decision granted, which is the
+        bounded-latency argument for the layer-level switch in §4.2.1."""
+        tenant = self.tenants[name]
+        lease = self.pool.lease_of(name)
+        if lease is not None and lease.n_cores == n_cores:
+            self._drop_deferred(tenant)  # target already met: decision stale
+            return
+        if lease is not None and n_cores < lease.n_cores:
+            mode = SwitchMode.LAYER_LEVEL
+        self.ctx.request_switch(name, mode)
+        n_layers = len(tenant.artifact.workload)
+        ctx = self.ctx.boundary(name, tenant.layer_idx, n_layers, tenant.inference_id)
+        if ctx is None and mode is SwitchMode.TASK_LEVEL:
+            self._drop_deferred(tenant)
+            req = ReconfigRequest(at, n_cores, mode)
+            self._deferred_hv[name] = req
+            tenant.pending.append(req)
+            tenant.pending.sort(key=lambda r: r.t_request)
+            return
+        self._drop_deferred(tenant)
+        lease = self.pool.resize(name, n_cores)
+        self.sync.configure(name, set(lease.cores))
+        schedule = tenant.dyn.compile(lease.cores)
+        cost = tenant.dyn.context_switch_cost(schedule, self.hw)
+        tenant.clock = max(tenant.clock, at) + cost["t_context"]
+        self._set_schedule(tenant, schedule)
+        tenant.probe_speeds = None
+        tenant.metrics.ctx_switches += 1
+        tenant.metrics.ctx_overhead += cost["t_context"]
+        if ctx is not None:
+            tenant.layer_idx = ctx.layer_idx  # resume from recorded context
+
+    def exec_remove(self, name: str, at: float) -> None:
+        self.remove(name)
+
+    def probe(self, at: float) -> int:
+        """Pool-wide straggler probe (hypervisor-scheduled): re-balance any
+        tenant whose lease contains a core slower than ``straggler_threshold``
+        x the median, via the weighted dynamic compiler."""
+        rebalanced = 0
+        for tenant in self.tenants.values():
+            metric = {c: self.core_slowdown.get(c, 1.0)
+                      for c in tenant.schedule.core_ids}
+            if self._rebalance_if_straggling(tenant, metric):
+                rebalanced += 1
+        return rebalanced
+
+    # -- straggler detection / weighted rebalance (shared by the inline
+    # per-layer path and the hypervisor probe path) ---------------------------
+    def _rebalance_if_straggling(self, tenant: _Tenant,
+                                 metric: Dict[int, float]) -> bool:
+        """``metric`` is any per-core load signal (per-layer times inline,
+        slowdown factors for probes); when one core exceeds threshold x
+        median, recompile with weights so it receives proportionally less
+        work.  Skips when already balanced for the current speeds."""
+        if len(metric) < 2:
+            return False
+        values = sorted(metric.values())
+        median = values[len(values) // 2]
+        if median <= 0 or max(values) <= self.straggler_threshold * median:
+            return False
+        speeds = [1.0 / self.core_slowdown.get(c, 1.0)
+                  for c in tenant.schedule.core_ids]
+        if tenant.probe_speeds == speeds:
+            return False
+        self._set_schedule(
+            tenant, tenant.dyn.compile(tenant.schedule.core_ids, core_speeds=speeds)
+        )
+        tenant.probe_speeds = speeds
+        tenant.metrics.rebalances += 1
+        return True
 
     # -- crosstalk -------------------------------------------------------------
     def _tenant_hw(self, tenant: _Tenant) -> HardwareModel:
@@ -129,7 +260,7 @@ class VirtualEngine:
     def _layer_time(self, tenant: _Tenant) -> Tuple[float, Dict[int, float]]:
         hw = self._tenant_hw(tenant)
         li = tenant.layer_idx
-        key = (id(tenant.schedule), hw.name, li)
+        key = (hw.name, li)
         base = tenant._layer_cache.get(key)
         if base is None:
             base = {}
@@ -146,18 +277,8 @@ class VirtualEngine:
         return t_layer, per_core
 
     def _maybe_mitigate(self, tenant: _Tenant, per_core: Dict[int, float]) -> None:
-        if not self.mitigate_stragglers or len(per_core) < 2:
-            return
-        times = sorted(per_core.values())
-        median = times[len(times) // 2]
-        slow = [c for c, t in per_core.items() if t > self.straggler_threshold * median]
-        if not slow:
-            return
-        speeds = [1.0 / self.core_slowdown.get(c, 1.0) for c in tenant.schedule.core_ids]
-        tenant.schedule = tenant.dyn.compile(
-            tenant.schedule.core_ids, core_speeds=speeds
-        )
-        tenant.metrics.rebalances += 1
+        if self.mitigate_stragglers:
+            self._rebalance_if_straggling(tenant, per_core)
 
     def _apply_reconfig(self, tenant: _Tenant, req: ReconfigRequest) -> None:
         n_layers = len(tenant.artifact.workload)
@@ -171,38 +292,67 @@ class VirtualEngine:
         schedule = tenant.dyn.compile(lease.cores)
         cost = tenant.dyn.context_switch_cost(schedule, self.hw)
         tenant.clock += cost["t_context"]
-        tenant.schedule = schedule
+        self._set_schedule(tenant, schedule)
+        tenant.probe_speeds = None
         tenant.metrics.ctx_switches += 1
         tenant.metrics.ctx_overhead += cost["t_context"]
         tenant.pending.remove(req)
+        if self._deferred_hv.get(tenant.name) is req:
+            del self._deferred_hv[tenant.name]
         if ctx is not None:
             tenant.layer_idx = ctx.layer_idx  # resume from recorded context
 
-    # -- main loop ----------------------------------------------------------------
-    def run(self, horizon: float, *, max_inferences: Optional[int] = None) -> Dict[str, TenantMetrics]:
-        """Advance every tenant's clock to ``horizon`` (seconds)."""
-        for tenant in self.tenants.values():
-            n_layers = len(tenant.artifact.workload)
-            while tenant.clock < horizon:
-                if max_inferences is not None and len(tenant.metrics.completions) >= max_inferences:
+    # -- simulation ----------------------------------------------------------------
+    def advance(self, until: float) -> None:
+        """Advance every tenant's clock to global time ``until`` (layer by
+        layer; completions are recorded against the run horizon set by
+        :meth:`begin`).  The hypervisor calls this between events."""
+        for tenant in list(self.tenants.values()):
+            self._advance_tenant(tenant, until)
+
+    def _advance_tenant(self, tenant: _Tenant, until: float) -> None:
+        n_layers = len(tenant.artifact.workload)
+        while tenant.clock < until:
+            if (
+                self._max_inferences is not None
+                and len(tenant.metrics.completions) >= self._max_inferences
+            ):
+                break
+            t_layer, per_core = self._layer_time(tenant)
+            tenant.clock += t_layer
+            tenant.layer_idx += 1
+            if tenant.layer_idx >= n_layers:
+                tenant.inference_id += 1
+                if tenant.clock <= self._horizon:
+                    tenant.metrics.completions.append(tenant.clock)
+            self._maybe_mitigate(tenant, per_core)
+            # layer boundary: honour any due reconfiguration request
+            # (while layer_idx may still equal n_layers => task boundary)
+            for req in list(tenant.pending):
+                if req.t_request <= tenant.clock:
+                    self._apply_reconfig(tenant, req)
                     break
-                t_layer, per_core = self._layer_time(tenant)
-                tenant.clock += t_layer
-                tenant.layer_idx += 1
-                if tenant.layer_idx >= n_layers:
-                    tenant.inference_id += 1
-                    if tenant.clock <= horizon:
-                        tenant.metrics.completions.append(tenant.clock)
-                self._maybe_mitigate(tenant, per_core)
-                # layer boundary: honour any due reconfiguration request
-                # (while layer_idx may still equal n_layers => task boundary)
-                for req in list(tenant.pending):
-                    if req.t_request <= tenant.clock:
-                        self._apply_reconfig(tenant, req)
-                        break
-                if tenant.layer_idx >= n_layers:
-                    tenant.layer_idx = 0
-        return {n: t.metrics for n, t in self.tenants.items()}
+            if tenant.layer_idx >= n_layers:
+                tenant.layer_idx = 0
+
+    def run(
+        self, horizon: float, *, max_inferences: Optional[int] = None,
+        hypervisor: Optional[Hypervisor] = None,
+    ) -> Dict[str, TenantMetrics]:
+        """Advance every tenant's clock to ``horizon`` (seconds).
+
+        Runs as the degenerate case of the hypervisor's global event loop: a
+        ``no_realloc`` policy over an empty event queue reproduces the seed
+        engine's independent per-tenant clocks.  Pass a ``hypervisor`` (built
+        with ``executor=self``) to honour its queued arrival/departure/
+        reconfiguration events instead.
+        """
+        self._max_inferences = max_inferences
+        hv = hypervisor if hypervisor is not None else Hypervisor(
+            self.pool, policy="no_realloc", executor=self,
+        )
+        hv.run(horizon)
+        return self.metrics()
 
     # -- convenience -----------------------------------------------------------------
     def single_inference_latency(self, name: str) -> float:

@@ -3,13 +3,16 @@ from .batcher import BatcherStats, ContinuousBatcher, Request
 from .kv_cache import cache_len, kv_cache_bytes, seed_kv_cache, seed_ssm_state
 from .tenancy import (
     CompiledProgram,
+    ServingExecutor,
     TwoStageCompiler,
     VirtualAcceleratorPool,
+    make_serving_hypervisor,
 )
 
 __all__ = [
     "ServeConfig", "generate", "make_prefill_step", "make_serve_step",
     "BatcherStats", "ContinuousBatcher", "Request", "cache_len",
     "kv_cache_bytes", "seed_kv_cache", "seed_ssm_state", "CompiledProgram",
-    "TwoStageCompiler", "VirtualAcceleratorPool",
+    "ServingExecutor", "TwoStageCompiler", "VirtualAcceleratorPool",
+    "make_serving_hypervisor",
 ]

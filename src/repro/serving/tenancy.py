@@ -31,7 +31,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.dispatch import SwitchMode
 from repro.core.hrp import HRPError, Lease, ResourcePool
+from repro.core.hypervisor import Hypervisor, TenantSpec
 from repro.serving.kv_cache import kv_cache_bytes
 
 HBM_BYTES_PER_DEVICE = 16 << 30   # TPU v5e
@@ -179,3 +181,116 @@ class TwoStageCompiler:
             "t_context": t2 - t0,
         }
         return prog, migrated, timing
+
+
+class ServingExecutor:
+    """Hypervisor executor for the JAX serving stack.
+
+    This gives the serving side the *same* scheduling interface as the
+    simulation engine: a :class:`repro.core.hypervisor.Hypervisor` makes the
+    placement decisions (which tenant gets how many cores, who waits), and
+    this adapter carries them out —
+
+    * **admission**  → ``VirtualAcceleratorPool.lease`` + AOT-program cache
+      lookup for the granted lease size,
+    * **resize**     → :meth:`TwoStageCompiler.reconfigure` (cache lookup +
+      live-state migration, the measured millisecond path) — so
+      ``reconfigure`` is invoked by policy decisions rather than ad-hoc
+      calls; tenants without a registered program key fall back to a plain
+      lease resize,
+    * **departure**  → lease release and per-tenant state cleanup.
+
+    Time is real here, so ``advance`` is a no-op and the event loop serves as
+    an ordered, invariant-checked decision log.  ``TenantSpec.artifact`` is
+    interpreted as the tenant's program key (the ``key`` passed to
+    ``static_compile``), or ``None`` for tenants managed outside the AOT
+    cache (e.g. a ContinuousBatcher driving jit directly).
+    """
+
+    def __init__(self, vpool: VirtualAcceleratorPool,
+                 compiler: Optional[TwoStageCompiler] = None) -> None:
+        self.vpool = vpool
+        self.compiler = compiler if compiler is not None else TwoStageCompiler(vpool)
+        self.pool = vpool.pool                       # Hypervisor reads .pool
+        self.programs: Dict[str, Optional[CompiledProgram]] = {}
+        self.live_state: Dict[str, Any] = {}
+        self.state_specs: Dict[str, Any] = {}
+        self.reconfig_log: List[Dict[str, Any]] = []
+        self._keys: Dict[str, Optional[str]] = {}
+
+    def register_state(self, tenant: str, live_state: Any,
+                       state_specs: Any = None) -> None:
+        """Attach the tenant's live state (params/caches) so policy-driven
+        resizes migrate it onto the new mesh."""
+        self.live_state[tenant] = live_state
+        if state_specs is not None:
+            self.state_specs[tenant] = state_specs
+
+    def program_of(self, tenant: str) -> Optional[CompiledProgram]:
+        return self.programs.get(tenant)
+
+    def mesh_of(self, tenant: str) -> Mesh:
+        lease = self.pool.lease_of(tenant)
+        if lease is None:
+            raise HRPError(f"tenant {tenant} holds no lease")
+        return self.vpool.mesh_for(lease)
+
+    # -- hypervisor executor protocol ----------------------------------
+    def begin(self, horizon: float) -> None:
+        pass
+
+    def advance(self, until: float) -> None:
+        pass  # real time: nothing to simulate between events
+
+    def probe(self, at: float) -> int:
+        return 0
+
+    def metrics(self) -> Dict[str, Any]:
+        return {"reconfigs": list(self.reconfig_log),
+                "allocation": {t: l.n_cores for t, l in self.pool.leases.items()}}
+
+    def exec_admit(self, spec: TenantSpec, n_cores: int, at: float) -> None:
+        self.vpool.lease(spec.name, n_cores)
+        key = spec.artifact if isinstance(spec.artifact, str) else None
+        self._keys[spec.name] = key
+        self.programs[spec.name] = (
+            self.compiler.lookup(key, n_cores) if key is not None else None
+        )
+
+    def exec_resize(self, name: str, n_cores: int, at: float,
+                    mode: SwitchMode) -> None:
+        lease = self.pool.lease_of(name)
+        if lease is not None and lease.n_cores == n_cores:
+            return
+        key = self._keys.get(name)
+        if key is None:
+            self.vpool.resize(name, n_cores)
+            self.reconfig_log.append({"tenant": name, "n_cores": n_cores})
+            return
+        prog, migrated, timing = self.compiler.reconfigure(
+            name, key, n_cores,
+            live_state=self.live_state.get(name),
+            state_specs=self.state_specs.get(name),
+        )
+        self.programs[name] = prog
+        if name in self.live_state:
+            self.live_state[name] = migrated
+        self.reconfig_log.append({"tenant": name, "n_cores": n_cores, **timing})
+
+    def exec_remove(self, name: str, at: float) -> None:
+        self.vpool.release(name)
+        for table in (self.programs, self.live_state, self.state_specs, self._keys):
+            table.pop(name, None)
+
+
+def make_serving_hypervisor(
+    vpool: VirtualAcceleratorPool,
+    *,
+    compiler: Optional[TwoStageCompiler] = None,
+    policy: Any = "even_split",
+    **kwargs: Any,
+) -> Tuple[Hypervisor, ServingExecutor]:
+    """One-call wiring of pool + two-stage compiler + hypervisor: returns the
+    (hypervisor, executor) pair the serving stack schedules through."""
+    executor = ServingExecutor(vpool, compiler)
+    return Hypervisor(vpool.pool, policy=policy, executor=executor, **kwargs), executor

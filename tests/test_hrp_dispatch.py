@@ -1,6 +1,8 @@
 """HRP leases (isolation invariants) + two-level IDM controllers."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,0 +1,309 @@
+"""Hypervisor: global event loop, reallocation policies, wait-queue
+admission, DDR-group-aware placement, and per-event isolation invariants."""
+
+import pytest
+
+from repro.core import (
+    EventKind, Hypervisor, PolicyContext, ResourcePool, TenantSpec,
+    VirtualEngine, fpga_small_core, resolve_policy,
+)
+from repro.core.events import Event, EventQueue
+from repro.core.hypervisor import POLICIES, even_split, no_realloc, priority, \
+    weighted_by_workload
+
+
+def make_engine(pool=None):
+    return VirtualEngine(pool or ResourcePool(16), fpga_small_core())
+
+
+def ctx(specs, current=None, n=16):
+    return PolicyContext(n_cores=n, tenants=list(specs), current=current or {},
+                         time=0.0)
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+class TestEventQueue:
+    def test_time_order(self):
+        q = EventQueue()
+        q.schedule(EventKind.ARRIVAL, 2.0, tenant="b")
+        q.schedule(EventKind.ARRIVAL, 1.0, tenant="a")
+        q.schedule(EventKind.ARRIVAL, 3.0, tenant="c")
+        assert [q.pop().tenant for _ in range(3)] == ["a", "b", "c"]
+
+    def test_departure_handled_before_simultaneous_arrival(self):
+        q = EventQueue()
+        q.schedule(EventKind.ARRIVAL, 1.0, tenant="new")
+        q.schedule(EventKind.DEPARTURE, 1.0, tenant="old")
+        assert q.pop().kind is EventKind.DEPARTURE
+        assert q.pop().kind is EventKind.ARRIVAL
+
+    def test_insertion_order_breaks_remaining_ties(self):
+        q = EventQueue()
+        for name in ("x", "y", "z"):
+            q.schedule(EventKind.ARRIVAL, 0.0, tenant=name)
+        assert [q.pop().tenant for _ in range(3)] == ["x", "y", "z"]
+
+
+# ---------------------------------------------------------------------------
+# policies (pure functions over PolicyContext)
+# ---------------------------------------------------------------------------
+
+class TestPolicies:
+    def test_registry_and_resolution(self):
+        assert set(POLICIES) == {
+            "even_split", "weighted_by_workload", "priority", "no_realloc",
+        }
+        assert resolve_policy("even_split") is even_split
+        assert resolve_policy(even_split) is even_split
+        with pytest.raises(ValueError):
+            resolve_policy("round_robin")
+
+    def test_even_split_balanced(self):
+        specs = [TenantSpec(f"t{i}", 16) for i in range(3)]
+        out = even_split(ctx(specs))
+        assert sorted(out.values(), reverse=True) == [6, 5, 5]
+        assert sum(out.values()) == 16
+
+    def test_even_split_caps_at_request_and_redistributes(self):
+        out = even_split(ctx([TenantSpec("small", 2), TenantSpec("big", 16)]))
+        assert out == {"small": 2, "big": 14}
+
+    def test_weighted_by_workload(self):
+        out = weighted_by_workload(
+            ctx([TenantSpec("heavy", 16, weight=3.0), TenantSpec("light", 16, weight=1.0)])
+        )
+        assert out["heavy"] > out["light"]
+        assert sum(out.values()) == 16
+
+    def test_priority_satisfies_high_priority_first(self):
+        out = priority(
+            ctx([TenantSpec("lo", 16, priority=1.0), TenantSpec("hi", 12, priority=5.0)])
+        )
+        assert out == {"hi": 12, "lo": 4}
+
+    def test_no_realloc_keeps_residents(self):
+        specs = [TenantSpec("a", 12), TenantSpec("b", 8)]
+        out = no_realloc(ctx(specs, current={"a": 12}))
+        assert out["a"] == 12          # resident untouched
+        assert out["b"] == 0           # newcomer doesn't fit -> waits
+
+    def test_no_realloc_honours_own_resize(self):
+        out = no_realloc(ctx([TenantSpec("a", 4)], current={"a": 12}))
+        assert out["a"] == 4
+
+
+# ---------------------------------------------------------------------------
+# DDR-group-aware placement (HRP satellite)
+# ---------------------------------------------------------------------------
+
+class TestDdrGroupPlacement:
+    def test_alloc_prefers_whole_free_group(self):
+        pool = ResourcePool(16, cores_per_ddr=4)
+        pool.alloc("a", 2)                      # breaks group 0
+        b = pool.alloc("b", 4)
+        assert b.cores == (4, 5, 6, 7)          # whole group, not (2,3,4,5)
+
+    def test_small_alloc_best_fits_into_partial_group(self):
+        pool = ResourcePool(16, cores_per_ddr=4)
+        pool.alloc("a", 2)                      # group 0 partially free
+        c = pool.alloc("c", 2)
+        assert c.cores == (2, 3)                # fills the broken group
+
+    def test_multi_group_alloc_takes_whole_groups(self):
+        pool = ResourcePool(16, cores_per_ddr=4)
+        a = pool.alloc("a", 8)
+        assert a.cores == (0, 1, 2, 3, 4, 5, 6, 7)
+
+    def test_shrink_drops_partial_group_cores_first(self):
+        pool = ResourcePool(16, cores_per_ddr=4)
+        pool.alloc("a", 6)                      # group 0 whole + 2 of group 1
+        smaller = pool.resize("a", 4)
+        assert smaller.cores == (0, 1, 2, 3)    # retains the dedicated bank
+
+    def test_grow_extends_own_partial_group_first(self):
+        pool = ResourcePool(16, cores_per_ddr=4)
+        pool.alloc("a", 2)                      # (0, 1)
+        grown = pool.resize("a", 4)
+        assert grown.cores == (0, 1, 2, 3)      # completes its own bank
+
+
+# ---------------------------------------------------------------------------
+# event-driven engine runs
+# ---------------------------------------------------------------------------
+
+HORIZON = 1.2
+
+
+class TestEventLoop:
+    def test_two_tenants_arrive_and_leave_mid_run(self, resnet_artifact):
+        """Acceptance: tenants arrive/leave mid-run, the pool rebalances via
+        the policy, and HRP isolation invariants hold after every event."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        checked = []
+
+        def check(hv, ev):
+            hv.pool.check_isolation()
+            hv.pool.check_bandwidth()
+            checked.append(ev)
+
+        hv = Hypervisor(pool, policy="even_split", executor=eng, on_event=check)
+        hv.schedule_arrival(TenantSpec("a", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("b", 16, artifact=resnet_artifact), at=0.4)
+        hv.schedule_departure("b", at=0.8)
+        metrics = hv.run(HORIZON)
+
+        assert hv.allocation() == {"a": 16}          # b gone, a regrown
+        assert metrics["a"].ctx_switches >= 2        # shrink @0.4, grow @0.8
+        assert metrics["a"].completions
+        assert metrics["b"].completions              # departed metrics survive
+        assert all(c >= 0.4 for c in metrics["b"].completions)
+        assert len(checked) == 3                     # every event was verified
+
+    def test_arrival_rebalances_and_speeds_reflect_allocation(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("a", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("b", 16, artifact=resnet_artifact), at=0.6)
+        metrics = hv.run(HORIZON)
+        assert hv.allocation() == {"a": 8, "b": 8}
+        # a's completion rate on 16 cores (before b) beats its rate on 8
+        early = sum(1 for c in metrics["a"].completions if c <= 0.6) / 0.6
+        late = sum(1 for c in metrics["a"].completions if c > 0.6) / (HORIZON - 0.6)
+        assert early > late
+
+    def test_wait_queue_admission_on_departure(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng)
+        hv.schedule_arrival(TenantSpec("big", 12, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("late", 8, artifact=resnet_artifact), at=0.1)
+        hv.schedule_departure("big", at=0.5)
+        metrics = hv.run(HORIZON)
+        assert hv.allocation() == {"late": 8}
+        assert hv.waiting_tenants() == []
+        assert metrics["late"].completions
+        assert all(c >= 0.5 for c in metrics["late"].completions)
+
+    def test_waiting_tenant_never_admitted_stays_queued(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng)
+        hv.schedule_arrival(TenantSpec("big", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("late", 4, artifact=resnet_artifact), at=0.1)
+        hv.run(0.5)
+        assert hv.waiting_tenants() == ["late"]
+        assert "late" not in hv.allocation()
+
+    def test_departure_admits_waiter_in_one_decision(self, resnet_artifact):
+        """A departure that unblocks a waiter re-applies the policy over the
+        full new tenant set once — residents must not grow and then shrink
+        again (double context switch) around the admission."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("a", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("b", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(
+            TenantSpec("c", 16, min_cores=8, artifact=resnet_artifact), at=0.1
+        )                                       # floor 8 can't fit -> waits
+        hv.schedule_departure("b", at=0.5)
+        metrics = hv.run(1.0)
+        assert hv.allocation() == {"a": 8, "c": 8}
+        assert metrics["a"].ctx_switches == 1   # only the shrink at b's arrival
+
+    def test_duplicate_arrival_updates_contract(self, resnet_artifact):
+        """Re-submitting a resident tenant updates its request instead of
+        crashing on a duplicate lease."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("a", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("a", 4, artifact=resnet_artifact), at=0.2)
+        hv.run(0.5)
+        assert hv.allocation() == {"a": 4}
+
+    def test_reconfig_signal_resizes_through_policy(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng)
+        hv.schedule_arrival(TenantSpec("t", 4, artifact=resnet_artifact), at=0.0)
+        hv.schedule_reconfig("t", 12, at=0.3)
+        metrics = hv.run(HORIZON)
+        assert hv.allocation() == {"t": 12}
+        assert metrics["t"].ctx_switches == 1
+        assert 0 < metrics["t"].ctx_overhead < 0.05   # ~ms, not ~100 s
+
+    def test_probe_event_rebalances_straggler(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = VirtualEngine(pool, fpga_small_core(), straggler_threshold=1.3)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng,
+                        probe_interval=0.05)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact), at=0.0)
+        eng.core_slowdown[0] = 3.0
+        metrics = hv.run(0.6)
+        assert metrics["t"].rebalances == 1           # one probe fired a fix
+
+    def test_invariants_checked_after_every_event(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        seen = []
+
+        def check(hv, ev):
+            hv.pool.check_isolation()
+            hv.pool.check_bandwidth()
+            total = sum(l.n_cores for l in hv.pool.leases.values())
+            assert total + len(hv.pool.free_cores()) == hv.pool.n_cores
+            seen.append(ev.kind)
+
+        hv = Hypervisor(pool, policy="even_split", executor=eng,
+                        probe_interval=0.25, on_event=check)
+        hv.schedule_arrival(TenantSpec("a", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("b", 16, artifact=resnet_artifact), at=0.2)
+        hv.schedule_reconfig("a", 4, at=0.4)
+        hv.schedule_departure("a", at=0.6)
+        hv.run(1.0)
+        assert EventKind.ARRIVAL in seen and EventKind.DEPARTURE in seen
+        assert EventKind.RECONFIG in seen and EventKind.PROBE in seen
+        assert len(hv.trace) == len(seen)
+
+    def test_degenerate_run_matches_direct_engine(self, resnet_artifact):
+        """VirtualEngine.run (a no_realloc hypervisor with an empty queue)
+        reproduces the seed engine's independent per-tenant clocks."""
+        eng1 = make_engine()
+        eng1.admit("t", resnet_artifact, 8)
+        direct = eng1.run(1.0)["t"]
+
+        pool2 = ResourcePool(16)
+        eng2 = make_engine(pool2)
+        hv = Hypervisor(pool2, policy="even_split", executor=eng2)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact), at=0.0)
+        evented = hv.run(1.0)["t"]
+        assert evented.completions == direct.completions
+
+
+class TestImmediateMode:
+    def test_admit_depart_resize_without_queue(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng)
+        assert hv.admit(TenantSpec("hi", 12, priority=2.0, artifact=resnet_artifact))
+        assert hv.admit(TenantSpec("lo", 8, priority=1.0, artifact=resnet_artifact))
+        assert hv.allocation() == {"hi": 12, "lo": 4}
+        hv.depart("hi")
+        hv.resize_request("lo", 8)
+        assert hv.allocation() == {"lo": 8}
+
+    def test_admit_failure_parks_in_wait_queue(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng)
+        assert hv.admit(TenantSpec("a", 16, artifact=resnet_artifact))
+        assert not hv.admit(TenantSpec("b", 2, artifact=resnet_artifact))
+        assert hv.waiting_tenants() == ["b"]
+        hv.depart("a")                       # frees the pool -> b admitted
+        assert hv.allocation() == {"b": 2}

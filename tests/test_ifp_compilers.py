@@ -1,6 +1,8 @@
 """IFP tiling + two-stage static/dynamic compilation invariants."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
