@@ -22,6 +22,7 @@ BENCHES = [
     ("multi_task", "bench_multi_task", "Fig 7 — multi-task dynamic workload"),
     ("straggler", "bench_straggler", "beyond-paper — straggler mitigation"),
     ("roofline", "bench_roofline", "§Roofline — dry-run derived terms"),
+    ("serving", "bench_serving", "beyond-paper — chunked/donated decode hot path"),
 ]
 
 

@@ -7,10 +7,15 @@ leases = the paper's SDM isolation), each running a ContinuousBatcher: real
 prefill + decode over a reduced qwen3 model, continuous admission into free
 slots, greedy sampling, per-request completion tracking.
 
+Decode runs the chunked/donated hot path: one device dispatch and one host
+sync per chunk of tokens, caches donated in place (serving.engine).
+
 Placement goes through the same Hypervisor as the simulation engine: the
 ``priority`` policy grants alice (priority 2) her full request and bob the
 rest; when bob departs, a policy-driven reconfiguration grows alice — the
-serving stack never calls the pool ad-hoc.
+serving stack never calls the pool ad-hoc.  Alice's batcher registers its
+live device state with the executor (pull-model register_state), so the
+regrow migrates her donated caches mid-run and decode resumes in place.
 """
 
 import sys
@@ -38,13 +43,33 @@ def main() -> None:
     print(f"pool: {pool.n_cores} cores; model: {cfg.name} "
           f"({cfg.param_count()/1e6:.1f}M params); policy: priority")
 
+    # static stage: AOT artifacts for every lease size alice can be resized
+    # to, so her reconfiguration is a cache lookup + state migration
+    import jax.numpy as jnp
+    import jax.sharding as jsh
+
+    def mesh_builder(n):
+        devs = np.array(list(jax.devices()) * n, dtype=object)[:n].reshape(n, 1)
+        return jsh.Mesh(devs, ("data", "model"))
+
+    ex.compiler.static_compile(
+        "decode", lambda x: x, (jax.ShapeDtypeStruct((4,), jnp.float32),),
+        lease_sizes=[12, 16], mesh_builder=mesh_builder,
+    )
+
     for tenant, n_cores, n_req, prio in (("alice", 12, 10, 2.0),
                                          ("bob", 4, 6, 1.0)):
-        if not hv.admit(TenantSpec(tenant, n_cores, priority=prio)):
+        artifact = "decode" if tenant == "alice" else None
+        if not hv.admit(TenantSpec(tenant, n_cores, priority=prio,
+                                   artifact=artifact)):
             raise RuntimeError(f"{tenant} was not admitted (waiting: {hv.waiting_tenants()})")
         lease = pool.pool.lease_of(tenant)
         batcher = ContinuousBatcher(params, cfg, slots=4, prompt_len=12,
-                                    max_len=40)
+                                    max_len=40, chunk=8)
+        # pull-model state registration: a resize landing between chunks
+        # migrates the donated caches and hands them back via adopt_state
+        ex.register_state(tenant, batcher.live_state,
+                          on_migrate=batcher.adopt_state)
         reqs = []
         for r in range(n_req):
             plen = int(rng.integers(3, 12))
@@ -56,16 +81,19 @@ def main() -> None:
         stats = batcher.run()
         print(f"{tenant}: {len(lease.cores)} cores, "
               f"{stats.completed}/{n_req} requests done, "
-              f"{stats.steps} decode steps, {stats.prefills} prefills, "
-              f"occupancy {stats.occupancy:.2f}")
+              f"{stats.steps} decode steps in {stats.chunks} chunks "
+              f"({stats.dispatches_per_token:.3f} dispatches/token), "
+              f"{stats.prefills} prefills, occupancy {stats.occupancy:.2f}")
         print(f"  sample output (req 0): {reqs[0].out}")
 
     # bob's service drains; the hypervisor reclaims his cores and the policy
     # regrows alice via an explicit reconfiguration signal
     hv.depart("bob")
     hv.resize_request("alice", 16)
+    last = ex.reconfig_log[-1]
     print(f"after bob departs + policy regrow: {hv.allocation()} "
-          f"({len(ex.reconfig_log)} policy-driven reconfigurations)")
+          f"({len(ex.reconfig_log)} policy-driven reconfigurations; "
+          f"alice's caches migrated in {last.get('t_migrate', 0)*1e3:.2f} ms)")
 
     # isolation invariant held throughout (also re-checked after every event)
     pool.pool.check_isolation()

@@ -20,7 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Sequence
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .allocator import allocate, allocate_weighted
 from .hwmodel import HardwareModel
@@ -51,6 +52,7 @@ class Schedule:
     plans: List[LayerPlan]
     compile_seconds: float                    # T_recompile
     instr_count: int
+    from_cache: bool = False                  # schedule reused from the LRU
 
     @property
     def n_cores(self) -> int:
@@ -67,10 +69,22 @@ class Schedule:
 
 
 class DynamicCompiler:
-    """Online stage of the two-stage static-dynamic compilation."""
+    """Online stage of the two-stage static-dynamic compilation.
 
-    def __init__(self, artifact: StaticArtifact) -> None:
+    Schedules are memoized in an LRU keyed on ``(len(core_ids), fastpath,
+    rounded core_speeds)``: the plan depends only on the core *count* (and
+    relative speeds), not on which physical cores the HRP granted, so a
+    Hypervisor reconfiguring a tenant back to a previously seen size reuses
+    the schedule at lookup cost — T_recompile collapses to ~µs on hits
+    (reported through :meth:`context_switch_cost`).
+    """
+
+    def __init__(self, artifact: StaticArtifact, *, cache_size: int = 32) -> None:
         self.artifact = artifact
+        self._schedule_cache: "OrderedDict[Tuple, Schedule]" = OrderedDict()
+        self._cache_size = cache_size
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     def compile(
         self,
@@ -79,7 +93,8 @@ class DynamicCompiler:
         single_core_fastpath: bool = True,
         core_speeds: Sequence[float] | None = None,
     ) -> Schedule:
-        """Generate the per-core instruction schedule for ``core_ids``.
+        """Generate (or reuse) the per-core instruction schedule for
+        ``core_ids``.
 
         ``single_core_fastpath`` implements the §6.3.3 optimization: when a
         tenant holds exactly one core, emit the monolithic untiled per-layer
@@ -90,6 +105,38 @@ class DynamicCompiler:
         receive proportionally fewer IFPs.
         """
         t0 = time.perf_counter()
+        key = (
+            len(core_ids), bool(single_core_fastpath),
+            None if core_speeds is None
+            else tuple(round(float(s), 3) for s in core_speeds),
+        )
+        hit = self._schedule_cache.get(key)
+        if hit is not None:
+            self._schedule_cache.move_to_end(key)
+            self.cache_hits += 1
+            # same plan, new physical cores; T_recompile = the lookup
+            return dataclasses.replace(
+                hit, core_ids=list(core_ids),
+                compile_seconds=time.perf_counter() - t0, from_cache=True,
+            )
+        sched = self._compile_uncached(
+            core_ids, single_core_fastpath=single_core_fastpath,
+            core_speeds=core_speeds, t0=t0,
+        )
+        self.cache_misses += 1
+        self._schedule_cache[key] = sched
+        if len(self._schedule_cache) > self._cache_size:
+            self._schedule_cache.popitem(last=False)
+        return sched
+
+    def _compile_uncached(
+        self,
+        core_ids: Sequence[int],
+        *,
+        single_core_fastpath: bool,
+        core_speeds: Sequence[float] | None,
+        t0: float,
+    ) -> Schedule:
         k = len(core_ids)
         art = self.artifact
         n_layers = len(art.workload)
@@ -175,4 +222,6 @@ class DynamicCompiler:
             "t_recompile": schedule.compile_seconds,
             "t_transfer": t_transfer,
             "t_context": schedule.compile_seconds + t_transfer,
+            "cache_hit": 1.0 if schedule.from_cache else 0.0,
+            "cache_hits": float(self.cache_hits),
         }

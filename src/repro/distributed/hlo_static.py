@@ -107,7 +107,9 @@ def _parse_instr_line(line: str) -> Optional[Tuple[str, str, str, str]]:
 # ends with `{`.
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+# `call` instructions name their target `to_apply=%comp` on newer XLA
+# versions and `calls=%comp` on older ones; accept both.
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")

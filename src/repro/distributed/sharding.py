@@ -41,6 +41,24 @@ from repro.models.transformer import LayerSpec, n_blocks, period_structure
 # ---------------------------------------------------------------------------
 
 
+def shard_map_compat(f, mesh: Mesh, *, in_specs, out_specs, manual_axes):
+    """Partial-manual shard_map across jax versions: ``jax.shard_map``
+    (axis_names = the MANUAL axes) on new jax, else
+    ``jax.experimental.shard_map.shard_map`` (auto = the complement)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(manual_axes), check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+        auto=frozenset(mesh.axis_names) - frozenset(manual_axes),
+    )
+
+
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
@@ -284,15 +302,14 @@ class ActivationPolicy:
             )
             return kc, vc, pc
 
-        return jax.shard_map(
-            upd, mesh=self.mesh,
+        return shard_map_compat(
+            upd, self.mesh,
             in_specs=(
                 P(None, "model"), P(None, "model"), P(None, "model"),
                 P(), P(), P(),
             ),
             out_specs=(P(None, "model"), P(None, "model"), P(None, "model")),
-            axis_names={"model"},
-            check_vma=False,
+            manual_axes={"model"},
         )(k_cache, v_cache, pos_cache, k_new, v_new, cur_pos)
 
     def embed(self, table, ids):
@@ -314,12 +331,11 @@ class ActivationPolicy:
             # shard_map (CloneAllReduce check-fails on the cloned region).
             return jax.lax.psum(out.astype(jnp.float32), "model").astype(tbl.dtype)
 
-        return jax.shard_map(
-            lookup, mesh=self.mesh,
+        return shard_map_compat(
+            lookup, self.mesh,
             in_specs=(P("model", None), P()),
             out_specs=P(),
-            axis_names={"model"},
-            check_vma=False,
+            manual_axes={"model"},
         )(table, ids)
 
 

@@ -8,6 +8,20 @@ jax import, and smoke tests must keep seeing 1 device).
 from __future__ import annotations
 
 
+def make_mesh_compat(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the jax version supports
+    them (``axis_types`` and ``jax.sharding.AxisType`` only exist on newer
+    jax; older versions default to Auto/GSPMD propagation anyway)."""
+    import jax
+
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False, dp_tp=None):
     """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading "pod"
     axis.  Axis types are Auto (GSPMD sharding propagation).
@@ -30,10 +44,7 @@ def make_production_mesh(*, multi_pod: bool = False, dp_tp=None):
             "(dryrun.py must set --xla_force_host_platform_device_count=512 "
             "before importing jax)"
         )
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes, devices=devices[:n])
 
 
 def make_host_mesh(shape=None, axes=("data", "model")):
@@ -45,7 +56,4 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     if shape is None:
         shape = (1, len(devices))
     n = int(np.prod(shape))
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh_compat(shape, axes, devices=devices[:n])

@@ -6,8 +6,10 @@
 Each tenant leases a disjoint core set from the VirtualAcceleratorPool
 (SDM — the paper's isolation model), runs a ContinuousBatcher over its own
 compiled programs, and can be resized at runtime through the TwoStageCompiler
-without recompilation.  On this CPU container cores are logical (1 device
-time-shared); on a real slice each core is a chip/sub-mesh.
+without recompilation.  Decode runs the chunked/donated hot path (one device
+dispatch and one host sync per --chunk tokens; see serving.batcher).  On
+this CPU container cores are logical (1 device time-shared); on a real
+slice each core is a chip/sub-mesh.
 """
 
 from __future__ import annotations
@@ -27,6 +29,8 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps fused per device dispatch (1 = per-step)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -51,7 +55,7 @@ def main(argv=None) -> int:
         lease = pool.lease(f"tenant{t}", pool.n_cores // args.tenants)
         batcher = ContinuousBatcher(
             params, cfg, slots=args.slots, prompt_len=args.prompt_len,
-            max_len=args.prompt_len + args.max_new + 2,
+            max_len=args.prompt_len + args.max_new + 2, chunk=args.chunk,
         )
         for r in range(args.requests):
             plen = int(rng.integers(2, args.prompt_len))
@@ -62,10 +66,13 @@ def main(argv=None) -> int:
         stats = batcher.run()
         print(f"  tenant{t}: lease={list(lease.cores)[:4]}..., "
               f"completed={stats.completed}/{args.requests}, "
-              f"decode steps={stats.steps}, occupancy={stats.occupancy:.2f}")
-        total_toks += stats.steps * args.slots
+              f"decode steps={stats.steps} in {stats.chunks} chunks "
+              f"({stats.dispatches} dispatches, {stats.host_syncs} syncs, "
+              f"{stats.dispatches_per_token:.3f} disp/token), "
+              f"occupancy={stats.occupancy:.2f}")
+        total_toks += stats.tokens
     dt = time.time() - t0
-    print(f"[serve] done in {dt:.1f}s (~{total_toks/dt:,.0f} slot-tokens/s)")
+    print(f"[serve] done in {dt:.1f}s (~{total_toks/dt:,.0f} tokens/s)")
     return 0
 
 

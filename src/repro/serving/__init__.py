@@ -1,6 +1,20 @@
-from .engine import ServeConfig, generate, make_prefill_step, make_serve_step
+from .engine import (
+    ServeConfig,
+    SlotState,
+    admit_program,
+    chunk_bucket,
+    decode_chunk_program,
+    generate,
+    init_slot_state,
+    make_admit_step,
+    make_decode_chunk,
+    make_prefill_step,
+    make_serve_step,
+)
 from .batcher import BatcherStats, ContinuousBatcher, Request
-from .kv_cache import cache_len, kv_cache_bytes, seed_kv_cache, seed_ssm_state
+from .kv_cache import (
+    cache_len, kv_cache_bytes, seed_kv_cache, seed_ssm_state, tree_bytes,
+)
 from .tenancy import (
     CompiledProgram,
     ServingExecutor,
@@ -10,9 +24,12 @@ from .tenancy import (
 )
 
 __all__ = [
-    "ServeConfig", "generate", "make_prefill_step", "make_serve_step",
-    "BatcherStats", "ContinuousBatcher", "Request", "cache_len",
-    "kv_cache_bytes", "seed_kv_cache", "seed_ssm_state", "CompiledProgram",
-    "ServingExecutor", "TwoStageCompiler", "VirtualAcceleratorPool",
-    "make_serving_hypervisor",
+    "ServeConfig", "SlotState", "admit_program", "chunk_bucket",
+    "decode_chunk_program", "generate", "init_slot_state",
+    "make_admit_step", "make_decode_chunk", "make_prefill_step",
+    "make_serve_step", "BatcherStats", "ContinuousBatcher", "Request",
+    "cache_len", "kv_cache_bytes", "seed_kv_cache", "seed_ssm_state",
+    "tree_bytes",
+    "CompiledProgram", "ServingExecutor", "TwoStageCompiler",
+    "VirtualAcceleratorPool", "make_serving_hypervisor",
 ]

@@ -1,18 +1,40 @@
-"""Continuous batching over fixed decode slots.
+"""Continuous batching over fixed decode slots — chunked, donated hot path.
 
 The decode program has a fixed batch shape (XLA requirement); the batcher
 multiplexes a dynamic request stream onto B fixed slots:
 
-* new requests are prefillled (padded to the slot prompt length) and their
-  caches scattered into free slots;
-* every decode step advances all active slots together;
+* new requests are prefilled **right-sized** (the joining rows only,
+  bucketed to powers of two so the jit cache stays small) and their caches
+  scattered into free slots with per-slot ``.at[:, slot].set`` writes — one
+  fused admission dispatch, no full-tree ``jnp.where`` merge;
+* decode runs in **chunks**: one ``lax.scan`` program advances all slots T
+  steps with EOS/max-token detection on device, so the host pays one
+  dispatch and one blocking sync per T tokens instead of per token.  T
+  adapts to queue pressure (short chunks while requests wait, long chunks
+  when the queue is dry) over the same power-of-two buckets;
+* cache and slot-state buffers are **donated** into both programs
+  (``jax.jit(..., donate_argnums=...)``), so XLA updates the ring-buffer KV
+  in place — without donation every token copies the entire cache tree;
 * slots free on EOS/max-tokens and are immediately refillable — the
   dynamic-workload serving pattern of the paper's private-cloud scenario,
   with the slot pool playing the role of the core pool at request
   granularity.
 
+Invariants:
+
+* ``self.caches``/``self.state`` always refer to the *latest* donated
+  outputs; any previously exported reference is dead.  External consumers
+  (e.g. ``ServingExecutor.register_state`` for mid-run resizes) must pull
+  through :meth:`live_state` and hand back migrated trees via
+  :meth:`adopt_state` — never hold the raw arrays across a step.
+* ``slot_req[i] is not None`` ⟺ slot i is active on device; the host mirror
+  is reconciled from the fetched ``emitted`` mask after every chunk.
+* A slot that finishes mid-chunk keeps decoding with its position frozen,
+  overwriting only its own ring slot; admission re-seeds the cache before
+  reuse (see ``serving.engine``).
+
 Host-side bookkeeping is numpy; device work happens only in the two jitted
-steps.  (Paged/block KV is out of scope — the ring-buffer cache is already
+programs.  (Paged/block KV is out of scope — the ring-buffer cache is
 position-indexed, so slot reuse is a pure overwrite.)
 """
 
@@ -26,8 +48,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import Caches
-from .engine import ServeConfig, make_prefill_step, make_serve_step
+from repro.models.transformer import Caches, init_caches
+from .kv_cache import tree_bytes
+from .engine import (
+    ServeConfig,
+    SlotState,
+    admit_program,
+    chunk_bucket,
+    decode_chunk_program,
+    init_slot_state,
+)
 
 
 @dataclasses.dataclass
@@ -42,36 +72,62 @@ class Request:
 
 @dataclasses.dataclass
 class BatcherStats:
-    steps: int = 0
-    prefills: int = 0
+    steps: int = 0               # device decode steps executed (Σ chunk T)
+    chunks: int = 0              # decode_chunk dispatches
+    prefills: int = 0            # admission dispatches
     completed: int = 0
     slot_busy_steps: int = 0
     slot_total_steps: int = 0
+    dispatches: int = 0          # all jitted dispatches (admit + chunk)
+    host_syncs: int = 0          # blocking device→host fetches
+    decode_tokens: int = 0       # tokens emitted by decode chunks
+    admit_tokens: int = 0        # first tokens emitted at admission
+    cache_bytes: int = 0         # resident cache-tree size (donated in place)
+    admit_scatter_bytes: int = 0  # bytes scattered at admission (vs. full-tree)
 
     @property
     def occupancy(self) -> float:
         return self.slot_busy_steps / max(self.slot_total_steps, 1)
+
+    @property
+    def tokens(self) -> int:
+        return self.decode_tokens + self.admit_tokens
+
+    @property
+    def dispatches_per_token(self) -> float:
+        return self.dispatches / max(self.tokens, 1)
+
+    @property
+    def syncs_per_token(self) -> float:
+        return self.host_syncs / max(self.tokens, 1)
+
+    @property
+    def decode_dispatches_per_token(self) -> float:
+        """Dispatches on the pure-decode path: 1/T when chunks run full."""
+        return self.chunks / max(self.decode_tokens, 1)
 
 
 class ContinuousBatcher:
     """Fixed-slot continuous batcher for one tenant's model."""
 
     def __init__(self, params, cfg, *, slots: int, prompt_len: int,
-                 max_len: int, policy=None, attn_impl: str = "xla"):
+                 max_len: int, policy=None, attn_impl: str = "xla",
+                 chunk: int = 8):
         self.params = params
         self.cfg = cfg
         self.B = slots
         self.prompt_len = prompt_len
-        scfg = ServeConfig(max_len=max_len, attn_impl=attn_impl)
+        self.chunk = max(1, chunk)
+        scfg = ServeConfig(max_len=max_len, attn_impl=attn_impl,
+                           chunk=self.chunk)
         self.scfg = scfg
-        self._prefill = jax.jit(make_prefill_step(cfg, scfg, policy=policy))
-        self._serve = jax.jit(make_serve_step(cfg, scfg, policy=policy))
+        self._policy = policy
+        self._admit_fn = admit_program(cfg, scfg, policy=policy)
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * slots
-        self.slot_pos = np.zeros(slots, dtype=np.int32)
-        self.slot_tok = np.zeros(slots, dtype=np.int32)
-        self.caches: Optional[Caches] = None
-        self.stats = BatcherStats()
+        self.caches: Caches = init_caches(cfg, slots, max_len)
+        self.state: SlotState = init_slot_state(slots)
+        self.stats = BatcherStats(cache_bytes=tree_bytes(self.caches))
         self._key = jax.random.PRNGKey(0)
 
     # -- request intake ------------------------------------------------
@@ -82,7 +138,20 @@ class ContinuousBatcher:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    # -- admission: batched prefill into free slots ---------------------
+    # -- mid-run migration (Hypervisor resize between chunks) -----------
+    def live_state(self) -> Dict[str, Any]:
+        """Current device state, for ``TwoStageCompiler.reconfigure``
+        migration.  Pull-only: the returned arrays are donated (dead) after
+        the next step — register this *method* (not its result) with
+        ``ServingExecutor.register_state``."""
+        return {"caches": self.caches, "slots": self.state}
+
+    def adopt_state(self, state: Dict[str, Any]) -> None:
+        """Adopt a migrated state tree; decode resumes at the same token."""
+        self.caches = state["caches"]
+        self.state = state["slots"]
+
+    # -- admission: right-sized prefill + per-slot scatter ---------------
     def _admit(self) -> None:
         free = self._free_slots()
         if not free or not self.queue:
@@ -90,58 +159,91 @@ class ContinuousBatcher:
         joins = []
         while free and self.queue:
             joins.append((free.pop(0), self.queue.popleft()))
-        # pad prompts (left-pad with 0s; positions start at pad offset)
-        B = self.B
-        toks = np.zeros((B, self.prompt_len), dtype=np.int32)
-        for slot, req in joins:
+        n = len(joins)
+        nb = min(1 << (n - 1).bit_length() if n > 1 else 1, self.B)
+        toks = np.zeros((nb, self.prompt_len), dtype=np.int32)
+        slots = np.zeros((nb,), dtype=np.int32)
+        budget = np.zeros((nb,), dtype=np.int32)
+        eos = np.full((nb,), -1, dtype=np.int32)
+        for j, (slot, req) in enumerate(joins):
             p = req.prompt
-            toks[slot, self.prompt_len - len(p):] = p
-        logits, new_caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+            toks[j, self.prompt_len - len(p):] = p   # left-pad with 0s
+            slots[j] = slot
+            budget[j] = req.max_new
+            if req.eos is not None:
+                eos[j] = req.eos
+        # pad a partial bucket by repeating row 0: duplicate-index scatters
+        # then write identical values, which is deterministic
+        for j in range(n, nb):
+            toks[j] = toks[0]
+            slots[j] = slots[0]
+            budget[j] = budget[0]
+            eos[j] = eos[0]
+        pos0 = np.full((nb,), self.prompt_len, dtype=np.int32)
+        nxt, self.caches, self.state = self._admit_fn(
+            self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+            self.state, jnp.asarray(slots), jnp.asarray(pos0),
+            jnp.asarray(budget), jnp.asarray(eos),
+        )
         self.stats.prefills += 1
-        if self.caches is None:
-            self.caches = new_caches
-        else:
-            sel = np.zeros((B,), dtype=bool)
-            for slot, _ in joins:
-                sel[slot] = True
-            selj = jnp.asarray(sel)
+        self.stats.dispatches += 1
+        self.stats.admit_scatter_bytes += int(
+            self.stats.cache_bytes * nb / max(self.B, 1)
+        )
+        nxt_np = np.asarray(nxt)
+        self.stats.host_syncs += 1
+        for j, (slot, req) in enumerate(joins):
+            tok = int(nxt_np[j])
+            req.out.append(tok)
+            self.stats.admit_tokens += 1
+            hit_eos = req.eos is not None and tok == req.eos
+            if len(req.out) >= req.max_new or hit_eos:
+                req.done = True
+                self.stats.completed += 1
+            else:
+                self.slot_req[slot] = req
 
-            def merge(old, new):
-                # batch axis position differs per leaf rank: caches leaves are
-                # (nb, B, ...) for kv/ssm, broadcast select on axis 1
-                cond = selj.reshape((1, -1) + (1,) * (old.ndim - 2))
-                return jnp.where(cond, new, old)
+    # -- chunk sizing: adaptive to queue pressure ------------------------
+    def _pick_chunk(self, active: List[int]) -> int:
+        """Queue pressure → short chunks (the earliest completion bounds
+        admission latency); dry queue → chunks up to the longest remaining
+        budget.  Sizes snap to power-of-two buckets (bounded jit cache)."""
+        rem = [self.slot_req[i].max_new - len(self.slot_req[i].out)
+               for i in active]
+        horizon = min(rem) if self.queue else max(rem)
+        return chunk_bucket(max(1, min(horizon, self.chunk)))
 
-            self.caches = jax.tree.map(merge, self.caches, new_caches)
-        nxt = np.asarray(jnp.argmax(logits[..., : self.cfg.vocab], axis=-1))
-        for slot, req in joins:
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = self.prompt_len
-            self.slot_tok[slot] = nxt[slot]
-            req.out.append(int(nxt[slot]))
+    def _chunk_fn(self, n_steps: int) -> Callable:
+        return decode_chunk_program(self.cfg, self.scfg, n_steps,
+                                    policy=self._policy)
 
-    # -- one decode step over all slots ---------------------------------
+    # -- one scheduling round: admit, then decode one chunk ---------------
     def step(self) -> None:
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        self.stats.slot_total_steps += self.B
-        self.stats.slot_busy_steps += len(active)
         if not active:
             return
+        T = self._pick_chunk(active)
         self._key, sub = jax.random.split(self._key)
-        toks, logits, self.caches = self._serve(
-            self.params, jnp.asarray(self.slot_tok), self.caches,
-            jnp.asarray(self.slot_pos), sub,
+        self.caches, self.state, toks, emitted = self._chunk_fn(T)(
+            self.params, self.caches, self.state, sub
         )
-        self.stats.steps += 1
-        toks_np = np.asarray(toks)
-        self.slot_pos[active] += 1
+        self.stats.chunks += 1
+        self.stats.dispatches += 1
+        self.stats.steps += T
+        toks_np, emit_np = jax.device_get((toks, emitted))   # ONE host sync
+        self.stats.host_syncs += 1
+        self.stats.slot_total_steps += self.B * T
+        self.stats.slot_busy_steps += int(emit_np.sum())
         for i in active:
             req = self.slot_req[i]
-            tok = int(toks_np[i])
-            req.out.append(tok)
-            self.slot_tok[i] = tok
-            hit_eos = req.eos is not None and tok == req.eos
+            for t in range(T):
+                if not emit_np[t, i]:
+                    break
+                req.out.append(int(toks_np[t, i]))
+                self.stats.decode_tokens += 1
+            hit_eos = req.eos is not None and req.out and \
+                req.out[-1] == req.eos
             if len(req.out) >= req.max_new or hit_eos:
                 req.done = True
                 self.slot_req[i] = None

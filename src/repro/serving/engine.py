@@ -1,23 +1,61 @@
-"""Inference engine: prefill/serve step factories and a host generate loop.
+"""Inference engine: prefill/serve/decode-chunk factories and host generate.
 
 ``prefill_step`` and ``serve_step`` are the two programs the dry-run lowers
 for the inference cells (prefill_32k → prefill_step; decode_32k / long_500k
 → serve_step).  Both are pure functions of (params, inputs, caches) so the
 tenancy layer can AOT-compile them per (arch × shape × lease size) — the
 TPU-side "instruction frame package".
+
+The serving hot path is **chunked and donated**:
+
+* :func:`make_decode_chunk` fuses ``n_steps`` decode iterations into one
+  ``lax.scan`` program with on-device slot bookkeeping (:class:`SlotState`:
+  active mask, per-slot positions, EOS/max-token detection inside the scan),
+  so a batcher issues one device dispatch and one host sync per chunk
+  instead of per token.
+* Callers jit these programs with ``donate_argnums`` on the cache/state
+  arguments so XLA updates the ring-buffer KV in place; without donation
+  every token would copy the entire cache tree (the dominant decode-bytes
+  term).  A donated input buffer is dead after the call — owners must adopt
+  the returned tree (see ``ContinuousBatcher``).
+* :func:`make_admit_step` fuses prefill + per-slot scatter admission into
+  one donated program (see ``serving.batcher`` for the slot protocol).
+* The vocab-padding mask is built **once** per (vocab, padded) pair
+  (:meth:`ServeConfig.logit_mask`) and applied as a fused additive mask,
+  instead of rebuilding a full-logits ``.at[..., vocab:].set(-inf)`` copy on
+  every step.
+
+Invariant: a slot that deactivates mid-chunk (EOS or token budget) keeps
+decoding with its position frozen — it overwrites its *own* ring slot with
+dead values, which is safe because admission re-seeds the slot's cache from
+prefill before it is reused.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+import functools
+from collections import OrderedDict
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import decode_step, encoder_forward, prefill
 from repro.models.transformer import Caches
+
+
+@functools.lru_cache(maxsize=32)
+def _logit_mask(vocab: int, vocab_padded: int):
+    """Additive mask (Vp,) — 0 on the real vocab, -inf on padding.  Built
+    once and closed over by the step functions (a hoisted jit constant),
+    replacing the per-step full-logits ``.set(-inf)`` copy."""
+    if vocab_padded <= vocab:
+        return None
+    m = np.zeros((vocab_padded,), np.float32)
+    m[vocab:] = -np.inf
+    return jnp.asarray(m)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +64,32 @@ class ServeConfig:
     attn_impl: str = "xla"       # xla | pallas
     greedy: bool = True
     temperature: float = 1.0
+    chunk: int = 8               # max decode steps fused per device dispatch
+
+    def logit_mask(self, cfg):
+        return _logit_mask(cfg.vocab, cfg.vocab_padded)
+
+
+def chunk_bucket(n: int) -> int:
+    """Largest power of two ≤ n — the fixed set of chunk/prefill shapes the
+    jit cache may hold (log2 many programs, no per-request recompiles)."""
+    return 1 << (max(n, 1).bit_length() - 1)
+
+
+def select_token(logits, mask, scfg: ServeConfig, key):
+    """Greedy or sampled next-token selection under the vocab-padding mask."""
+    if mask is not None:
+        logits = logits + mask.astype(logits.dtype)
+    if scfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / scfg.temperature, axis=-1
+    ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Single-step programs (AOT surface for cells.py / tenancy)
+# ---------------------------------------------------------------------------
 
 
 def make_prefill_step(cfg, scfg: ServeConfig, *, policy=None):
@@ -51,30 +115,202 @@ def make_prefill_step(cfg, scfg: ServeConfig, *, policy=None):
 def make_serve_step(cfg, scfg: ServeConfig, *, policy=None):
     """serve_step(params, tokens (B,), caches, cur_pos (B,), key) ->
     (next_tokens (B,), logits, caches)."""
+    mask = scfg.logit_mask(cfg)
 
     def serve_step(params, tokens, caches: Caches, cur_pos, key):
         logits, caches = decode_step(
             params, tokens, caches, cur_pos, cfg, impl=scfg.attn_impl,
             policy=policy,
         )
-        # mask vocab padding before selection
-        logits = logits.at[..., cfg.vocab:].set(-jnp.inf) if cfg.vocab_padded > cfg.vocab else logits
-        if scfg.greedy:
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            nxt = jax.random.categorical(
-                key, logits.astype(jnp.float32) / scfg.temperature, axis=-1
-            ).astype(jnp.int32)
+        if mask is not None:
+            logits = logits + mask.astype(logits.dtype)
+        nxt = select_token(logits, None, scfg, key)
         return nxt, logits, caches
 
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Chunked decode with on-device slot bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class SlotState(NamedTuple):
+    """Per-slot decode bookkeeping, resident on device between dispatches.
+
+    tokens:     (B,) int32 — last emitted token (next decode input)
+    cur_pos:    (B,) int32 — absolute position the next token writes to
+    active:     (B,) bool  — slot is mid-generation
+    remaining:  (B,) int32 — decode tokens left until the slot's max budget
+    eos:        (B,) int32 — per-slot EOS id, -1 = none
+    """
+
+    tokens: jax.Array
+    cur_pos: jax.Array
+    active: jax.Array
+    remaining: jax.Array
+    eos: jax.Array
+
+
+def init_slot_state(batch: int) -> SlotState:
+    return SlotState(
+        tokens=jnp.zeros((batch,), jnp.int32),
+        cur_pos=jnp.zeros((batch,), jnp.int32),
+        active=jnp.zeros((batch,), bool),
+        remaining=jnp.zeros((batch,), jnp.int32),
+        eos=jnp.full((batch,), -1, jnp.int32),
+    )
+
+
+def make_decode_chunk(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
+    """decode_chunk(params, caches, state, key) ->
+    (caches, state, tokens (T, B), emitted (T, B)).
+
+    One ``lax.scan`` over ``n_steps`` decode iterations.  EOS and
+    token-budget detection happen inside the scan: a slot that finishes
+    deactivates immediately, its position freezes, and later iterations
+    emit nothing for it (``emitted`` is the validity mask).  Jit this with
+    ``donate_argnums=(1, 2)`` so the cache tree is updated in place.
+    """
+    mask = scfg.logit_mask(cfg)
+
+    def decode_chunk(params, caches: Caches, state: SlotState, key):
+        def body(carry, _):
+            caches, st, key = carry
+            key, sub = jax.random.split(key)
+            logits, caches = decode_step(
+                params, st.tokens, caches, st.cur_pos, cfg,
+                impl=scfg.attn_impl, policy=policy,
+            )
+            nxt = select_token(logits, mask, scfg, sub)
+            nxt = jnp.where(st.active, nxt, st.tokens)
+            emitted = st.active
+            remaining = st.remaining - st.active.astype(jnp.int32)
+            done = st.active & ((nxt == st.eos) | (remaining <= 0))
+            st = SlotState(
+                tokens=nxt,
+                cur_pos=st.cur_pos + st.active.astype(jnp.int32),
+                active=st.active & ~done,
+                remaining=remaining,
+                eos=st.eos,
+            )
+            return (caches, st, key), (nxt, emitted)
+
+        (caches, state, _), (toks, emitted) = jax.lax.scan(
+            body, (caches, state, key), None, length=n_steps
+        )
+        return caches, state, toks, emitted
+
+    return decode_chunk
+
+
+# Process-wide executable LRU: one compile per (arch cfg × serve shape ×
+# chunk length) — the AOT "instruction frame package" discipline.  A new
+# batcher for the same tenant shape reuses the compiled program instead of
+# re-jitting (policy objects are compared by identity and pinned by the
+# cached value so their id cannot be recycled while cached).  Bounded so a
+# long-running server that churns policies/shapes cannot grow without limit.
+_PROGRAM_CACHE: "OrderedDict[Tuple, Tuple[Any, Any]]" = OrderedDict()
+_PROGRAM_CACHE_SIZE = 64
+
+
+def _cached_program(key: Tuple, policy, build):
+    hit = _PROGRAM_CACHE.get(key)
+    if hit is None:
+        _PROGRAM_CACHE[key] = hit = (build(), policy)
+        if len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
+            _PROGRAM_CACHE.popitem(last=False)
+    else:
+        _PROGRAM_CACHE.move_to_end(key)
+    return hit[0]
+
+
+def decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
+    """Jitted :func:`make_decode_chunk` with the cache/state donated."""
+    # the traced program never reads scfg.chunk (n_steps is the chunk);
+    # normalize it out of the key so batchers that differ only in their max
+    # chunk share executables
+    key_scfg = dataclasses.replace(scfg, chunk=0)
+    return _cached_program(
+        ("chunk", cfg, key_scfg, int(n_steps), id(policy)), policy,
+        lambda: jax.jit(make_decode_chunk(cfg, scfg, n_steps, policy=policy),
+                        donate_argnums=(1, 2)),
+    )
+
+
+def admit_program(cfg, scfg: ServeConfig, *, policy=None):
+    """Jitted :func:`make_admit_step` with the cache/state donated."""
+    key_scfg = dataclasses.replace(scfg, chunk=0)
+    return _cached_program(
+        ("admit", cfg, key_scfg, id(policy)), policy,
+        lambda: jax.jit(make_admit_step(cfg, scfg, policy=policy),
+                        donate_argnums=(2, 3)),
+    )
+
+
+def make_admit_step(cfg, scfg: ServeConfig, *, policy=None):
+    """admit_step(params, batch, caches, state, slots, pos0, budget, eos) ->
+    (first_tokens (n,), caches, state).
+
+    Right-sized admission: ``batch["tokens"]`` is (n, S) for the *bucketed*
+    number of joining requests — prefill runs over n rows, not the full slot
+    count — and the fresh caches are merged into the resident tree with
+    per-slot scatters (``.at[:, slots].set``) instead of a full-tree
+    ``jnp.where``.  Jit with ``donate_argnums=(2, 3)``.
+
+    Duplicate entries in ``slots`` are allowed only when they carry
+    identical rows (the batcher pads a partial bucket by repeating row 0),
+    making the duplicate-index scatter deterministic.
+    """
+    mask = scfg.logit_mask(cfg)
+    prefill_step = make_prefill_step(cfg, scfg, policy=policy)
+
+    def admit_step(params, batch, caches: Caches, state: SlotState,
+                   slots, pos0, budget, eos):
+        logits, fresh = prefill_step(params, batch)
+        # admission is greedy: the prompt's continuation token
+        if mask is not None:
+            logits = logits + mask.astype(logits.dtype)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def merge(old, new):
+            return old.at[:, slots].set(new.astype(old.dtype))
+
+        kv = jax.tree.map(merge, caches.kv, fresh.kv)
+        ssm = jax.tree.map(merge, caches.ssm, fresh.ssm)
+        cross = caches.cross
+        if cross is not None and fresh.cross is not None:
+            cross = jax.tree.map(merge, cross, fresh.cross)
+        # the admission token already counts toward the budget; a slot with
+        # nothing left (or an immediate EOS) never activates
+        remaining = budget - 1
+        state = SlotState(
+            tokens=state.tokens.at[slots].set(nxt),
+            cur_pos=state.cur_pos.at[slots].set(pos0),
+            active=state.active.at[slots].set(
+                (remaining > 0) & (nxt != eos)
+            ),
+            remaining=state.remaining.at[slots].set(remaining),
+            eos=state.eos.at[slots].set(eos),
+        )
+        return nxt, Caches(kv=kv, ssm=ssm, cross=cross), state
+
+    return admit_step
+
+
+# ---------------------------------------------------------------------------
+# Host generate loop (chunked)
+# ---------------------------------------------------------------------------
 
 
 def generate(
     params, cfg, prompt_tokens, *, n_new: int, scfg: Optional[ServeConfig] = None,
     policy=None, extras: Optional[Dict[str, Any]] = None, seed: int = 0,
 ):
-    """Host loop: prefill the prompt, then decode ``n_new`` tokens greedily.
+    """Prefill the prompt, then decode ``n_new`` tokens through the chunked
+    path: the remaining budget is covered by power-of-two chunk buckets
+    (at most ceil((n_new-1)/chunk) + log2(chunk) dispatches instead of
+    n_new-1 — the bucketing bounds the jit cache).
 
     prompt_tokens: (B, S) int32.  Returns (B, n_new) int32.
     """
@@ -82,19 +318,30 @@ def generate(
     scfg = scfg or ServeConfig(max_len=S + n_new)
     batch = {"tokens": prompt_tokens, **(extras or {})}
     prefill_step = jax.jit(make_prefill_step(cfg, scfg, policy=policy))
-    serve_step = jax.jit(make_serve_step(cfg, scfg, policy=policy))
     logits, caches = prefill_step(params, batch)
-    if cfg.vocab_padded > cfg.vocab:
-        logits = logits.at[..., cfg.vocab:].set(-jnp.inf)
+    mask = scfg.logit_mask(cfg)
+    if mask is not None:
+        logits = logits + mask.astype(logits.dtype)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     offset = S
     if cfg.family == "vlm" and extras and "extra_embeds" in extras:
         offset = S + extras["extra_embeds"].shape[1]
-    out = [tok]
+
+    out = [tok[:, None]]
+    left = n_new - 1
+    state = SlotState(
+        tokens=tok,
+        cur_pos=jnp.full((B,), offset, jnp.int32),
+        active=jnp.ones((B,), bool),
+        remaining=jnp.full((B,), max(left, 0), jnp.int32),
+        eos=jnp.full((B,), -1, jnp.int32),
+    )
     key = jax.random.PRNGKey(seed)
-    for i in range(n_new - 1):
+    while left > 0:
+        T = chunk_bucket(min(left, max(scfg.chunk, 1)))
+        fn = decode_chunk_program(cfg, scfg, T, policy=policy)
         key, sub = jax.random.split(key)
-        cur = jnp.full((B,), offset + i, dtype=jnp.int32)
-        tok, _, caches = serve_step(params, tok, caches, cur, sub)
-        out.append(tok)
-    return jnp.stack(out, axis=1)
+        caches, state, toks, _ = fn(params, caches, state, sub)
+        out.append(jnp.moveaxis(toks, 0, 1))
+        left -= T
+    return jnp.concatenate(out, axis=1)

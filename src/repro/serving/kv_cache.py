@@ -55,6 +55,12 @@ def seed_ssm_state(state: SSMState) -> SSMState:
     return state
 
 
+def tree_bytes(tree) -> int:
+    """Resident bytes of a cache pytree (the quantity donation keeps from
+    being re-copied every decode step; reported as BatcherStats.cache_bytes)."""
+    return sum(int(x.nbytes) for x in jax.tree.leaves(tree))
+
+
 def kv_cache_bytes(cfg, batch: int, max_len: int) -> int:
     """HBM bytes of the full decode cache for admission control."""
     from repro.models.transformer import n_blocks, period_structure

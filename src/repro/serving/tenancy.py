@@ -217,14 +217,27 @@ class ServingExecutor:
         self.state_specs: Dict[str, Any] = {}
         self.reconfig_log: List[Dict[str, Any]] = []
         self._keys: Dict[str, Optional[str]] = {}
+        self._on_migrate: Dict[str, Callable[[Any], None]] = {}
 
     def register_state(self, tenant: str, live_state: Any,
-                       state_specs: Any = None) -> None:
+                       state_specs: Any = None,
+                       on_migrate: Optional[Callable[[Any], None]] = None,
+                       ) -> None:
         """Attach the tenant's live state (params/caches) so policy-driven
-        resizes migrate it onto the new mesh."""
+        resizes migrate it onto the new mesh.
+
+        ``live_state`` may be the state pytree itself, or a zero-arg
+        callable returning the *current* state.  The callable form is
+        required for owners that donate their buffers every dispatch (e.g.
+        ``ContinuousBatcher.live_state``): a stored pytree reference would
+        be dead by the time a resize lands between chunks.  ``on_migrate``
+        is invoked with the migrated tree after a resize so the owner can
+        adopt it (``ContinuousBatcher.adopt_state``)."""
         self.live_state[tenant] = live_state
         if state_specs is not None:
             self.state_specs[tenant] = state_specs
+        if on_migrate is not None:
+            self._on_migrate[tenant] = on_migrate
 
     def program_of(self, tenant: str) -> Optional[CompiledProgram]:
         return self.programs.get(tenant)
@@ -267,19 +280,27 @@ class ServingExecutor:
             self.vpool.resize(name, n_cores)
             self.reconfig_log.append({"tenant": name, "n_cores": n_cores})
             return
+        state = self.live_state.get(name)
+        pulled = callable(state)
+        if pulled:
+            state = state()                  # pull the owner's CURRENT tree
         prog, migrated, timing = self.compiler.reconfigure(
             name, key, n_cores,
-            live_state=self.live_state.get(name),
+            live_state=state,
             state_specs=self.state_specs.get(name),
         )
         self.programs[name] = prog
-        if name in self.live_state:
+        if name in self.live_state and not pulled:
             self.live_state[name] = migrated
+        cb = self._on_migrate.get(name)
+        if cb is not None and migrated is not None:
+            cb(migrated)
         self.reconfig_log.append({"tenant": name, "n_cores": n_cores, **timing})
 
     def exec_remove(self, name: str, at: float) -> None:
         self.vpool.release(name)
-        for table in (self.programs, self.live_state, self.state_specs, self._keys):
+        for table in (self.programs, self.live_state, self.state_specs,
+                      self._keys, self._on_migrate):
             table.pop(name, None)
 
 

@@ -1,0 +1,46 @@
+"""DynamicCompiler schedule LRU: repeated Hypervisor reconfigs to a
+previously seen core count reuse the plan at lookup cost.  (Separate from
+test_ifp_compilers.py, which is skipped wholly when hypothesis is absent.)"""
+
+import pytest
+
+from repro.core import DynamicCompiler, fpga_small_core
+
+
+class TestScheduleLRU:
+    def test_reuses_previously_seen_core_counts(self, resnet_artifact):
+        """Reconfiguring back to a core count seen before returns the
+        memoized schedule (same plan, new physical cores) and reports the
+        hit through context_switch_cost."""
+        hw = fpga_small_core()
+        dyn = DynamicCompiler(resnet_artifact)
+        a = dyn.compile([0, 1, 2, 3])
+        b = dyn.compile([2, 3])
+        assert dyn.cache_hits == 0 and dyn.cache_misses == 2
+        c = dyn.compile([4, 5, 6, 7])                 # same count, new cores
+        assert dyn.cache_hits == 1
+        assert c.from_cache and not a.from_cache
+        assert c.core_ids == [4, 5, 6, 7]
+        assert c.per_core_layers is a.per_core_layers  # plan reused, not rebuilt
+        assert c.estimated_latency(hw) == pytest.approx(a.estimated_latency(hw))
+        cost = dyn.context_switch_cost(c, hw)
+        assert cost["cache_hit"] == 1.0 and cost["cache_hits"] == 1.0
+        assert dyn.context_switch_cost(b, hw)["cache_hit"] == 0.0
+
+    def test_core_speeds_participate_in_key(self, resnet_artifact):
+        """A straggler probe (heterogeneous speeds) never reuses the
+        homogeneous plan, and vice versa; repeated probes at the same
+        rounded speeds do hit."""
+        dyn = DynamicCompiler(resnet_artifact)
+        dyn.compile([0, 1, 2, 3])
+        d = dyn.compile([0, 1, 2, 3], core_speeds=[1.0, 1.0, 1.0, 0.5])
+        assert not d.from_cache
+        e = dyn.compile([0, 1, 2, 3], core_speeds=[1.0, 1.0, 1.0, 0.5])
+        assert e.from_cache
+
+    def test_lru_evicts_oldest(self, resnet_artifact):
+        dyn = DynamicCompiler(resnet_artifact, cache_size=2)
+        dyn.compile([0])
+        dyn.compile([0, 1])
+        dyn.compile([0, 1, 2])            # evicts the k=1 entry
+        assert not dyn.compile([0]).from_cache

@@ -9,10 +9,24 @@ import pytest
 from repro.configs import get_reduced
 from repro.models import init_params
 from repro.serving.batcher import ContinuousBatcher, Request
-from repro.serving.engine import ServeConfig, generate
+from repro.serving.engine import (
+    ServeConfig,
+    SlotState,
+    generate,
+    init_slot_state,
+    make_decode_chunk,
+    make_prefill_step,
+    make_serve_step,
+)
 from repro.serving.tenancy import TwoStageCompiler, VirtualAcceleratorPool
 
 KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    return cfg, init_params(cfg, KEY)
 
 
 class TestGenerate:
@@ -81,6 +95,222 @@ class TestContinuousBatcher:
                                 max_new=6))
         busy.run(max_steps=100)
         assert r_solo.out == r_busy.out
+
+
+class TestChunkedDecode:
+    """The chunked hot path must be a pure performance change: token
+    streams identical to the per-step reference, caches updated in place."""
+
+    def _prefill(self, cfg, params, *, B=2, S=8, max_len=32):
+        scfg = ServeConfig(max_len=max_len)
+        pre = jax.jit(make_prefill_step(cfg, scfg))
+        toks = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 3 + 1) % cfg.vocab
+        logits, caches = pre(params, {"tokens": toks})
+        t0 = jnp.argmax(logits[..., : cfg.vocab], -1).astype(jnp.int32)
+        return scfg, t0, caches, S
+
+    def test_decode_chunk_matches_serve_step_loop(self, qwen):
+        """One fused T-step scan == T per-step dispatches, token for token."""
+        cfg, params = qwen
+        scfg, t0, caches, S = self._prefill(cfg, params)
+        B = t0.shape[0]
+        T = 6
+
+        step = jax.jit(make_serve_step(cfg, scfg))
+        ref_caches = caches
+        tok = t0
+        ref = []
+        for i in range(T):
+            tok, _, ref_caches = step(
+                params, tok, ref_caches, jnp.full((B,), S + i, jnp.int32),
+                jax.random.PRNGKey(7),
+            )
+            ref.append(np.asarray(tok))
+
+        chunk = jax.jit(make_decode_chunk(cfg, scfg, T))
+        state = SlotState(
+            tokens=t0,
+            cur_pos=jnp.full((B,), S, jnp.int32),
+            active=jnp.ones((B,), bool),
+            remaining=jnp.full((B,), T + 1, jnp.int32),
+            eos=jnp.full((B,), -1, jnp.int32),
+        )
+        _, state, toks, emitted = chunk(params, caches, state, jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(np.asarray(toks), np.stack(ref))
+        assert bool(np.asarray(emitted).all())
+
+    def test_eos_mid_chunk_freezes_slot(self, qwen):
+        """A slot hitting EOS inside the chunk stops emitting and freezes its
+        position; the other slot keeps decoding the same tokens as without
+        any EOS."""
+        cfg, params = qwen
+        scfg, t0, caches0, S = self._prefill(cfg, params)
+        B = t0.shape[0]
+        T = 6
+        chunk = jax.jit(make_decode_chunk(cfg, scfg, T))
+
+        def run(eos):
+            state = SlotState(
+                tokens=t0,
+                cur_pos=jnp.full((B,), S, jnp.int32),
+                active=jnp.ones((B,), bool),
+                remaining=jnp.full((B,), T + 1, jnp.int32),
+                eos=eos,
+            )
+            return chunk(params, caches0, state, jax.random.PRNGKey(7))
+
+        _, _, free_toks, _ = run(jnp.full((B,), -1, jnp.int32))
+        free = np.asarray(free_toks)                      # (T, B)
+        # force slot 0 to hit EOS at step 2
+        eos0 = int(free[2, 0])
+        eos = jnp.array([eos0, -1], dtype=jnp.int32)
+        _, state, toks, emitted = run(eos)
+        toks, emitted = np.asarray(toks), np.asarray(emitted)
+        assert emitted[: 3, 0].all() and not emitted[3:, 0].any()
+        assert emitted[:, 1].all()
+        np.testing.assert_array_equal(toks[:3, 0], free[:3, 0])
+        np.testing.assert_array_equal(toks[:, 1], free[:, 1])
+        st = jax.device_get(state)
+        assert not bool(st.active[0]) and bool(st.active[1])
+        assert int(st.cur_pos[0]) == S + 3                # frozen at EOS
+        assert int(st.cur_pos[1]) == S + T
+
+    def test_chunked_batcher_matches_per_step_with_eos(self, qwen):
+        """chunk=8 and chunk=1 batchers produce identical request outputs,
+        including a request whose EOS lands mid-chunk."""
+        cfg, params = qwen
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(1, cfg.vocab, size=1 + i % 6).astype(np.int32)
+                   for i in range(8)]
+
+        def run(chunk, eos_map):
+            b = ContinuousBatcher(params, cfg, slots=4, prompt_len=8,
+                                  max_len=64, chunk=chunk)
+            reqs = [Request(rid=i, prompt=p, max_new=10 + i % 4,
+                            eos=eos_map.get(i))
+                    for i, p in enumerate(prompts)]
+            for r in reqs:
+                b.submit(r)
+            b.run(max_steps=2000)
+            return b, reqs
+
+        # probe run to pick an EOS that fires mid-generation for request 0
+        _, probe = run(1, {})
+        eos_map = {0: probe[0].out[3]}
+        b1, r1 = run(1, eos_map)
+        b8, r8 = run(8, eos_map)
+        for a, b in zip(r1, r8):
+            assert a.done and b.done
+            assert a.out == b.out, (a.rid, a.out, b.out)
+        assert r8[0].out[-1] == eos_map[0] and len(r8[0].out) < 10
+        # the chunked run must batch its dispatches
+        assert b8.stats.dispatches < b1.stats.dispatches / 2
+        assert b8.stats.host_syncs == b8.stats.dispatches
+
+    def test_decode_cache_donated_not_copied(self, qwen):
+        """donate_argnums really takes effect: the input cache buffers are
+        consumed (deleted) by the chunked step — i.e. the KV ring buffer is
+        updated in place, not copied per token."""
+        cfg, params = qwen
+        scfg, t0, caches, S = self._prefill(cfg, params)
+        B = t0.shape[0]
+        chunk = jax.jit(make_decode_chunk(cfg, scfg, 4), donate_argnums=(1, 2))
+        state = SlotState(
+            tokens=t0,
+            cur_pos=jnp.full((B,), S, jnp.int32),
+            active=jnp.ones((B,), bool),
+            remaining=jnp.full((B,), 8, jnp.int32),
+            eos=jnp.full((B,), -1, jnp.int32),
+        )
+        kv0 = caches.kv["0"].k
+        new_caches, state, _, _ = chunk(params, caches, state, KEY)
+        jax.block_until_ready(new_caches.kv["0"].k)
+        assert kv0.is_deleted(), "input KV buffer survived: cache was copied"
+        assert not new_caches.kv["0"].k.is_deleted()
+
+    def test_scatter_admission_equals_where_merge(self, qwen):
+        """Per-slot scatter admission == the old full-tree jnp.where merge
+        on a 4-slot batcher."""
+        cfg, params = qwen
+        B, S, max_len = 4, 8, 32
+        scfg = ServeConfig(max_len=max_len)
+        pre = jax.jit(make_prefill_step(cfg, scfg))
+        old_toks = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 5 + 2) % cfg.vocab
+        _, resident = pre(params, {"tokens": old_toks})
+        new_toks = (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) * 7 + 3) % cfg.vocab
+        _, fresh = pre(params, {"tokens": new_toks})
+
+        join_slots = [1, 3]
+        sel = np.zeros((B,), dtype=bool)
+        sel[join_slots] = True
+        selj = jnp.asarray(sel)
+
+        def where_merge(old, new):
+            cond = selj.reshape((1, -1) + (1,) * (old.ndim - 2))
+            return jnp.where(cond, new, old)
+
+        def scatter_merge(old, new):
+            slots = jnp.asarray(join_slots, dtype=jnp.int32)
+            return old.at[:, slots].set(new[:, slots].astype(old.dtype))
+
+        ref = jax.tree.map(where_merge, resident, fresh)
+        got = jax.tree.map(scatter_merge, resident, fresh)
+        for r, g in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+    def test_resize_between_chunks_migrates_live_state(self, qwen):
+        """A TwoStageCompiler.reconfigure landing between chunks migrates the
+        batcher's donated caches (pull-model register_state + adopt_state)
+        and decode resumes token-identically."""
+        from repro.core import TenantSpec
+        from repro.serving.tenancy import (
+            ServingExecutor, VirtualAcceleratorPool, make_serving_hypervisor,
+        )
+
+        cfg, params = qwen
+        rng = np.random.default_rng(5)
+        prompts = [rng.integers(1, cfg.vocab, size=4 + i).astype(np.int32)
+                   for i in range(3)]
+
+        def reqs():
+            return [Request(rid=i, prompt=p, max_new=9)
+                    for i, p in enumerate(prompts)]
+
+        # uninterrupted reference
+        ref = ContinuousBatcher(params, cfg, slots=4, prompt_len=8,
+                                max_len=64, chunk=4)
+        ref_reqs = reqs()
+        for r in ref_reqs:
+            ref.submit(r)
+        ref.run(max_steps=2000)
+
+        # interrupted run: resize lands between chunks
+        pool = VirtualAcceleratorPool(devices=jax.devices() * 4,
+                                      devices_per_core=1)
+        hv, ex = make_serving_hypervisor(pool, policy="no_realloc")
+        comp = ex.compiler
+
+        def mesh_builder(n):
+            import jax.sharding as jsh
+            devs = np.array(jax.devices() * n, dtype=object)[:n].reshape(n, 1)
+            return jsh.Mesh(devs, ("data", "model"))
+
+        comp.static_compile("decode", lambda x: x, (jax.ShapeDtypeStruct((4,), jnp.float32),),
+                            lease_sizes=[1, 2], mesh_builder=mesh_builder)
+        assert hv.admit(TenantSpec("t", 1, artifact="decode"))
+
+        b = ContinuousBatcher(params, cfg, slots=4, prompt_len=8,
+                              max_len=64, chunk=4)
+        ex.register_state("t", b.live_state, on_migrate=b.adopt_state)
+        got_reqs = reqs()
+        for r in got_reqs:
+            b.submit(r)
+        b.step()                                   # some tokens in flight
+        hv.resize_request("t", 2)                  # migration between chunks
+        assert ex.reconfig_log and "t_migrate" in ex.reconfig_log[-1]
+        b.run(max_steps=2000)
+        for a, g in zip(ref_reqs, got_reqs):
+            assert a.out == g.out
 
 
 class TestTenancy:
