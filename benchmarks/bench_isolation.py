@@ -13,12 +13,11 @@ co-tenants*, i.e. no isolation at all.
 
 from __future__ import annotations
 
-import itertools
 from typing import Dict, List
 
 from repro.core import Hypervisor, ResourcePool, TenantSpec, VirtualEngine
 
-from .common import CNNS, small_core, static_artifact, write_csv
+from .common import small_core, static_artifact, write_csv
 
 POOL = 16
 HORIZON = 2.0  # simulated seconds

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import CNN_WORKLOADS, DynamicCompiler, StaticCompiler
+from repro.core import DynamicCompiler
 
 from .common import CNNS, small_core, static_artifact, write_csv
 

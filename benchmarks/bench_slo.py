@@ -1,0 +1,209 @@
+"""SLO-attainment benchmark — open-loop Poisson traffic over the hypervisor.
+
+The paper's public-cloud claim is *guaranteed performance under sharing*.
+This bench measures it the way a cloud operator would: four tenants with
+per-request latency SLOs arrive on a shared 16-core pool and offer seeded
+open-loop Poisson traffic (arrivals don't slow down because the system is
+busy); a late high-priority burst tenant lands mid-run and leaves again.
+Every reallocation policy sees the *identical* seeded event stream, and we
+score each on
+
+* **SLO attainment** — fraction of offered requests served within their SLO
+  (unserved requests count against it), and
+* **goodput** — SLO-met completions per second,
+
+across a sweep of load multipliers (the attainment/goodput curves).
+
+``latency_slo`` runs with backfill admission and preemptive eviction — the
+full PR-3 scheduling stack; ``even_split`` (the paper's Fig.-7 elastic
+scheme), ``priority``, and ``no_realloc`` (the seed engine) are baselines.
+
+Acceptance (checked in ``main`` and recorded in ``BENCH_slo.json``):
+``latency_slo`` attains strictly more than ``even_split`` and
+``no_realloc`` at every load point.
+
+    PYTHONPATH=src python -m benchmarks.run slo
+
+``BENCH_SLO_SMOKE=1`` shrinks the sweep to one load point and a short
+horizon (the CI smoke job).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.core import (
+    Hypervisor,
+    PoissonTraffic,
+    ResourcePool,
+    TenantSpec,
+    VirtualEngine,
+    fpga_small_core,
+)
+from repro.core.hypervisor import SLO_HEADROOM, queueing_latency
+
+from .common import OUT_DIR, static_artifact, write_csv
+
+POOL = 16
+SMOKE = bool(int(os.environ.get("BENCH_SLO_SMOKE", "0")))
+HORIZON = 12.0 if SMOKE else 30.0
+LOADS = (1.0,) if SMOKE else (0.7, 1.0, 1.3)
+
+#: tenant, model, priority, arrival, departure (None = stays), base
+#: request rate (req/s at load x1.0), SLO calibration core count (the SLO is
+#: set so that k cores meet it with headroom; see ``_scenario``), seed.
+#: Demands are deliberately asymmetric — gold needs half the pool, silver
+#: and bronze a couple of cores each — which is exactly what uniform
+#: sharing cannot express: ``even_split`` caps gold at pool/T cores and
+#: burns the surplus on tenants that don't need it.  When the
+#: high-priority burst lands mid-run the pool saturates (13 + 4 > 16) and
+#: the SLO policy sheds load from the lowest-priority tenant only.
+TENANTS = (
+    ("gold",   "resnet50",     2.0, 0.0,  None, 12.0, 8, 11),
+    ("silver", "mobilenet",    2.0, 1.0,  None, 15.0, 2, 22),
+    ("bronze", "vgg16",        1.0, 2.0,  None,  2.0, 3, 33),
+    ("burst",  "inception_v3", 3.0, 12.0, 20.0,  6.0, 4, 44),
+)
+
+POLICIES = (
+    ("latency_slo", dict(policy="latency_slo", admission="backfill",
+                         preemptive=True)),
+    ("even_split", dict(policy="even_split")),
+    ("priority", dict(policy="priority")),
+    ("no_realloc", dict(policy="no_realloc")),
+)
+
+
+def _percentile(values: List[float], q: float) -> float:
+    if not values:
+        return float("nan")
+    vals = sorted(values)
+    idx = min(int(q * len(vals)), len(vals) - 1)
+    return vals[idx]
+
+
+def _scenario(load: float):
+    """The shared scenario at one load multiplier: (tenant specs with SLOs
+    calibrated against the engine's own latency model, per-tenant traffic).
+    SLOs are load-independent; only the offered rates scale."""
+    probe = VirtualEngine(ResourcePool(POOL), fpga_small_core())
+    out = []
+    for name, cnn, prio, t_on, t_off, rate, slo_k, seed in TENANTS:
+        artifact = static_artifact(cnn)
+        spec = TenantSpec(name, requested_cores=POOL, priority=prio,
+                          artifact=artifact, open_loop=True)
+        # target: the queue-adjusted latency at slo_k cores and base load
+        # sits under headroom x SLO with a 1.35x margin — wide enough that
+        # the Poisson wait *tail* (the mean-wait model underestimates p95 by
+        # ~2-3x) still fits at slo_k cores, narrow enough that slo_k - 1
+        # cores never do, so the policy's demand lands at exactly slo_k
+        adjusted = queueing_latency(probe.estimate_latency(spec, slo_k), rate)
+        spec.latency_slo = adjusted * 1.35 / SLO_HEADROOM
+        spec.arrival_rate = rate * load
+        traffic = PoissonTraffic(rate * load, seed=seed, start=t_on)
+        out.append((spec, t_on, t_off, traffic))
+    return out
+
+
+def _run_policy(name: str, hv_kwargs: Dict, load: float) -> Dict:
+    pool = ResourcePool(POOL)
+    engine = VirtualEngine(pool, fpga_small_core())
+    hv = Hypervisor(pool, executor=engine, **hv_kwargs)
+    scenario = _scenario(load)
+    records = []
+    for spec, t_on, t_off, traffic in scenario:
+        hv.schedule_arrival(spec, at=t_on)
+        end = min(t_off, HORIZON) if t_off is not None else HORIZON
+        records.extend(hv.open_traffic(spec.name, traffic, end,
+                                       slo=spec.latency_slo))
+        if t_off is not None:
+            hv.schedule_departure(spec.name, at=t_off)
+    metrics = hv.run(HORIZON)
+
+    offered = len(records)
+    served = [r for r in records if r.t_complete is not None]
+    met = sum(1 for r in records if r.slo_met)
+    latencies = [r.latency for r in served]
+    per_tenant = {}
+    for spec, _, _, _ in scenario:
+        mine = [r for r in records if r.tenant == spec.name]
+        per_tenant[spec.name] = round(
+            sum(1 for r in mine if r.slo_met) / max(len(mine), 1), 4)
+    return {
+        "bench": "slo",
+        "policy": name,
+        "load": load,
+        "horizon_s": HORIZON,
+        "offered": offered,
+        "served": len(served),
+        "unserved": offered - len(served),
+        "slo_met": met,
+        "attainment": round(met / max(offered, 1), 4),
+        "goodput_rps": round(met / HORIZON, 3),
+        "p50_latency_ms": round(_percentile(latencies, 0.50) * 1e3, 2),
+        "p95_latency_ms": round(_percentile(latencies, 0.95) * 1e3, 2),
+        "preemptions": len(hv.preemptions),
+        "still_waiting": len(hv.waiting_tenants()),
+        "completion_events": len(hv.completion_log),
+        "ctx_switches": sum(m.ctx_switches for m in metrics.values()),
+        "ctx_overhead_ms": round(
+            sum(m.ctx_overhead for m in metrics.values()) * 1e3, 3),
+        **{f"attain_{t}": v for t, v in per_tenant.items()},
+    }
+
+
+def run() -> List[Dict]:
+    rows = []
+    for load in LOADS:
+        for name, kwargs in POLICIES:
+            rows.append(_run_policy(name, dict(kwargs), load))
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("slo", rows)
+
+    print(f"{'policy':>12} {'load':>5} {'offered':>8} {'attain':>7} "
+          f"{'goodput':>8} {'p95 ms':>8} {'preempt':>8}")
+    for r in rows:
+        print(f"{r['policy']:>12} {r['load']:>5} {r['offered']:>8} "
+              f"{r['attainment']:>7} {r['goodput_rps']:>8} "
+              f"{r['p95_latency_ms']:>8} {r['preemptions']:>8}")
+
+    # acceptance: the SLO-aware policy strictly beats the elastic and static
+    # baselines on attainment at every load point of the same seeded trace
+    by_load: Dict[float, Dict[str, float]] = {}
+    for r in rows:
+        by_load.setdefault(r["load"], {})[r["policy"]] = r["attainment"]
+    ok = all(
+        pols["latency_slo"] > pols["even_split"]
+        and pols["latency_slo"] > pols["no_realloc"]
+        for pols in by_load.values()
+    )
+    snap = {
+        "bench": "slo",
+        "unix_time": time.time(),
+        "horizon_s": HORIZON,
+        "loads": list(LOADS),
+        "acceptance_latency_slo_strictly_best": ok,
+        "rows": rows,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    jpath = os.path.join(OUT_DIR, "BENCH_slo.json")
+    with open(jpath, "w") as f:
+        json.dump(snap, f, indent=2)
+    print(f"wrote {path} and {jpath}")
+    assert ok, (
+        "latency_slo must strictly beat even_split and no_realloc on SLO "
+        f"attainment at every load: {by_load}"
+    )
+    print("acceptance OK: latency_slo strictly beats even_split and "
+          "no_realloc at every load")
+
+
+if __name__ == "__main__":
+    main()

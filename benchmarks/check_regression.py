@@ -1,0 +1,120 @@
+"""Benchmark regression gate — compare a fresh run against the committed
+baseline snapshots.
+
+Used by the CI benchmark-smoke job: after running ``bench_serving`` (and
+``bench_slo``) into a scratch ``BENCH_OUT`` directory, this script fails the
+build when
+
+* any serving mode's decode ``tokens_per_s`` dropped more than
+  ``--tolerance`` (default 25%) below the committed ``BENCH_serving.json``
+  baseline, or
+* the fresh ``BENCH_slo.json`` no longer records the ``latency_slo`` policy
+  strictly beating ``even_split`` and ``no_realloc`` on SLO attainment.
+
+Absolute tokens/s moves with the host, so the tolerance is deliberately
+loose; the ``CHECK_TOLERANCE`` env var (or ``--tolerance``) can widen it for
+known-slow runners.  Structural metrics (dispatches per token, the SLO
+policy ordering) are host-independent and checked tightly.
+
+    python -m benchmarks.check_regression \
+        --baseline experiments/bench --fresh "$BENCH_OUT"
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _serving_rows(snapshot: dict) -> dict:
+    return {row["mode"]: row for row in snapshot["rows"]}
+
+
+def check_serving(baseline: dict, fresh: dict, tolerance: float) -> list:
+    """tokens/s per mode within tolerance of the committed baseline, and the
+    structural dispatch amortization preserved exactly."""
+    errors = []
+    base_rows = _serving_rows(baseline)
+    fresh_rows = _serving_rows(fresh)
+    missing = set(base_rows) - set(fresh_rows)
+    if missing:
+        errors.append(f"serving: fresh run lacks modes {sorted(missing)}")
+    for mode, base in base_rows.items():
+        row = fresh_rows.get(mode)
+        if row is None:
+            continue
+        floor = base["tokens_per_s"] * (1.0 - tolerance)
+        if row["tokens_per_s"] < floor:
+            errors.append(
+                f"serving[{mode}]: tokens/s regressed "
+                f"{base['tokens_per_s']} -> {row['tokens_per_s']} "
+                f"(> {tolerance:.0%} drop)"
+            )
+        # host-independent: chunked decode must keep its dispatch amortization
+        if row["chunk"] >= 8 and row["decode_dispatches_per_token"] > 1.0 / 8 + 1e-9:
+            errors.append(
+                f"serving[{mode}]: decode dispatches/token "
+                f"{row['decode_dispatches_per_token']} > 1/8"
+            )
+    return errors
+
+
+def check_slo(fresh: dict) -> list:
+    """The recorded acceptance bit and the per-load ordering itself."""
+    errors = []
+    if not fresh.get("acceptance_latency_slo_strictly_best"):
+        errors.append("slo: snapshot does not record latency_slo as strictly best")
+    by_load: dict = {}
+    for row in fresh.get("rows", []):
+        by_load.setdefault(row["load"], {})[row["policy"]] = row["attainment"]
+    for load, pols in sorted(by_load.items()):
+        if not (pols["latency_slo"] > pols["even_split"]
+                and pols["latency_slo"] > pols["no_realloc"]):
+            errors.append(f"slo[load={load}]: latency_slo not strictly best: {pols}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="experiments/bench",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", default=os.environ.get("BENCH_OUT", "experiments/bench"),
+                    help="directory holding the freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance",
+                    type=float,
+                    default=float(os.environ.get("CHECK_TOLERANCE", "0.25")),
+                    help="allowed fractional tokens/s drop vs baseline")
+    args = ap.parse_args(argv)
+
+    errors = []
+    try:
+        errors = check_serving(
+            _load(os.path.join(args.baseline, "BENCH_serving.json")),
+            _load(os.path.join(args.fresh, "BENCH_serving.json")),
+            args.tolerance,
+        )
+    except FileNotFoundError as e:
+        errors.append(f"serving: missing snapshot: {e.filename}")
+    slo_path = os.path.join(args.fresh, "BENCH_slo.json")
+    if os.path.exists(slo_path):
+        errors.extend(check_slo(_load(slo_path)))
+    else:
+        errors.append(f"slo: {slo_path} missing (bench_slo did not run?)")
+
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print(f"benchmark gate OK (tokens/s tolerance {args.tolerance:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,7 +18,6 @@ from repro.core import (
     Strategy,
     allocate,
     fpga_core,
-    simulate,
 )
 
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")

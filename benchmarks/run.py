@@ -23,6 +23,7 @@ BENCHES = [
     ("straggler", "bench_straggler", "beyond-paper — straggler mitigation"),
     ("roofline", "bench_roofline", "§Roofline — dry-run derived terms"),
     ("serving", "bench_serving", "beyond-paper — chunked/donated decode hot path"),
+    ("slo", "bench_slo", "beyond-paper — SLO attainment under open-loop Poisson traffic"),
 ]
 
 

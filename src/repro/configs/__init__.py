@@ -7,7 +7,7 @@ enumerates the 40 (arch x shape) dry-run cells with their run/skip status.
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 from .base import ModelConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES, round_up
 

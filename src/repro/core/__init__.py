@@ -29,7 +29,15 @@ from .dispatch import (
     SwitchMode,
 )
 from .dynamic_compiler import DynamicCompiler, Schedule
-from .events import Event, EventKind, EventQueue
+from .events import (
+    Event,
+    EventKind,
+    EventQueue,
+    PoissonTraffic,
+    RequestRecord,
+    TraceTraffic,
+    emit_requests,
+)
 from .hrp import HRPError, Lease, ResourcePool
 from .hwmodel import (
     HardwareModel,
@@ -44,7 +52,10 @@ from .hypervisor import (
     PolicyContext,
     PoolExecutor,
     TenantSpec,
+    latency_slo,
+    queueing_latency,
     resolve_policy,
+    slo_demand,
 )
 from .ifp import IFP, Strategy, dedupe_onchip, make_layer_ifps
 from .isa import Chain, Instr, Op, Program, SYNC_PROGRAM, Unit, concat
@@ -57,10 +68,12 @@ __all__ = [
     "allocate", "allocate_contiguous_dp", "allocate_lpt", "allocate_weighted",
     "ContextSwitchController", "InstructionRouter", "MultiCoreSyncController",
     "SwitchMode", "DynamicCompiler", "Schedule", "Event", "EventKind",
-    "EventQueue", "HRPError", "Lease",
+    "EventQueue", "PoissonTraffic", "RequestRecord", "TraceTraffic",
+    "emit_requests", "HRPError", "Lease",
     "ResourcePool", "HardwareModel", "fpga_core", "fpga_large_core",
     "fpga_small_core", "tpu_v5e_chip", "POLICIES", "Hypervisor",
-    "PolicyContext", "PoolExecutor", "TenantSpec", "resolve_policy",
+    "PolicyContext", "PoolExecutor", "TenantSpec", "latency_slo",
+    "queueing_latency", "resolve_policy", "slo_demand",
     "IFP", "Strategy", "dedupe_onchip",
     "make_layer_ifps", "Chain", "Instr", "Op", "Program", "SYNC_PROGRAM",
     "Unit", "concat",

@@ -21,12 +21,12 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .allocator import allocate, allocate_weighted
 from .hwmodel import HardwareModel
 from .ifp import Strategy
-from .isa import Chain, Program, SYNC_PROGRAM
+from .isa import Chain, SYNC_PROGRAM
 from .latency_sim import simulate_layer_barrier
 from .static_compiler import StaticArtifact
 

@@ -3,16 +3,28 @@
 The paper's hypervisor (§4.1) multiplexes one physical accelerator among many
 tenants whose tasks arrive and leave at millisecond granularity.  We model
 that as a single time-ordered queue of :class:`Event` records — tenant
-arrivals, departures, request completions, explicit reconfiguration signals,
-and straggler probes — consumed by :class:`repro.core.hypervisor.Hypervisor`.
+arrivals, departures, per-request arrivals and completions, explicit
+reconfiguration signals, and straggler probes — consumed by
+:class:`repro.core.hypervisor.Hypervisor`.
 
 Determinism rules (they make event-driven runs reproducible and testable):
 
 * events pop in non-decreasing ``time`` order;
 * at equal time, departures are handled before arrivals (so a simultaneous
   arrival sees the cores a departing tenant frees), completions and explicit
-  reconfiguration signals in between, probes last;
+  reconfiguration signals in between, request arrivals after the tenant
+  arrival that may carry them, probes last;
 * remaining ties break by insertion order (``seq``), never by dict/hash order.
+
+**Open-loop traffic.**  The seed engine re-issued each tenant's next
+inference the moment the previous one finished (closed loop) — fine for
+throughput figures, useless for latency SLOs, where *offered load* must be
+independent of how fast the system drains it.  :class:`PoissonTraffic` and
+:class:`TraceTraffic` generate seeded, reproducible arrival-time streams;
+:func:`emit_requests` turns one into ``REQUEST`` events carrying
+:class:`RequestRecord` instances whose ``t_start``/``t_complete`` fields the
+executor stamps as the request moves through the system.  Same seed →
+byte-identical event stream.
 """
 
 from __future__ import annotations
@@ -21,7 +33,8 @@ import dataclasses
 import enum
 import heapq
 import itertools
-from typing import Any, Dict, List, Optional
+import random
+from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 
 class EventKind(enum.Enum):
@@ -31,6 +44,7 @@ class EventKind(enum.Enum):
     COMPLETION = "completion"    # a tenant request finished (accounting hook)
     RECONFIG = "reconfig"        # explicit resize signal for one tenant
     ARRIVAL = "arrival"          # tenant asks for admission
+    REQUEST = "request"          # one inference request arrives for a tenant
     PROBE = "probe"              # pool-wide straggler probe
 
     @property
@@ -43,7 +57,8 @@ _KIND_RANK = {
     EventKind.COMPLETION: 1,
     EventKind.RECONFIG: 2,
     EventKind.ARRIVAL: 3,
-    EventKind.PROBE: 4,
+    EventKind.REQUEST: 4,
+    EventKind.PROBE: 5,
 }
 
 
@@ -97,3 +112,101 @@ class EventQueue:
 
     def __bool__(self) -> bool:
         return bool(self._heap)
+
+
+# ---------------------------------------------------------------------------
+# open-loop request traffic
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One inference request's lifecycle, stamped as it moves through the
+    system: arrival (offered), start (dequeued onto cores), completion.
+
+    The record object is shared between the traffic source, the event
+    payload, and the executor — whoever created the stream can compute SLO
+    attainment afterwards without collecting anything from the engine.  A
+    request that was never served keeps ``t_complete is None`` and counts
+    against attainment (the open-loop contract: offered load doesn't shrink
+    because the system is slow)."""
+
+    tenant: str
+    rid: int
+    t_arrival: float
+    slo: Optional[float] = None        # per-request latency target (seconds)
+    t_start: Optional[float] = None
+    t_complete: Optional[float] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.t_complete is None:
+            return None
+        return self.t_complete - self.t_arrival
+
+    @property
+    def slo_met(self) -> bool:
+        """Served within the target.  Unserved or target-less requests are
+        *not* met (a request without an SLO never counts as attained; filter
+        them out of the denominator if that is what you want)."""
+        lat = self.latency
+        return lat is not None and self.slo is not None and lat <= self.slo
+
+
+class PoissonTraffic:
+    """Seeded open-loop Poisson arrival process (exponential inter-arrivals).
+
+    Determinism contract: ``PoissonTraffic(rate, seed=s).times(h)`` returns
+    the identical list on every call and every platform — the stream is
+    drawn from a private ``random.Random(seed)`` re-seeded per call."""
+
+    def __init__(self, rate: float, *, seed: int = 0, start: float = 0.0) -> None:
+        if rate <= 0:
+            raise ValueError(f"Poisson rate must be positive, got {rate}")
+        self.rate = rate
+        self.seed = seed
+        self.start = start
+
+    def times(self, horizon: float) -> List[float]:
+        rng = random.Random(self.seed)
+        out: List[float] = []
+        t = self.start
+        while True:
+            t += rng.expovariate(self.rate)
+            if t > horizon:
+                return out
+            out.append(t)
+
+
+class TraceTraffic:
+    """Replay a fixed arrival-time trace (already-sorted or not)."""
+
+    def __init__(self, times: Sequence[float]) -> None:
+        self._times = sorted(float(t) for t in times)
+
+    def times(self, horizon: float) -> List[float]:
+        return [t for t in self._times if t <= horizon]
+
+
+def emit_requests(
+    queue: EventQueue,
+    tenant: str,
+    traffic: Any,
+    horizon: float,
+    *,
+    slo: Optional[float] = None,
+    start_rid: int = 0,
+) -> List[RequestRecord]:
+    """Schedule one ``REQUEST`` event per arrival of ``traffic`` (anything
+    with a ``times(horizon)`` method, or a plain iterable of times) and
+    return the shared :class:`RequestRecord` list for later SLO accounting."""
+    times: Iterable[float]
+    if hasattr(traffic, "times"):
+        times = traffic.times(horizon)
+    else:
+        times = [t for t in sorted(traffic) if t <= horizon]
+    records = []
+    for i, t in enumerate(times):
+        rec = RequestRecord(tenant=tenant, rid=start_rid + i, t_arrival=t, slo=slo)
+        queue.schedule(EventKind.REQUEST, t, tenant=tenant, record=rec)
+        records.append(rec)
+    return records

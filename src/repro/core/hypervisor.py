@@ -23,14 +23,42 @@ Policies (registered in :data:`POLICIES`):
                              static artifact);
 * ``priority``             — reserve every tenant's floor, then satisfy
                              requests in priority order;
+* ``latency_slo``          — admit/resize against per-tenant latency targets:
+                             each tenant's **demand** is the fewest cores
+                             whose *queue-adjusted* latency — estimated
+                             single-inference service time plus the M/D/1
+                             mean wait its open-loop arrival rate induces —
+                             fits under its SLO with headroom.  Demands are
+                             granted in priority order: a higher-priority
+                             arrival shrinks lower-priority residents toward
+                             their floor, while an equal-or-lower-priority
+                             newcomer is admitted all-or-nothing from the
+                             capacity residents' SLOs don't need, else it
+                             queues (or preempts, see below);
 * ``no_realloc``           — baseline: residents keep their leases; newcomers
                              are admitted all-or-nothing from the free pool.
                              This is the seed engine's behaviour — the
                              degenerate one-policy case.
 
 Tenants whose policy share would fall below ``min_cores`` are not admitted;
-they park in a FIFO **wait queue** and are retried after every departure or
-reconfiguration (head-of-line order, deterministic).
+they park in a **wait queue** and are retried after every departure or
+reconfiguration.  ``admission="fifo"`` (default) drains it head-of-line —
+deterministic, but a big blocked head stalls everyone behind it;
+``admission="backfill"`` walks the whole queue in order each drain, so small
+tenants slip past a blocked head (EASY-style backfilling without
+reservations).  With ``preemptive=True`` an arrival that cannot be admitted
+may **evict** strictly-lower-priority residents (lowest priority, youngest
+first) until it fits; victims are charged a context switch by the executor
+(``exec_evict``) and re-queued at the head of the wait queue.
+
+**Open-loop traffic** rides on the same queue: ``REQUEST`` events (from
+:class:`~repro.core.events.PoissonTraffic` / ``TraceTraffic`` via
+:meth:`Hypervisor.open_traffic`) are routed to the executor's
+``exec_request`` for resident tenants and held in a per-tenant backlog for
+waiting ones (delivered on admission — offered load is never dropped).  When
+the executor finishes a request it reports through ``completion_sink``; the
+hypervisor turns that into a ``COMPLETION`` event, so request lifecycles are
+visible on the global timeline (``completion_log``).
 
 Executor protocol (duck-typed; every hook is optional except the ``exec_*``
 trio when the corresponding event is used):
@@ -40,6 +68,12 @@ trio when the corresponding event is used):
     exec_admit(spec, n_cores, at)     -> None
     exec_resize(name, n_cores, at, mode) -> None
     exec_remove(name, at)             -> None
+    exec_evict(name, at)              -> None   # preemption (falls back to
+                                                # exec_remove when absent)
+    exec_request(name, record, at)    -> None   # open-loop request delivery
+    estimate_latency(spec, n_cores)   -> float  # latency_slo demand model
+    completion_sink                   -> attr   # set by the hypervisor to
+                                                # receive finished records
     probe(at)                         -> int    # straggler sweep, #rebalances
     metrics()                         -> dict   # returned by run()
 
@@ -51,10 +85,11 @@ immediately at the event that caused it.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from .dispatch import SwitchMode
-from .events import Event, EventKind, EventQueue
+from .events import Event, EventKind, EventQueue, RequestRecord, emit_requests
 from .hrp import ResourcePool
 
 
@@ -66,6 +101,14 @@ class TenantSpec:
     :class:`~repro.core.static_compiler.StaticArtifact` for the simulation
     engine, a program-key string for the serving stack, or ``None`` for
     bookkeeping-only pools.
+
+    ``latency_slo`` and ``arrival_rate`` feed the ``latency_slo`` policy:
+    the target single-request latency (seconds; the SLO) and the tenant's
+    open-loop offered load (requests/s; 0 = unknown, skips the stability
+    check).  ``open_loop=True`` declares the tenant request-driven from
+    admission — it idles until its first REQUEST instead of re-issuing
+    closed-loop inferences (a tenant also flips open-loop implicitly on its
+    first delivered request).
     """
 
     name: str
@@ -75,18 +118,24 @@ class TenantSpec:
     weight: Optional[float] = None     # None -> derived from artifact workload
     artifact: Any = None
     arrived_at: float = 0.0            # stamped by the hypervisor on admission
+    latency_slo: Optional[float] = None
+    arrival_rate: float = 0.0
+    open_loop: bool = False
 
 
 @dataclasses.dataclass
 class PolicyContext:
     """Snapshot a policy decides over: the pool size, the tenants that should
     hold cores after the decision (arrival order preserved; may include a
-    not-yet-admitted candidate), and the current lease sizes of residents."""
+    not-yet-admitted candidate), the current lease sizes of residents, and —
+    when the executor provides one — a latency estimator
+    ``latency(spec, n_cores) -> seconds`` for SLO-aware decisions."""
 
     n_cores: int
     tenants: List[TenantSpec]
     current: Dict[str, int]
     time: float
+    latency: Optional[Callable[[TenantSpec, int], float]] = None
 
 
 Policy = Callable[[PolicyContext], Dict[str, int]]
@@ -192,6 +241,104 @@ def priority(ctx: PolicyContext) -> Dict[str, int]:
     return alloc
 
 
+#: utilisation ceiling for the latency_slo stability check — an open-loop
+#: tenant whose offered load would keep its cores busier than this is given
+#: more cores (queueing delay explodes as utilisation -> 1).
+SLO_RHO_MAX = 0.85
+#: service latency must fit under this fraction of the SLO: the slack left
+#: over absorbs queueing delay, standing in for a p99 (not mean) target.
+SLO_HEADROOM = 0.9
+
+
+def queueing_latency(service: float, rate: float,
+                     rho_max: float = SLO_RHO_MAX) -> float:
+    """Expected request latency under open-loop Poisson offered load:
+    service time plus the M/D/1 mean wait ``rho/(2(1-rho)) x L`` at
+    utilisation ``rho = rate x L``.  Infinite at/beyond ``rho_max`` — an
+    unstable (or near-saturated) queue can never meet a latency SLO, no
+    matter the service time."""
+    if rate <= 0:
+        return service
+    rho = service * rate
+    if rho >= rho_max:
+        return float("inf")
+    return service * (1.0 + rho / (2.0 * (1.0 - rho)))
+
+
+def slo_demand(ctx: PolicyContext, spec: TenantSpec, *,
+               rho_max: float = SLO_RHO_MAX,
+               headroom: float = SLO_HEADROOM) -> int:
+    """Fewest cores meeting ``spec``'s latency SLO: the *queue-adjusted*
+    latency — single-inference service time ``L(k)`` plus the M/D/1 mean
+    wait its open-loop ``arrival_rate`` induces — must fit under
+    ``headroom x latency_slo``.  Tenants without an SLO (or without a
+    latency model) demand only their floor; when no admissible core count
+    satisfies the target, the demand is the full request (best effort)."""
+    floor = min(max(spec.min_cores, 1), spec.requested_cores)
+    if spec.latency_slo is None or ctx.latency is None:
+        return floor
+    for k in range(floor, spec.requested_cores + 1):
+        est = ctx.latency(spec, k)
+        if est is None:
+            return floor
+        if queueing_latency(est, spec.arrival_rate, rho_max) \
+                <= headroom * spec.latency_slo:
+            return k
+    return spec.requested_cores
+
+
+def _priority_order(specs: List[TenantSpec]) -> List[TenantSpec]:
+    return sorted(specs, key=lambda s: (-s.priority, s.arrived_at, s.name))
+
+
+def latency_slo(ctx: PolicyContext) -> Dict[str, int]:
+    """SLO-aware admission/reallocation.
+
+    1. every resident keeps at least its floor (always feasible — they all
+       held their floor before this decision);
+    2. one priority-ordered pass (arrival breaks ties, so residents outrank
+       same-priority newcomers) tops residents up toward their SLO demand
+       and admits newcomers **all-or-nothing at their demand**.  A higher-
+       priority arrival therefore *shrinks* lower-priority residents toward
+       their floor — graceful degradation — rather than being locked out,
+       while an equal-or-lower-priority newcomer can never dig into what a
+       resident's SLO needs: if its demand doesn't fit in what's left, it
+       gets 0 and parks (the preemptive hypervisor may instead evict a
+       lower-priority resident whose *floor* is in the way);
+    3. leftover cores go to tenants below their request, priority order —
+       the policy is work-conserving.
+    """
+    order = _arrival_order(ctx.tenants)
+    residents = [s for s in order if s.name in ctx.current]
+    demands = {s.name: slo_demand(ctx, s) for s in order}
+    alloc = {s.name: 0 for s in order}
+    free = ctx.n_cores
+    for s in _priority_order(residents):
+        give = min(max(s.min_cores, 1), s.requested_cores, free)
+        alloc[s.name] = give
+        free -= give
+    for s in _priority_order(order):
+        if s.name in ctx.current:
+            give = min(demands[s.name] - alloc[s.name], free)
+            if give > 0:
+                alloc[s.name] += give
+                free -= give
+        else:
+            need = max(demands[s.name], max(s.min_cores, 1))
+            if need <= min(free, s.requested_cores):
+                alloc[s.name] = need
+                free -= need
+    for s in _priority_order(order):
+        if free == 0:
+            break
+        if alloc[s.name] > 0 or s.name in ctx.current:
+            give = min(s.requested_cores - alloc[s.name], free)
+            if give > 0:
+                alloc[s.name] += give
+                free -= give
+    return alloc
+
+
 def no_realloc(ctx: PolicyContext) -> Dict[str, int]:
     """Baseline (the seed engine's semantics): residents keep their leases —
     except honouring their *own* explicit resize requests — and newcomers are
@@ -218,6 +365,7 @@ POLICIES: Dict[str, Policy] = {
     "even_split": even_split,
     "weighted_by_workload": weighted_by_workload,
     "priority": priority,
+    "latency_slo": latency_slo,
     "no_realloc": no_realloc,
 }
 
@@ -297,12 +445,18 @@ class Hypervisor:
         executor: Any = None,
         probe_interval: Optional[float] = None,
         switch_mode: SwitchMode = SwitchMode.LAYER_LEVEL,
+        admission: str = "fifo",
+        preemptive: bool = False,
         on_event: Optional[Callable[["Hypervisor", Event], None]] = None,
     ) -> None:
         if pool is None:
             if executor is None or not hasattr(executor, "pool"):
                 raise ValueError("pass a ResourcePool or an executor exposing .pool")
             pool = executor.pool
+        if admission not in ("fifo", "backfill"):
+            raise ValueError(
+                f"unknown admission order {admission!r}; use 'fifo' or 'backfill'"
+            )
         self.pool = pool
         self.policy = resolve_policy(policy)
         self.executor = executor if executor is not None else PoolExecutor(pool)
@@ -311,9 +465,20 @@ class Hypervisor:
         self.waiting: List[TenantSpec] = []
         self.probe_interval = probe_interval
         self.switch_mode = switch_mode
+        self.admission = admission
+        self.preemptive = preemptive
         self.on_event = on_event
         self.clock = 0.0
         self.trace: List[Event] = []
+        # open-loop request plumbing: finished records (COMPLETION events),
+        # requests that arrived while their tenant waited for admission, and
+        # preemption accounting
+        self.completion_log: List[RequestRecord] = []
+        self.preemptions: List[str] = []
+        self._request_backlog: Dict[str, List[RequestRecord]] = {}
+        self._rid = itertools.count()
+        if hasattr(self.executor, "completion_sink"):
+            self.executor.completion_sink = self._request_completed
 
     @staticmethod
     def _validate(spec: TenantSpec) -> None:
@@ -342,6 +507,31 @@ class Hypervisor:
 
     def schedule_probe(self, *, at: float) -> Event:
         return self.queue.schedule(EventKind.PROBE, at)
+
+    def schedule_request(self, name: str, *, at: float,
+                         record: Optional[RequestRecord] = None,
+                         slo: Optional[float] = None) -> RequestRecord:
+        """Schedule one open-loop request for ``name``; returns the (shared)
+        record that will be stamped as the request moves through the system."""
+        if record is None:
+            record = RequestRecord(tenant=name, rid=next(self._rid),
+                                   t_arrival=at, slo=slo)
+        self.queue.schedule(EventKind.REQUEST, at, tenant=name, record=record)
+        return record
+
+    def open_traffic(self, name: str, traffic: Any, horizon: float, *,
+                     slo: Optional[float] = None) -> List[RequestRecord]:
+        """Attach a seeded open-loop arrival stream
+        (:class:`~repro.core.events.PoissonTraffic`, ``TraceTraffic``, or a
+        plain iterable of times) to tenant ``name`` and return its records
+        for SLO accounting after :meth:`run`."""
+        return emit_requests(self.queue, name, traffic, horizon, slo=slo)
+
+    def _request_completed(self, record: RequestRecord) -> None:
+        # executor callback -> COMPLETION event, so request lifecycles are
+        # ordered on (and visible in) the global timeline
+        self.queue.schedule(EventKind.COMPLETION, record.t_complete,
+                            tenant=record.tenant, record=record)
 
     # -- immediate mode -----------------------------------------------------
     def admit(self, spec: TenantSpec, *, at: Optional[float] = None) -> bool:
@@ -380,7 +570,13 @@ class Hypervisor:
     def run(self, horizon: float) -> Dict[str, Any]:
         """Handle every queued event with ``time <= horizon`` in order,
         advancing the executor's simulation between events, then advance to
-        ``horizon``.  Returns ``executor.metrics()`` when available."""
+        ``horizon``.  Returns ``executor.metrics()`` when available.
+
+        The outer loop repeats because advancing can *generate* events: an
+        executor finishing open-loop requests reports them through
+        ``completion_sink``, and those COMPLETION events (stamped at their
+        completion times, possibly before the clock) must still be handled
+        within the horizon."""
         if hasattr(self.executor, "begin"):
             self.executor.begin(horizon)
         if self.probe_interval:
@@ -388,15 +584,18 @@ class Hypervisor:
             while t <= horizon + 1e-12:
                 self.schedule_probe(at=t)
                 t += self.probe_interval
-        while self.queue and self.queue.next_time() <= horizon:
-            ev = self.queue.pop()
-            t = max(ev.time, self.clock)
-            self.executor.advance(t)
-            self.clock = t
-            self._handle(ev, t)
-            self._post_event(ev)
-        self.executor.advance(horizon)
-        self.clock = max(self.clock, horizon)
+        while True:
+            while self.queue and self.queue.next_time() <= horizon:
+                ev = self.queue.pop()
+                t = max(ev.time, self.clock)
+                self.executor.advance(t)
+                self.clock = t
+                self._handle(ev, t)
+                self._post_event(ev)
+            self.executor.advance(horizon)
+            self.clock = max(self.clock, horizon)
+            if not (self.queue and self.queue.next_time() <= horizon):
+                break
         if hasattr(self.executor, "metrics"):
             return self.executor.metrics()
         return {}
@@ -426,7 +625,13 @@ class Hypervisor:
             # a re-submitted waiter replaces its stale queue entry
             self.waiting = [w for w in self.waiting if w.name != spec.name]
             spec.arrived_at = t
-            if not self._try_admit(spec, t):
+            # FIFO fairness: an arrival never jumps a non-empty wait queue
+            # (backfill allows it — that is the point); preemption is the
+            # one exception, since it outranks the queue by priority
+            jumped = self.admission == "fifo" and bool(self.waiting)
+            if not (not jumped and self._try_admit(spec, t)) and not (
+                self.preemptive and self._try_preempt(spec, t, try_free=jumped)
+            ):
                 self.waiting.append(spec)
         elif ev.kind is EventKind.DEPARTURE:
             name = ev.tenant
@@ -451,8 +656,18 @@ class Hypervisor:
                     self._rebalance(t, mode=mode)
         elif ev.kind is EventKind.PROBE:
             self.executor.probe(t)
+        elif ev.kind is EventKind.REQUEST:
+            record: RequestRecord = ev.payload["record"]
+            if ev.tenant in self.specs and hasattr(self.executor, "exec_request"):
+                self.executor.exec_request(ev.tenant, record, t)
+            else:
+                # tenant still waiting for admission (or untracked): hold the
+                # request; it is delivered the moment the tenant is admitted
+                self._request_backlog.setdefault(ev.tenant, []).append(record)
         elif ev.kind is EventKind.COMPLETION:
-            pass  # accounting hook; executors track their own completions
+            rec = ev.payload.get("record")
+            if rec is not None:
+                self.completion_log.append(rec)
 
     def _current(self) -> Dict[str, int]:
         return {
@@ -461,12 +676,22 @@ class Hypervisor:
             if name in self.specs
         }
 
+    def _policy_ctx(self, tenants: List[TenantSpec], t: float) -> PolicyContext:
+        return PolicyContext(
+            self.pool.n_cores, tenants, self._current(), t,
+            latency=getattr(self.executor, "estimate_latency", None),
+        )
+
+    def _flush_backlog(self, name: str, t: float) -> None:
+        backlog = self._request_backlog.pop(name, None)
+        if backlog and hasattr(self.executor, "exec_request"):
+            for record in backlog:
+                self.executor.exec_request(name, record, t)
+
     def _try_admit(self, spec: TenantSpec, t: float,
                    mode: Optional[SwitchMode] = None) -> bool:
         candidates = list(self.specs.values()) + [spec]
-        targets = self.policy(
-            PolicyContext(self.pool.n_cores, candidates, self._current(), t)
-        )
+        targets = self.policy(self._policy_ctx(candidates, t))
         floor = max(spec.min_cores, 1)
         if targets.get(spec.name, 0) < floor:
             return False
@@ -475,15 +700,71 @@ class Hypervisor:
                 return False  # admitting would starve a resident below floor
         self._apply(targets, t, admit={spec.name: spec}, mode=mode)
         self.specs[spec.name] = spec
+        self._flush_backlog(spec.name, t)
+        return True
+
+    def _evict(self, victim: TenantSpec, t: float) -> None:
+        """Revoke a resident's lease for a higher-priority arrival.  The
+        executor charges the context-switch cost (``exec_evict``) and parks
+        the victim's queued requests; its spec is NOT re-queued here — the
+        caller decides where it lands."""
+        del self.specs[victim.name]
+        if hasattr(self.executor, "exec_evict"):
+            self.executor.exec_evict(victim.name, t)
+        else:
+            self.executor.exec_remove(victim.name, t)
+        self.preemptions.append(victim.name)
+
+    def _try_preempt(self, spec: TenantSpec, t: float, *,
+                     try_free: bool = False) -> bool:
+        """Evict strictly-lower-priority residents — lowest priority first,
+        youngest arrival first within a tier — until ``spec`` fits.  Victims
+        re-queue at the head of the wait queue (earliest arrival first).  If
+        even evicting every lower-priority resident cannot seat ``spec``,
+        the evictions are rolled back: each victim is restored at exactly
+        its pre-eviction lease size (the cores it held are still free, so
+        the restore cannot fail) — though it has paid the context switch."""
+        if max(spec.min_cores, 1) > self.pool.n_cores:
+            return False    # could never fit even on an empty pool: don't
+                            # charge residents for a doomed attempt
+        victims = sorted(
+            (s for s in self.specs.values() if s.priority < spec.priority),
+            key=lambda s: (s.priority, -s.arrived_at, s.name),
+        )
+        if not victims:
+            return False
+        # priority outranks queue fairness: when FIFO queue-jumping skipped
+        # the regular admission attempt (try_free), seat the arrival from
+        # free capacity first — never evict when admission alone works.  In
+        # the non-jumped path _handle already tried (and failed) exactly
+        # this admission, so re-evaluating the policy would be pure waste.
+        if try_free and self._try_admit(spec, t):
+            return True
+        sizes: Dict[str, int] = {}
+        evicted: List[TenantSpec] = []
+        admitted = False
+        for v in victims:
+            sizes[v.name] = self.pool.lease_of(v.name).n_cores
+            self._evict(v, t)
+            evicted.append(v)
+            if self._try_admit(spec, t):
+                admitted = True
+                break
+        by_arrival = sorted(evicted, key=lambda s: (s.arrived_at, s.name))
+        if not admitted:
+            for v in by_arrival:                    # exact rollback
+                self.executor.exec_admit(v, sizes[v.name], t)
+                self.specs[v.name] = v
+                self._flush_backlog(v.name, t)
+            return False
+        for v in reversed(by_arrival):
+            self.waiting.insert(0, v)
         return True
 
     def _rebalance(self, t: float, mode: Optional[SwitchMode] = None) -> None:
         if not self.specs:
             return
-        targets = self.policy(
-            PolicyContext(self.pool.n_cores, list(self.specs.values()),
-                          self._current(), t)
-        )
+        targets = self.policy(self._policy_ctx(list(self.specs.values()), t))
         self._apply(targets, t, mode=mode)
 
     def _apply(self, targets: Dict[str, int], t: float, *,
@@ -509,13 +790,22 @@ class Hypervisor:
             self.executor.exec_admit(spec, targets[name], t)
 
     def _drain_waiting(self, t: float, mode: Optional[SwitchMode] = None) -> int:
-        """FIFO admission: admit waiters from the head until one doesn't fit
-        (head-of-line blocking keeps admission order deterministic).  Returns
-        how many were admitted — each admission already re-applied the policy
-        over the full tenant set, so the caller skips its own rebalance when
-        this is non-zero."""
+        """Admit from the wait queue.  ``fifo``: head-of-line — stop at the
+        first waiter that doesn't fit.  ``backfill``: one deterministic pass
+        over the whole queue in order, so a small tenant may be admitted past
+        a blocked head (EASY backfilling without reservations — the head
+        keeps its queue position and is always offered capacity first).
+        Returns how many were admitted — each admission already re-applied
+        the policy over the full tenant set, so the caller skips its own
+        rebalance when this is non-zero."""
         admitted = 0
-        while self.waiting and self._try_admit(self.waiting[0], t, mode=mode):
-            self.waiting.pop(0)
-            admitted += 1
+        i = 0
+        while i < len(self.waiting):
+            if self._try_admit(self.waiting[i], t, mode=mode):
+                self.waiting.pop(i)
+                admitted += 1
+            elif self.admission == "backfill":
+                i += 1
+            else:
+                break
         return admitted

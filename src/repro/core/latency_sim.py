@@ -23,7 +23,7 @@ from __future__ import annotations
 from typing import Dict, List, Sequence
 
 from .hwmodel import HardwareModel
-from .isa import Instr, Op, Program, Unit
+from .isa import Instr, Program, Unit
 
 
 def instr_duration(ins: Instr, hw: HardwareModel) -> float:

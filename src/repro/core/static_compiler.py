@@ -25,7 +25,7 @@ from .hwmodel import HardwareModel
 from .ifp import IFP, Strategy, make_layer_ifps
 from .isa import Op, Program
 from .latency_sim import simulate
-from .workloads import Layer, Workload
+from .workloads import Workload
 
 
 @dataclasses.dataclass

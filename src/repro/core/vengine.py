@@ -20,9 +20,17 @@ per-tenant independent clocks exactly.
 
 Supports:
   * closed-loop inference (each tenant re-issues back-to-back requests),
+  * **open-loop inference** (requests arrive on their own seeded clock via
+    :class:`~repro.core.events.PoissonTraffic` / ``TraceTraffic``; a tenant
+    with an empty inbox idles instead of re-issuing, and every served
+    request's arrival→start→completion times are stamped on its shared
+    :class:`~repro.core.events.RequestRecord` — the latency-SLO substrate),
   * hypervisor reconfiguration at a global time (task- or layer-level switch,
     with measured dynamic-recompile + transfer cost added to the timeline),
   * dynamic tenant arrival/departure with policy-driven pool rebalancing,
+  * **preemptive eviction** (``exec_evict``: the displaced tenant pays one
+    context switch, its queued requests park and follow it back in on
+    re-admission, and its metrics survive in ``history``),
   * straggler injection (per-core slowdown) and mitigation (weighted
     re-allocation of the remaining layers via the dynamic compiler), either
     inline per layer or via hypervisor-scheduled straggler probes.
@@ -31,10 +39,11 @@ Supports:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .dispatch import ContextSwitchController, MultiCoreSyncController, SwitchMode
 from .dynamic_compiler import DynamicCompiler, Schedule
+from .events import RequestRecord
 from .hwmodel import HardwareModel
 from .hrp import ResourcePool
 from .hypervisor import Hypervisor, TenantSpec
@@ -55,9 +64,24 @@ class TenantMetrics:
     ctx_switches: int = 0
     ctx_overhead: float = 0.0
     rebalances: int = 0
+    # open-loop request accounting
+    arrivals: int = 0
+    requests: List[RequestRecord] = dataclasses.field(default_factory=list)
+    evictions: int = 0
 
     def throughput(self, horizon: float) -> float:
         return len(self.completions) / horizon if horizon > 0 else 0.0
+
+    @property
+    def latencies(self) -> List[float]:
+        return [r.latency for r in self.requests if r.latency is not None]
+
+    def slo_attainment(self) -> Optional[float]:
+        """Fraction of *offered* requests served within their SLO.  Unserved
+        arrivals count against attainment; None when no requests arrived."""
+        if self.arrivals == 0:
+            return None
+        return sum(1 for r in self.requests if r.slo_met) / self.arrivals
 
 
 @dataclasses.dataclass
@@ -71,6 +95,11 @@ class _Tenant:
     inference_id: int = 0
     pending: List[ReconfigRequest] = dataclasses.field(default_factory=list)
     metrics: TenantMetrics = dataclasses.field(default_factory=TenantMetrics)
+    # open-loop request state: once any request is submitted the tenant stops
+    # re-issuing back-to-back inferences and only serves its inbox
+    open_loop: bool = False
+    inbox: List[RequestRecord] = dataclasses.field(default_factory=list)
+    current_req: Optional[RequestRecord] = None
     # speeds the last probe-driven rebalance compiled for (avoids recompiling
     # the same weighted schedule on every probe tick)
     probe_speeds: Optional[List[float]] = None
@@ -103,8 +132,20 @@ class VirtualEngine:
         self.ctx = ContextSwitchController()
         self.tenants: Dict[str, _Tenant] = {}
         self.core_slowdown: Dict[int, float] = {}
-        # metrics of departed tenants survive removal (event-driven runs)
+        # metrics of departed tenants survive removal (event-driven runs);
+        # a re-admitted (previously evicted) tenant resumes its old record
         self.history: Dict[str, TenantMetrics] = {}
+        # queued open-loop requests of evicted tenants, re-attached on
+        # re-admission (preemption must not drop offered load)
+        self._parked_requests: Dict[str, List[RequestRecord]] = {}
+        # invoked with each finished RequestRecord (the hypervisor wires this
+        # to COMPLETION-event scheduling)
+        self.completion_sink: Optional[Callable[[RequestRecord], None]] = None
+        # latency_slo demand model caches: per-artifact DynamicCompiler (also
+        # keeps the artifact alive so the id() key cannot be reused) and the
+        # estimated single-inference latency per (artifact, core count)
+        self._est_dyn: Dict[int, DynamicCompiler] = {}
+        self._lat_cache: Dict[Tuple[int, int], float] = {}
         # latest deferred (task-level) hypervisor decision per tenant, so a
         # newer policy decision supersedes a not-yet-applied one
         self._deferred_hv: Dict[str, ReconfigRequest] = {}
@@ -118,7 +159,13 @@ class VirtualEngine:
         dyn = DynamicCompiler(artifact)
         schedule = dyn.compile(lease.cores)
         self.sync.configure(name, set(lease.cores))
-        self.tenants[name] = _Tenant(name, artifact, dyn, schedule, clock=at)
+        metrics = self.history.pop(name, None) or TenantMetrics()
+        tenant = _Tenant(name, artifact, dyn, schedule, clock=at, metrics=metrics)
+        parked = self._parked_requests.pop(name, None)
+        if parked:
+            tenant.inbox = parked
+            tenant.open_loop = True
+        self.tenants[name] = tenant
 
     def remove(self, name: str) -> None:
         tenant = self.tenants.pop(name)
@@ -134,6 +181,14 @@ class VirtualEngine:
         self.tenants[name].pending.append(ReconfigRequest(at, n_cores, mode))
         self.tenants[name].pending.sort(key=lambda r: r.t_request)
         self.ctx.request_switch(name, mode)
+
+    def submit_request(self, name: str, record: RequestRecord) -> None:
+        """Queue one open-loop request; the tenant stops closed-loop
+        re-issuing the moment its first request arrives."""
+        tenant = self.tenants[name]
+        tenant.open_loop = True
+        tenant.metrics.arrivals += 1
+        tenant.inbox.append(record)
 
     def metrics(self) -> Dict[str, TenantMetrics]:
         out = dict(self.history)
@@ -151,6 +206,8 @@ class VirtualEngine:
 
     def exec_admit(self, spec: TenantSpec, n_cores: int, at: float) -> None:
         self.admit(spec.name, spec.artifact, n_cores, at=at)
+        if spec.open_loop:
+            self.tenants[spec.name].open_loop = True
 
     def _drop_deferred(self, tenant: _Tenant) -> None:
         stale = self._deferred_hv.pop(tenant.name, None)
@@ -200,6 +257,53 @@ class VirtualEngine:
 
     def exec_remove(self, name: str, at: float) -> None:
         self.remove(name)
+
+    def exec_request(self, name: str, record: RequestRecord, at: float) -> None:
+        self.submit_request(name, record)
+
+    def exec_evict(self, name: str, at: float) -> None:
+        """Preemptive eviction: unlike a voluntary departure the tenant pays
+        one context switch (its state must be drained off the cores, Eq. 7)
+        before the lease is revoked; the charge lands in its metrics — which
+        survive in ``history`` — and its queued/in-flight requests park until
+        re-admission (an aborted in-flight request restarts from layer 0)."""
+        tenant = self.tenants[name]
+        cost = tenant.dyn.context_switch_cost(tenant.schedule, self.hw)
+        tenant.clock = max(tenant.clock, at) + cost["t_context"]
+        tenant.metrics.ctx_switches += 1
+        tenant.metrics.ctx_overhead += cost["t_context"]
+        tenant.metrics.evictions += 1
+        if tenant.current_req is not None:
+            tenant.current_req.t_start = None
+            tenant.inbox.insert(0, tenant.current_req)
+            tenant.current_req = None
+        tenant.layer_idx = 0
+        if tenant.inbox:
+            self._parked_requests[name] = tenant.inbox
+        self.remove(name)
+
+    def estimate_latency(self, spec: TenantSpec, n_cores: int) -> float:
+        """Estimated single-inference latency of ``spec`` on ``n_cores``
+        cores — the ``latency_slo`` policy's demand model.  Crosstalk-free
+        and placement-independent (schedule latency depends only on the core
+        count), memoized per (artifact, count); repeated policy decisions
+        are dictionary lookups."""
+        if n_cores < 1:
+            return float("inf")
+        artifact = spec.artifact
+        key = (id(artifact), n_cores)
+        cached = self._lat_cache.get(key)
+        if cached is None:
+            dyn = self._est_dyn.get(id(artifact))
+            if dyn is None:
+                resident = self.tenants.get(spec.name)
+                dyn = (resident.dyn if resident is not None
+                       and resident.artifact is artifact
+                       else DynamicCompiler(artifact))
+                self._est_dyn[id(artifact)] = dyn
+            cached = dyn.compile(list(range(n_cores))).estimated_latency(self.hw)
+            self._lat_cache[key] = cached
+        return cached
 
     def probe(self, at: float) -> int:
         """Pool-wide straggler probe (hypervisor-scheduled): re-balance any
@@ -310,6 +414,42 @@ class VirtualEngine:
         for tenant in list(self.tenants.values()):
             self._advance_tenant(tenant, until)
 
+    def _start_next_request(self, tenant: _Tenant, until: float) -> bool:
+        """Dequeue the open-loop tenant's next request, skipping the idle gap
+        (its clock jumps to the arrival — idle cores don't do work).  Returns
+        False when the inbox is empty: the tenant idles, but still honours
+        any due reconfiguration at this (trivially task-level) boundary."""
+        if tenant.inbox:
+            req = tenant.inbox.pop(0)
+            req.t_start = max(tenant.clock, req.t_arrival)
+            tenant.clock = req.t_start
+            tenant.current_req = req
+            # a request is a whole inference: discard any half-run
+            # closed-loop layers left from before the tenant went open-loop
+            tenant.layer_idx = 0
+            return True
+        for req in list(tenant.pending):
+            if req.t_request <= until:
+                tenant.clock = max(tenant.clock, req.t_request)
+                self._apply_reconfig(tenant, req)
+                break
+        return False
+
+    def _finish_request(self, tenant: _Tenant) -> None:
+        req = tenant.current_req
+        if req is None:
+            return
+        req.t_complete = tenant.clock
+        tenant.current_req = None
+        # same horizon guard as `completions`: a request whose last layer
+        # overshoots the run horizon is stamped (the record is ground
+        # truth for its owner) but stays out of this run's metrics and
+        # COMPLETION events — throughput and attainment count the same set
+        if tenant.clock <= self._horizon:
+            tenant.metrics.requests.append(req)
+            if self.completion_sink is not None:
+                self.completion_sink(req)
+
     def _advance_tenant(self, tenant: _Tenant, until: float) -> None:
         n_layers = len(tenant.artifact.workload)
         while tenant.clock < until:
@@ -318,6 +458,9 @@ class VirtualEngine:
                 and len(tenant.metrics.completions) >= self._max_inferences
             ):
                 break
+            if tenant.open_loop and tenant.current_req is None:
+                if not self._start_next_request(tenant, until):
+                    break
             t_layer, per_core = self._layer_time(tenant)
             tenant.clock += t_layer
             tenant.layer_idx += 1
@@ -325,6 +468,7 @@ class VirtualEngine:
                 tenant.inference_id += 1
                 if tenant.clock <= self._horizon:
                     tenant.metrics.completions.append(tenant.clock)
+                self._finish_request(tenant)
             self._maybe_mitigate(tenant, per_core)
             # layer boundary: honour any due reconfiguration request
             # (while layer_idx may still equal n_layers => task boundary)

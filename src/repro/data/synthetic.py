@@ -16,7 +16,7 @@ encoder frame embeddings (the conv frontend is stubbed per the brief).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List
+from typing import Dict
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,

@@ -37,7 +37,6 @@ program.  Aggregate with ×chips when comparing against global quantities.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

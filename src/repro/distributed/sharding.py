@@ -26,14 +26,13 @@ construction (asserted in tests/test_sharding.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.transformer import LayerSpec, n_blocks, period_structure
+from repro.models.transformer import LayerSpec, period_structure
 
 
 # ---------------------------------------------------------------------------

@@ -36,9 +36,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
     import jax
 
     from repro.configs import cell_status
-    from repro.distributed.hlo_analysis import (
-        Roofline, collective_stats, cost_flops_bytes,
-    )
+    from repro.distributed.hlo_analysis import Roofline, cost_flops_bytes
     from repro.distributed.hlo_static import analyze_hlo
     from repro.launch.cells import build_cell
     from repro.launch.mesh import make_production_mesh

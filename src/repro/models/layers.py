@@ -11,8 +11,7 @@ Whisper stub, where we follow the same convention and note it in DESIGN.md).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,7 +125,6 @@ def apply_mrope(x, positions3, theta: float):
     """M-RoPE: positions3 is (3, ..., S) — (temporal, height, width) ids.
     Each rotary-frequency section uses its own position stream."""
     d_head = x.shape[-1]
-    half = d_head // 2
     inv = jnp.asarray(rope_freqs(d_head, theta), dtype=jnp.float32)
     sec = mrope_sections(d_head)
     # section index per frequency: 0,0,...,1,1,...,2,2,...

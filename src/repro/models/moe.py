@@ -70,7 +70,6 @@ def router_probs(params, x, cfg):
 
 def load_balance_loss(probs, top_i, n_experts: int) -> jax.Array:
     """Switch-style aux loss: E * sum_e f_e * P_e (1.0 = perfectly balanced)."""
-    T = probs.shape[0]
     counts = jnp.zeros((n_experts,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
     f = counts / jnp.maximum(counts.sum(), 1.0)
     P = probs.mean(axis=0)

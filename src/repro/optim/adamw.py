@@ -21,8 +21,7 @@ rather than being a separate wiring (tests assert the spec pytrees match).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,8 @@ def adamw_init(params, *, quantize: bool = False) -> AdamWState:
         zeros = jax.tree.map(lambda p: _q(jnp.zeros(p.shape, jnp.float32)), params)
         zeros_v = jax.tree.map(lambda p: _q(jnp.zeros(p.shape, jnp.float32)), params)
         return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
-    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def z(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         m=jax.tree.map(z, params),

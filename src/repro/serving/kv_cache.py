@@ -9,8 +9,6 @@ admission control.
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -32,6 +32,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dispatch import SwitchMode
+from repro.core.events import RequestRecord
 from repro.core.hrp import HRPError, Lease, ResourcePool
 from repro.core.hypervisor import Hypervisor, TenantSpec
 from repro.serving.kv_cache import kv_cache_bytes
@@ -205,10 +206,27 @@ class ServingExecutor:
     interpreted as the tenant's program key (the ``key`` passed to
     ``static_compile``), or ``None`` for tenants managed outside the AOT
     cache (e.g. a ContinuousBatcher driving jit directly).
+
+    **SLO enforcement on the live batcher.**  A ``latency_slo`` hypervisor
+    needs ``estimate_latency(spec, n_cores)``: either register an explicit
+    per-tenant model (:meth:`register_latency_model` — e.g. calibrated from
+    ``bench_serving`` numbers), or feed measured per-request latencies in
+    with :meth:`record_latency` / :meth:`note_completion` (the batcher owner
+    calls it as requests finish) and the executor extrapolates from the
+    EWMA assuming ~linear scaling over the current lease size.  Policy
+    decisions then resize the batcher through ``reconfigure`` exactly like
+    any other resize — cache lookup + donated-state migration.  Preemptive
+    eviction (``exec_evict``) releases the lease but keeps the tenant's
+    registered state/keys so a later re-admission resumes cleanly.
     """
 
+    #: finished-request callback; a Hypervisor overwrites this at
+    #: construction so completions become COMPLETION events on its timeline
+    completion_sink: Optional[Callable[[RequestRecord], None]]
+
     def __init__(self, vpool: VirtualAcceleratorPool,
-                 compiler: Optional[TwoStageCompiler] = None) -> None:
+                 compiler: Optional[TwoStageCompiler] = None,
+                 *, latency_ewma_alpha: float = 0.3) -> None:
         self.vpool = vpool
         self.compiler = compiler if compiler is not None else TwoStageCompiler(vpool)
         self.pool = vpool.pool                       # Hypervisor reads .pool
@@ -218,6 +236,15 @@ class ServingExecutor:
         self.reconfig_log: List[Dict[str, Any]] = []
         self._keys: Dict[str, Optional[str]] = {}
         self._on_migrate: Dict[str, Callable[[Any], None]] = {}
+        # SLO plumbing
+        self.completion_sink = None
+        self.pending_requests: Dict[str, List[RequestRecord]] = {}
+        self._request_sinks: Dict[str, Callable[[RequestRecord], None]] = {}
+        self._latency_models: Dict[str, Callable[[int], float]] = {}
+        self._ewma_alpha = latency_ewma_alpha
+        # tenant -> (ewma seconds, lease size the measurements came from)
+        self._ewma: Dict[str, Tuple[float, int]] = {}
+        self._slo_counts: Dict[str, Dict[str, int]] = {}
 
     def register_state(self, tenant: str, live_state: Any,
                        state_specs: Any = None,
@@ -238,6 +265,80 @@ class ServingExecutor:
             self.state_specs[tenant] = state_specs
         if on_migrate is not None:
             self._on_migrate[tenant] = on_migrate
+
+    # -- SLO plumbing ---------------------------------------------------
+    def register_latency_model(self, tenant: str,
+                               fn: Callable[[int], float]) -> None:
+        """Explicit latency model ``fn(n_cores) -> seconds`` for the
+        ``latency_slo`` policy's demand computation (takes precedence over
+        the measured EWMA)."""
+        self._latency_models[tenant] = fn
+
+    def register_request_sink(self, tenant: str,
+                              fn: Callable[[RequestRecord], None]) -> None:
+        """Where the tenant's open-loop requests go on arrival — typically
+        ``lambda rec: batcher.submit(...)``.  Without a sink, requests pile
+        up in ``pending_requests`` for the owner to drain."""
+        self._request_sinks[tenant] = fn
+
+    def record_latency(self, tenant: str, seconds: float,
+                       *, slo: Optional[float] = None) -> None:
+        """Feed one measured request latency into the tenant's EWMA (the
+        fallback demand model) and its SLO attainment counters.  The lease
+        size at measurement time is stored with the EWMA so extrapolation
+        stays anchored to the cores that produced the number — even after
+        the lease is released (eviction, departure)."""
+        lease = self.pool.lease_of(tenant)
+        k_now = lease.n_cores if lease is not None else None
+        prev = self._ewma.get(tenant)
+        a = self._ewma_alpha
+        if prev is None:
+            self._ewma[tenant] = (seconds, k_now or 1)
+        else:
+            prev_s, prev_k = prev
+            self._ewma[tenant] = (a * seconds + (1 - a) * prev_s,
+                                  k_now if k_now is not None else prev_k)
+        counts = self._slo_counts.setdefault(tenant, {"n": 0, "met": 0})
+        counts["n"] += 1
+        if slo is not None and seconds <= slo:
+            counts["met"] += 1
+
+    def note_completion(self, record: RequestRecord) -> None:
+        """Report a finished request: updates the latency EWMA/SLO counters
+        and forwards the record to the hypervisor's ``completion_sink``."""
+        lat = record.latency
+        if lat is not None:
+            self.record_latency(record.tenant, lat, slo=record.slo)
+        if self.completion_sink is not None:
+            self.completion_sink(record)
+
+    def estimate_latency(self, spec: TenantSpec, n_cores: int) -> Optional[float]:
+        """Demand model for ``latency_slo``: the registered model when there
+        is one, else the measured EWMA extrapolated from the lease size it
+        was measured at, assuming ~linear scaling (None when nothing is
+        known — the policy then falls back to the tenant's floor)."""
+        model = self._latency_models.get(spec.name)
+        if model is not None:
+            return float(model(n_cores))
+        observed = self._ewma.get(spec.name)
+        if observed is None:
+            return None
+        seconds, k0 = observed
+        return seconds * k0 / max(n_cores, 1)
+
+    def slo_report(self) -> Dict[str, Dict[str, Any]]:
+        """Per-tenant SLO attainment over everything fed through
+        :meth:`record_latency` / :meth:`note_completion`."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for tenant, counts in self._slo_counts.items():
+            ewma = self._ewma.get(tenant)
+            out[tenant] = {
+                "requests": counts["n"],
+                "slo_met": counts["met"],
+                "attainment": counts["met"] / counts["n"] if counts["n"] else None,
+                "ewma_latency": ewma[0] if ewma is not None else None,
+            }
+        return out
 
     def program_of(self, tenant: str) -> Optional[CompiledProgram]:
         return self.programs.get(tenant)
@@ -300,8 +401,25 @@ class ServingExecutor:
     def exec_remove(self, name: str, at: float) -> None:
         self.vpool.release(name)
         for table in (self.programs, self.live_state, self.state_specs,
-                      self._keys, self._on_migrate):
+                      self._keys, self._on_migrate, self._request_sinks,
+                      self.pending_requests, self._latency_models):
             table.pop(name, None)
+
+    def exec_request(self, name: str, record: RequestRecord, at: float) -> None:
+        sink = self._request_sinks.get(name)
+        if sink is not None:
+            sink(record)
+        else:
+            self.pending_requests.setdefault(name, []).append(record)
+
+    def exec_evict(self, name: str, at: float) -> None:
+        """Preemptive eviction: release the lease and current program but —
+        unlike :meth:`exec_remove` — keep the tenant's registered state,
+        program key, sinks and latency model, so a later re-admission
+        resumes where the eviction cut it off."""
+        self.vpool.release(name)
+        self.programs.pop(name, None)
+        self.reconfig_log.append({"tenant": name, "evicted": True})
 
 
 def make_serving_hypervisor(

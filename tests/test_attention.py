@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.models.attention import (
-    KVCacheView, _decode_attn_xla, chunked_flash_attention, naive_attention,
+    _decode_attn_xla, chunked_flash_attention, naive_attention,
 )
 
 

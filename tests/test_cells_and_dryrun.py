@@ -5,11 +5,9 @@ import glob
 import json
 import os
 
-import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCHS, SHAPES, cell_status, cells
+from repro.configs import cell_status, cells
 
 
 class TestCellStatus:

@@ -9,8 +9,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.compression import (
-    compress_with_feedback, dequantize_int8, init_error_feedback,
-    pod_psum_compressed, quantize_int8,
+    compress_with_feedback, dequantize_int8, quantize_int8,
 )
 
 
@@ -67,10 +66,6 @@ class TestCompressedPsum:
         """int8 pod-psum ≈ exact mean within quantization tolerance; error
         feedback carries the residual."""
         n_dev = 4
-        rng = np.random.default_rng(1)
-        gs = jnp.asarray(rng.normal(size=(n_dev, 512)), jnp.float32)
-
-        import os
         devs = jax.devices()
         if len(devs) < n_dev:
             # emulate with vmap'd shard_map over a 1-device mesh: skip

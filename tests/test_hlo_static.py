@@ -5,7 +5,6 @@ correctness tests against compiled programs with analytically-known costs."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.distributed.hlo_static import HloModule, analyze_hlo

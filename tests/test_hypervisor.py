@@ -7,7 +7,7 @@ from repro.core import (
     EventKind, Hypervisor, PolicyContext, ResourcePool, TenantSpec,
     VirtualEngine, fpga_small_core, resolve_policy,
 )
-from repro.core.events import Event, EventQueue
+from repro.core.events import EventQueue
 from repro.core.hypervisor import POLICIES, even_split, no_realloc, priority, \
     weighted_by_workload
 
@@ -54,7 +54,8 @@ class TestEventQueue:
 class TestPolicies:
     def test_registry_and_resolution(self):
         assert set(POLICIES) == {
-            "even_split", "weighted_by_workload", "priority", "no_realloc",
+            "even_split", "weighted_by_workload", "priority", "latency_slo",
+            "no_realloc",
         }
         assert resolve_policy("even_split") is even_split
         assert resolve_policy(even_split) is even_split

@@ -6,8 +6,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    CNN_WORKLOADS, DynamicCompiler, StaticCompiler, Strategy, fpga_small_core,
-    make_layer_ifps, simulate,
+    DynamicCompiler, Strategy, fpga_small_core, make_layer_ifps, simulate,
 )
 from repro.core.ifp import dedupe_onchip
 from repro.core.workloads import Layer

@@ -3,7 +3,7 @@
 import pytest
 
 from repro.core import (
-    Chain, HardwareModel, Op, Program, Unit, concat, simulate,
+    Chain, HardwareModel, Op, Program, concat, simulate,
     simulate_layer_barrier,
 )
 from repro.core.isa import SYNC_PROGRAM
@@ -67,10 +67,9 @@ class TestSimulator:
         """Grouped loads overlap with compute of the previous group — the
         reason the ISA carries dependency fields (paper §5.1)."""
         p = Program()
-        prev = None
-        for g in range(4):
+        for _ in range(4):
             ld = p.load(10.0)
-            cv = p.emit(Op.CONV, flops=10.0, deps=[ld])
+            p.emit(Op.CONV, flops=10.0, deps=[ld])
         # pipeline: 10 (first load) + 4*10 (compute, loads hidden) = 50
         assert simulate(p, flat_hw()) == pytest.approx(50.0)
 
@@ -95,7 +94,8 @@ class TestSimulator:
 
     def test_layer_barrier_adds_sync(self):
         hw = flat_hw(sync_latency=0.5)
-        mk = lambda f: Chain([_conv_prog(f)])
+        def mk(f):
+            return Chain([_conv_prog(f)])
         per_core = [[mk(4.0), mk(1.0)], [mk(2.0), mk(3.0)]]
         t = simulate_layer_barrier(per_core, hw)
         # layer0: max(4,2)=4; layer1: max(1,3)=3; +2 syncs

@@ -13,7 +13,6 @@ from repro.serving.engine import (
     ServeConfig,
     SlotState,
     generate,
-    init_slot_state,
     make_decode_chunk,
     make_prefill_step,
     make_serve_step,
@@ -264,7 +263,7 @@ class TestChunkedDecode:
         and decode resumes token-identically."""
         from repro.core import TenantSpec
         from repro.serving.tenancy import (
-            ServingExecutor, VirtualAcceleratorPool, make_serving_hypervisor,
+            VirtualAcceleratorPool, make_serving_hypervisor,
         )
 
         cfg, params = qwen

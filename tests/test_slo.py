@@ -1,0 +1,496 @@
+"""SLO-aware scheduling: seeded open-loop traffic, request lifecycles,
+latency_slo policy demands, preemptive eviction accounting, and backfill
+admission (PR 3)."""
+
+import pytest
+
+from repro.core import (
+    EventKind, Hypervisor, PoissonTraffic, PolicyContext, RequestRecord,
+    ResourcePool, TenantSpec, TraceTraffic, VirtualEngine, emit_requests,
+    fpga_small_core, queueing_latency, slo_demand,
+)
+from repro.core.events import EventQueue
+from repro.core.hypervisor import latency_slo
+
+
+def make_engine(pool=None):
+    return VirtualEngine(pool or ResourcePool(16), fpga_small_core())
+
+
+# ---------------------------------------------------------------------------
+# seeded traffic determinism
+# ---------------------------------------------------------------------------
+
+class TestTrafficDeterminism:
+    def test_same_seed_same_times(self):
+        a = PoissonTraffic(5.0, seed=7).times(20.0)
+        b = PoissonTraffic(5.0, seed=7).times(20.0)
+        assert a == b
+        assert len(a) > 10                       # ~100 expected arrivals
+
+    def test_times_reproducible_across_calls(self):
+        t = PoissonTraffic(5.0, seed=7)
+        assert t.times(20.0) == t.times(20.0)    # re-seeded per call
+
+    def test_different_seeds_differ(self):
+        assert PoissonTraffic(5.0, seed=1).times(20.0) != \
+            PoissonTraffic(5.0, seed=2).times(20.0)
+
+    def test_same_seed_identical_event_stream(self):
+        """Satellite acceptance: same seed -> identical REQUEST event
+        stream (times, tenants, rids, SLOs)."""
+        streams = []
+        for _ in range(2):
+            q = EventQueue()
+            emit_requests(q, "t", PoissonTraffic(8.0, seed=3), 10.0, slo=0.5)
+            evs = [q.pop() for _ in range(len(q))]
+            streams.append([
+                (e.time, e.kind, e.tenant, e.payload["record"].rid,
+                 e.payload["record"].slo)
+                for e in evs
+            ])
+        assert streams[0] == streams[1]
+
+    def test_trace_traffic_sorts_and_clips(self):
+        t = TraceTraffic([3.0, 1.0, 2.0, 9.0])
+        assert t.times(5.0) == [1.0, 2.0, 3.0]
+
+    def test_full_run_deterministic(self, resnet_artifact):
+        def run_once():
+            pool = ResourcePool(16)
+            eng = make_engine(pool)
+            hv = Hypervisor(pool, policy="even_split", executor=eng)
+            hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact),
+                                at=0.0)
+            recs = hv.open_traffic("t", PoissonTraffic(6.0, seed=5), 2.0,
+                                   slo=0.5)
+            hv.run(2.0)
+            return [(r.t_arrival, r.t_start, r.t_complete) for r in recs]
+
+        assert run_once() == run_once()
+
+
+# ---------------------------------------------------------------------------
+# open-loop request lifecycle
+# ---------------------------------------------------------------------------
+
+class TestOpenLoop:
+    def test_requests_stamped_and_completed(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact), at=0.0)
+        recs = hv.open_traffic("t", TraceTraffic([0.1, 0.5]), 1.0, slo=1.0)
+        hv.run(2.0)
+        assert all(r.t_complete is not None for r in recs)
+        assert all(r.t_start >= r.t_arrival for r in recs)
+        assert all(r.slo_met for r in recs)
+
+    def test_idle_tenant_does_not_reissue(self, resnet_artifact):
+        """Open loop: two offered requests -> exactly two completions, even
+        over a horizon long enough for dozens of closed-loop re-issues."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact), at=0.0)
+        hv.open_traffic("t", TraceTraffic([0.0, 1.0]), 2.0)
+        metrics = hv.run(2.0)
+        assert len(metrics["t"].completions) == 2
+        assert metrics["t"].arrivals == 2
+        # the second request started at its arrival, not back-to-back
+        assert metrics["t"].requests[1].t_start == 1.0
+
+    def test_unqueued_latency_equals_single_inference(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(
+            TenantSpec("t", 8, artifact=resnet_artifact, open_loop=True),
+            at=0.0)
+        recs = hv.open_traffic("t", TraceTraffic([0.5]), 1.0)
+        hv.run(2.0)
+        # declared open-loop: idle until 0.5, then exactly one inference
+        assert recs[0].t_start == 0.5
+        assert recs[0].latency == pytest.approx(
+            eng.single_inference_latency("t"), rel=1e-9)
+
+    def test_completion_events_on_timeline(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact), at=0.0)
+        recs = hv.open_traffic("t", TraceTraffic([0.1, 0.2, 0.3]), 1.0)
+        hv.run(2.0)
+        assert len(hv.completion_log) == 3
+        completions = [e for e in hv.trace if e.kind is EventKind.COMPLETION]
+        assert [e.payload["record"] for e in completions] == recs
+
+    def test_backlog_delivered_on_late_admission(self, resnet_artifact):
+        """Requests offered before their tenant is admitted are held and
+        delivered on admission — offered load is never dropped, and the
+        wait shows up as latency."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="even_split", executor=eng)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact), at=0.5)
+        recs = hv.open_traffic("t", TraceTraffic([0.1]), 1.0)
+        hv.run(2.0)
+        assert recs[0].t_start >= 0.5
+        assert recs[0].latency >= 0.4
+
+    def test_never_admitted_requests_stay_unserved(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng)
+        hv.schedule_arrival(TenantSpec("a", 16, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("b", 8, artifact=resnet_artifact), at=0.1)
+        recs = hv.open_traffic("b", TraceTraffic([0.2, 0.4]), 1.0, slo=0.5)
+        hv.run(1.0)
+        assert hv.waiting_tenants() == ["b"]
+        assert all(r.t_complete is None for r in recs)
+        assert not any(r.slo_met for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# latency_slo policy
+# ---------------------------------------------------------------------------
+
+def _ctx(specs, current=None, latency=None, n=16):
+    return PolicyContext(n_cores=n, tenants=list(specs),
+                         current=current or {}, time=0.0, latency=latency)
+
+
+def _inv_latency(spec, k):
+    return 1.0 / k      # 1 second on one core, perfectly divisible
+
+
+class TestLatencySloPolicy:
+    def test_queueing_latency_model(self):
+        assert queueing_latency(1.0, 0.0) == 1.0
+        assert queueing_latency(0.1, 2.0) == pytest.approx(
+            0.1 * (1 + 0.2 / (2 * 0.8)))
+        assert queueing_latency(1.0, 2.0) == float("inf")   # unstable
+
+    def test_demand_is_fewest_cores_meeting_slo(self):
+        spec = TenantSpec("t", 16, latency_slo=0.3)
+        d = slo_demand(_ctx([spec], latency=_inv_latency), spec)
+        assert d == 4            # 1/4 = 0.25 <= 0.9 * 0.3; 1/3 = 0.33 too slow
+
+    def test_demand_grows_with_offered_load(self):
+        lo = TenantSpec("t", 16, latency_slo=0.3, arrival_rate=0.1)
+        hi = TenantSpec("t", 16, latency_slo=0.3, arrival_rate=3.0)
+        ctx = _ctx([lo], latency=_inv_latency)
+        assert slo_demand(ctx, hi) > slo_demand(ctx, lo)
+
+    def test_demand_floor_without_slo_or_model(self):
+        spec = TenantSpec("t", 16, min_cores=2)
+        assert slo_demand(_ctx([spec], latency=_inv_latency), spec) == 2
+        slod = TenantSpec("t", 16, min_cores=2, latency_slo=0.1)
+        assert slo_demand(_ctx([slod], latency=None), slod) == 2
+
+    def test_demand_caps_at_request_when_unmeetable(self):
+        spec = TenantSpec("t", 4, latency_slo=0.01)
+        assert slo_demand(_ctx([spec], latency=_inv_latency), spec) == 4
+
+    def test_residents_get_demand_newcomer_all_or_nothing(self):
+        a = TenantSpec("a", 16, latency_slo=0.2, arrived_at=0.0)   # demand 6
+        b = TenantSpec("b", 16, latency_slo=0.1, arrived_at=1.0)   # demand 12
+        out = latency_slo(_ctx([a, b], current={"a": 6},
+                               latency=_inv_latency))
+        assert out["b"] == 0                  # 12 > 16 - 6: parks
+        assert out["a"] >= 6
+
+    def test_higher_priority_arrival_shrinks_resident_to_floor(self):
+        lo = TenantSpec("lo", 16, latency_slo=0.1, priority=1.0,
+                        arrived_at=0.0)                            # demand 12
+        hi = TenantSpec("hi", 16, latency_slo=0.1, priority=5.0,
+                        arrived_at=1.0)                            # demand 12
+        out = latency_slo(_ctx([lo, hi], current={"lo": 12},
+                               latency=_inv_latency))
+        assert out["hi"] == 12
+        assert out["lo"] >= 1                 # degraded, not evicted
+        assert out["lo"] + out["hi"] <= 16
+
+    def test_work_conserving_leftovers(self):
+        a = TenantSpec("a", 16, latency_slo=0.5, arrived_at=0.0)
+        out = latency_slo(_ctx([a], current={"a": 2}, latency=_inv_latency))
+        assert out["a"] == 16                 # leftover flows to the request
+
+    def test_end_to_end_demands_respected(self, resnet_artifact):
+        """Tight-SLO tenant gets more cores than a loose-SLO one under
+        contention, regardless of arrival order."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="latency_slo", executor=eng)
+        base = eng.estimate_latency(
+            TenantSpec("probe", 16, artifact=resnet_artifact), 8)
+        loose = TenantSpec("loose", 16, artifact=resnet_artifact,
+                           latency_slo=base * 8, priority=1.0)
+        tight = TenantSpec("tight", 16, artifact=resnet_artifact,
+                           latency_slo=base * 1.1, priority=1.0)
+        hv.schedule_arrival(loose, at=0.0)
+        hv.schedule_arrival(tight, at=0.1)
+        hv.run(0.5)
+        alloc = hv.allocation()
+        assert alloc["tight"] > alloc["loose"]
+
+
+# ---------------------------------------------------------------------------
+# preemptive eviction
+# ---------------------------------------------------------------------------
+
+class TestPreemption:
+    def _arrive(self, hv, name, cores, prio, artifact, at, min_cores=None):
+        hv.schedule_arrival(
+            TenantSpec(name, cores, priority=prio, artifact=artifact,
+                       min_cores=min_cores or cores), at=at)
+
+    def test_high_priority_arrival_evicts_lowest_priority(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng, preemptive=True)
+        self._arrive(hv, "old-lo", 8, 1.0, resnet_artifact, 0.0)
+        self._arrive(hv, "young-lo", 8, 1.0, resnet_artifact, 0.1)
+        self._arrive(hv, "hi", 16, 5.0, resnet_artifact, 0.3)
+        hv.run(0.6)
+        assert hv.allocation() == {"hi": 16}
+        assert hv.preemptions == ["young-lo", "old-lo"]
+        # victims re-queued at the head, original arrival order
+        assert hv.waiting_tenants() == ["old-lo", "young-lo"]
+
+    def test_eviction_charges_context_switch_into_history(self, resnet_artifact):
+        """Satellite acceptance: the evicted tenant's context-switch cost
+        appears in its (surviving) history."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng, preemptive=True)
+        self._arrive(hv, "victim", 16, 1.0, resnet_artifact, 0.0)
+        self._arrive(hv, "hi", 16, 5.0, resnet_artifact, 0.3)
+        hv.run(0.6)
+        assert "victim" not in hv.allocation()
+        hist = eng.history["victim"]
+        assert hist.evictions == 1
+        assert hist.ctx_switches >= 1
+        assert hist.ctx_overhead > 0
+        # a voluntary departure, by contrast, pays nothing (same scenario,
+        # departure instead of preemption)
+        pool2 = ResourcePool(16)
+        eng2 = make_engine(pool2)
+        hv2 = Hypervisor(pool2, policy="priority", executor=eng2)
+        self._arrive(hv2, "leaver", 16, 1.0, resnet_artifact, 0.0)
+        hv2.schedule_departure("leaver", at=0.3)
+        hv2.run(0.6)
+        assert eng2.history["leaver"].ctx_overhead == 0
+
+    def test_no_preemption_without_flag(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng)
+        self._arrive(hv, "lo", 16, 1.0, resnet_artifact, 0.0)
+        self._arrive(hv, "hi", 16, 5.0, resnet_artifact, 0.3)
+        hv.run(0.6)
+        assert hv.allocation() == {"lo": 16}
+        assert hv.waiting_tenants() == ["hi"]
+        assert hv.preemptions == []
+
+    def test_equal_priority_never_preempts(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng, preemptive=True)
+        self._arrive(hv, "a", 16, 2.0, resnet_artifact, 0.0)
+        self._arrive(hv, "b", 16, 2.0, resnet_artifact, 0.3)
+        hv.run(0.6)
+        assert hv.allocation() == {"a": 16}
+        assert hv.preemptions == []
+
+    def test_priority_queue_jump_prefers_free_capacity(self, resnet_artifact):
+        """Under fifo+preemptive, a high-priority arrival facing a non-empty
+        wait queue is seated from *free* cores when they suffice — it must
+        not evict a resident that isn't in the way."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng,
+                        preemptive=True)
+        self._arrive(hv, "lo", 4, 1.0, resnet_artifact, 0.0)
+        self._arrive(hv, "blocked", 16, 1.0, resnet_artifact, 0.1)  # waits
+        self._arrive(hv, "hi", 4, 5.0, resnet_artifact, 0.2)        # 12 free
+        hv.run(0.5)
+        assert hv.allocation() == {"lo": 4, "hi": 4}
+        assert hv.preemptions == []
+        assert hv.waiting_tenants() == ["blocked"]
+        assert eng.tenants["lo"].metrics.ctx_switches == 0
+
+    def test_infeasible_arrival_never_evicts(self, resnet_artifact):
+        """An arrival whose floor exceeds the whole pool must not charge
+        residents for a doomed preemption attempt."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng, preemptive=True)
+        self._arrive(hv, "lo", 16, 1.0, resnet_artifact, 0.0)
+        self._arrive(hv, "huge", 32, 9.0, resnet_artifact, 0.3)
+        hv.run(0.6)
+        assert hv.allocation() == {"lo": 16}
+        assert hv.preemptions == []
+        assert eng.tenants["lo"].metrics.ctx_switches == 0
+
+    def test_rollback_restores_victims_when_preemption_fails(self, resnet_artifact):
+        """Eviction of every lower-priority resident still can't seat the
+        arrival (a same-priority resident holds the rest): victims are
+        re-admitted and the arrival parks."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng, preemptive=True)
+        self._arrive(hv, "peer", 8, 5.0, resnet_artifact, 0.0, min_cores=8)
+        self._arrive(hv, "lo", 8, 1.0, resnet_artifact, 0.1, min_cores=8)
+        self._arrive(hv, "hi", 16, 5.0, resnet_artifact, 0.3, min_cores=16)
+        hv.run(0.6)
+        # hi outranks lo but not peer; evicting lo frees only 8 of 16
+        assert hv.allocation() == {"peer": 8, "lo": 8}
+        assert "hi" in hv.waiting_tenants()
+        assert hv.preemptions == ["lo"]          # attempted, then rolled back
+        assert eng.tenants["lo"].metrics.evictions == 1
+
+    def test_evicted_tenant_readmitted_after_departure(self, resnet_artifact):
+        """The victim re-enters from the wait-queue head when capacity
+        frees; its parked open-loop requests follow it back in and its
+        metrics resume (continuity across the eviction)."""
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="priority", executor=eng, preemptive=True)
+        self._arrive(hv, "victim", 16, 1.0, resnet_artifact, 0.0)
+        recs = hv.open_traffic("victim", TraceTraffic([0.1, 0.45]), 1.0)
+        self._arrive(hv, "hi", 16, 5.0, resnet_artifact, 0.4)
+        hv.schedule_departure("hi", at=0.7)
+        metrics = hv.run(2.0)
+        assert hv.allocation() == {"victim": 16}
+        assert all(r.t_complete is not None for r in recs)
+        assert recs[1].t_start >= 0.7            # served after re-admission
+        assert metrics["victim"].evictions == 1
+        assert metrics["victim"].arrivals == 2   # accounting resumed
+
+
+# ---------------------------------------------------------------------------
+# backfill admission
+# ---------------------------------------------------------------------------
+
+class TestBackfill:
+    def test_small_tenant_admitted_past_blocked_head(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng,
+                        admission="backfill")
+        hv.schedule_arrival(TenantSpec("big0", 12, artifact=resnet_artifact),
+                            at=0.0)
+        hv.schedule_arrival(TenantSpec("big1", 10, artifact=resnet_artifact),
+                            at=0.1)                      # blocks: 10 > 4 free
+        hv.schedule_arrival(TenantSpec("small", 2, artifact=resnet_artifact),
+                            at=0.2)                      # fits past the head
+        hv.run(0.5)
+        assert hv.allocation() == {"big0": 12, "small": 2}
+        assert hv.waiting_tenants() == ["big1"]
+
+    def test_fifo_keeps_head_of_line_blocking(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng)
+        hv.schedule_arrival(TenantSpec("big0", 12, artifact=resnet_artifact),
+                            at=0.0)
+        hv.schedule_arrival(TenantSpec("big1", 10, artifact=resnet_artifact),
+                            at=0.1)
+        hv.schedule_arrival(TenantSpec("small", 2, artifact=resnet_artifact),
+                            at=0.2)
+        hv.run(0.5)
+        assert hv.allocation() == {"big0": 12}
+        assert hv.waiting_tenants() == ["big1", "small"]
+
+    def test_backfill_drains_in_order_on_departure(self, resnet_artifact):
+        pool = ResourcePool(16)
+        eng = make_engine(pool)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng,
+                        admission="backfill")
+        hv.schedule_arrival(TenantSpec("a", 14, artifact=resnet_artifact), at=0.0)
+        hv.schedule_arrival(TenantSpec("b", 10, artifact=resnet_artifact), at=0.1)
+        hv.schedule_arrival(TenantSpec("c", 4, artifact=resnet_artifact), at=0.2)
+        hv.schedule_departure("a", at=0.4)
+        hv.run(0.6)
+        # the head fits first after the departure; c backfills the rest
+        assert hv.allocation() == {"b": 10, "c": 4}
+        assert hv.waiting_tenants() == []
+
+    def test_unknown_admission_order_rejected(self):
+        with pytest.raises(ValueError):
+            Hypervisor(ResourcePool(4), admission="lifo")
+
+
+# ---------------------------------------------------------------------------
+# serving executor SLO plumbing (no JAX dispatch: bookkeeping only)
+# ---------------------------------------------------------------------------
+
+class TestServingSlo:
+    @pytest.fixture()
+    def vpool(self):
+        jax = pytest.importorskip("jax")
+        from repro.serving.tenancy import VirtualAcceleratorPool
+
+        return VirtualAcceleratorPool(devices=list(jax.devices()) * 8,
+                                      devices_per_core=1)
+
+    def test_registered_model_drives_demand(self, vpool):
+        from repro.serving.tenancy import make_serving_hypervisor
+
+        hv, ex = make_serving_hypervisor(vpool, policy="latency_slo")
+        ex.register_latency_model("a", lambda k: 1.0 / k)
+        spec = TenantSpec("a", 8, latency_slo=0.3)
+        assert hv.admit(spec)
+        assert hv.allocation()["a"] == 8          # demand 4 + leftovers
+        assert ex.estimate_latency(spec, 4) == 0.25
+
+    def test_ewma_fallback_scales_with_lease(self, vpool):
+        from repro.serving.tenancy import ServingExecutor
+
+        ex = ServingExecutor(vpool)
+        spec = TenantSpec("a", 8)
+        assert ex.estimate_latency(spec, 4) is None
+        vpool.lease("a", 2)
+        ex.record_latency("a", 0.4)
+        ex.record_latency("a", 0.4)
+        assert ex.estimate_latency(spec, 2) == pytest.approx(0.4)
+        assert ex.estimate_latency(spec, 4) == pytest.approx(0.2)
+        # after the lease is gone (eviction/departure) the estimate stays
+        # anchored to the 2 cores the measurements came from — a leaseless
+        # tenant must not be treated as if it measured on 1 core
+        vpool.release("a")
+        assert ex.estimate_latency(spec, 2) == pytest.approx(0.4)
+        assert ex.estimate_latency(spec, 1) == pytest.approx(0.8)
+
+    def test_note_completion_feeds_report_and_sink(self, vpool):
+        from repro.serving.tenancy import ServingExecutor
+
+        ex = ServingExecutor(vpool)
+        seen = []
+        ex.completion_sink = seen.append
+        rec = RequestRecord("a", 0, t_arrival=0.0, slo=1.0,
+                            t_start=0.0, t_complete=0.5)
+        ex.note_completion(rec)
+        miss = RequestRecord("a", 1, t_arrival=0.0, slo=0.1,
+                             t_start=0.0, t_complete=0.5)
+        ex.note_completion(miss)
+        report = ex.slo_report()["a"]
+        assert report["requests"] == 2 and report["slo_met"] == 1
+        assert report["attainment"] == 0.5
+        assert seen == [rec, miss]
+
+    def test_eviction_keeps_state_for_readmission(self, vpool):
+        from repro.serving.tenancy import make_serving_hypervisor
+
+        hv, ex = make_serving_hypervisor(vpool, policy="priority",
+                                         preemptive=True)
+        ex.register_request_sink("lo", lambda rec: None)
+        ex.register_latency_model("lo", lambda k: 0.1)
+        assert hv.admit(TenantSpec("lo", 8, min_cores=8, priority=1.0))
+        assert hv.admit(TenantSpec("hi", 8, min_cores=8, priority=5.0))
+        assert hv.allocation() == {"hi": 8}
+        assert hv.waiting_tenants() == ["lo"]
+        assert "lo" in ex._latency_models         # kept across eviction
+        hv.depart("hi")
+        assert hv.allocation() == {"lo": 8}

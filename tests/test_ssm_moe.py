@@ -9,7 +9,7 @@ from repro.configs import get_reduced
 from repro.kernels.ssd_scan.ref import ssd_naive
 from repro.models import init_params
 from repro.models.ssm import (
-    causal_conv, causal_conv_step, init_ssm, init_ssm_state, ssd_chunked,
+    causal_conv, causal_conv_step, ssd_chunked,
     ssm_decode, ssm_forward,
 )
 
