@@ -1,0 +1,201 @@
+"""Paged KV pool benchmark — effective slot capacity at equal HBM.
+
+The dense serving path must size every slot's ring buffer at ``max_len``
+(the tenant contract: any request may run that long), so HBM caps slot
+count at ``HBM / (max_len x bytes_per_token)``.  The paged pool spends the
+same bytes on fixed-size pages and reserves only each request's *actual*
+footprint (bucketed prompt + decode budget), so the same HBM hosts more
+concurrent requests — the cache analogue of the paper's tiling-based
+resource virtualization.
+
+Three measured modes on the reduced qwen3-0.6b decode path:
+
+* ``dense``            — the ring-buffer baseline at ``SLOTS`` slots;
+* ``paged_equal_slots``— same slot count, pool sized to the same HBM: the
+  tokens/s cost of gather/scatter paged attention (acceptance: within 15%
+  of dense);
+* ``paged_equal_hbm``  — same HBM, slot count raised to what reservations
+  admit: effective capacity (measured as peak concurrently-resident
+  requests; acceptance: >= 1.5x the dense slot count) and the throughput
+  that extra concurrency buys.
+
+Emits ``experiments/bench/paging.csv`` + ``BENCH_paging.json`` (gated by
+``benchmarks/check_regression.py`` in the CI bench-smoke job).
+
+    PYTHONPATH=src python -m benchmarks.run paging
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, write_csv
+
+ARCH = "qwen3-0.6b"
+SLOTS = 4                  # dense baseline slot count
+PROMPT_LEN = 8
+MAX_NEW = 16               # actual per-request budget << MAX_LEN
+MAX_LEN = 64               # the per-request contract dense must provision
+PAGE_SIZE = 8
+N_REQUESTS = 24
+CHUNK = 8
+
+CAPACITY_FLOOR = 1.5       # paged capacity >= 1.5x dense at equal HBM
+TOKENS_RATIO_FLOOR = 0.85  # paged tokens/s within 15% of dense
+
+
+def _requests(cfg, n: int):
+    from repro.serving.batcher import Request
+
+    rng = np.random.default_rng(0)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg.vocab, size=2 + i % (PROMPT_LEN - 2)
+                                    ).astype(np.int32),
+                max_new=MAX_NEW)
+        for i in range(n)
+    ]
+
+
+def _equal_hbm_pages(cfg) -> int:
+    """Largest page pool whose bytes fit the dense baseline's cache tree."""
+    from repro.serving.kv_cache import kv_cache_bytes, paged_kv_cache_bytes
+
+    dense = kv_cache_bytes(cfg, SLOTS, MAX_LEN)
+    n = 1
+    while paged_kv_cache_bytes(cfg, n + 1, PAGE_SIZE) <= dense:
+        n += 1
+    return n
+
+
+def _bench(params, cfg, *, paged: bool, slots: int, n_pages=None) -> Dict:
+    import jax
+
+    from repro.serving.batcher import ContinuousBatcher
+    from repro.serving.kv_cache import tree_bytes
+
+    def batcher():
+        kw = dict(slots=slots, prompt_len=PROMPT_LEN, max_len=MAX_LEN,
+                  chunk=CHUNK)
+        if paged:
+            kw.update(paged=True, page_size=PAGE_SIZE, n_pages=n_pages)
+        return ContinuousBatcher(params, cfg, **kw)
+
+    warm = batcher()                       # compile outside the timed region
+    for r in _requests(cfg, slots + 1):
+        warm.submit(r)
+    warm.run(max_steps=2000)
+
+    b = batcher()
+    for r in _requests(cfg, N_REQUESTS):
+        b.submit(r)
+    t0 = time.perf_counter()
+    stats = b.run(max_steps=20_000)
+    jax.block_until_ready(b.caches)
+    dt = time.perf_counter() - t0
+
+    row = {
+        "arch": cfg.name,
+        "mode": ("paged" if paged else "dense"),
+        "slots": slots,
+        "requests": N_REQUESTS,
+        "completed": stats.completed,
+        "tokens": stats.tokens,
+        "seconds": round(dt, 4),
+        "tokens_per_s": round(stats.tokens / dt, 2),
+        "cache_mb": round(tree_bytes(b.caches) / 2**20, 3),
+        "dispatches_per_token": round(stats.dispatches_per_token, 4),
+        "syncs_per_token": round(stats.syncs_per_token, 4),
+        "occupancy": round(stats.occupancy, 4),
+        "peak_resident": (stats.peak_resident if paged else slots),
+        "n_pages": (b.n_pages if paged else 0),
+        "peak_pages_in_use": (stats.peak_pages_in_use if paged else 0),
+        "oom_requeues": (stats.oom_requeues if paged else 0),
+    }
+    assert stats.completed == N_REQUESTS, row
+    return row
+
+
+def run() -> List[Dict]:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving.kv_cache import pages_for
+
+    cfg = get_reduced(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pool_pages = _equal_hbm_pages(cfg)
+    # how many concurrent worst-case reservations the equal-HBM pool admits
+    capacity = pool_pages // pages_for(PROMPT_LEN + MAX_NEW, PAGE_SIZE)
+
+    dense = _bench(params, cfg, paged=False, slots=SLOTS)
+    equal_slots = _bench(params, cfg, paged=True, slots=SLOTS,
+                         n_pages=pool_pages)
+    equal_hbm = _bench(params, cfg, paged=True, slots=capacity,
+                       n_pages=pool_pages)
+    dense["mode"] = "dense"
+    equal_slots["mode"] = "paged_equal_slots"
+    equal_hbm["mode"] = "paged_equal_hbm"
+    rows = [dense, equal_slots, equal_hbm]
+    for r in rows:
+        r["tokens_ratio_vs_dense"] = round(
+            r["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9), 3)
+        r["capacity_ratio_vs_dense"] = round(
+            r["peak_resident"] / max(SLOTS, 1), 3)
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("paging", rows)
+    by_mode = {r["mode"]: r for r in rows}
+    dense = by_mode["dense"]
+    eq_slots = by_mode["paged_equal_slots"]
+    eq_hbm = by_mode["paged_equal_hbm"]
+    capacity_ratio = eq_hbm["capacity_ratio_vs_dense"]
+    tokens_ratio = eq_slots["tokens_ratio_vs_dense"]
+    snap = {
+        "bench": "paging",
+        "arch": ARCH,
+        "unix_time": time.time(),
+        "page_size": PAGE_SIZE,
+        "max_len": MAX_LEN,
+        "dense_slots": SLOTS,
+        "capacity_ratio": capacity_ratio,
+        "tokens_ratio": tokens_ratio,
+        "capacity_floor": CAPACITY_FLOOR,
+        "tokens_ratio_floor": TOKENS_RATIO_FLOOR,
+        "acceptance_capacity": capacity_ratio >= CAPACITY_FLOOR,
+        "acceptance_tokens": tokens_ratio >= TOKENS_RATIO_FLOOR,
+        "rows": rows,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    jpath = os.path.join(OUT_DIR, "BENCH_paging.json")
+    with open(jpath, "w") as f:
+        json.dump(snap, f, indent=2)
+    print(f"{'mode':>18} {'slots':>6} {'cache MB':>9} {'tok/s':>8} "
+          f"{'vs dense':>9} {'peak res':>9} {'oom':>4}")
+    for r in rows:
+        print(f"{r['mode']:>18} {r['slots']:>6} {r['cache_mb']:>9} "
+              f"{r['tokens_per_s']:>8} {r['tokens_ratio_vs_dense']:>9} "
+              f"{r['peak_resident']:>9} {r['oom_requeues']:>4}")
+    # acceptance: >=1.5x effective slots at equal HBM bytes, equal-slot
+    # tokens/s within 15% of dense
+    assert eq_hbm["cache_mb"] <= dense["cache_mb"] + 1e-6, \
+        "equal-HBM run used more cache bytes than dense"
+    assert capacity_ratio >= CAPACITY_FLOOR, snap
+    assert tokens_ratio >= TOKENS_RATIO_FLOOR, snap
+    print(f"capacity x{capacity_ratio} at equal HBM "
+          f"(floor {CAPACITY_FLOOR}), equal-slot tokens/s ratio "
+          f"{tokens_ratio} (floor {TOKENS_RATIO_FLOOR})")
+    print(f"wrote {path} and {jpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,12 @@ build when
   ``--tolerance`` (default 25%) below the committed ``BENCH_serving.json``
   baseline, or
 * the fresh ``BENCH_slo.json`` no longer records the ``latency_slo`` policy
-  strictly beating ``even_split`` and ``no_realloc`` on SLO attainment.
+  strictly beating ``even_split`` and ``no_realloc`` on SLO attainment, or
+* the fresh ``BENCH_paging.json`` no longer meets the paged-KV acceptance:
+  effective slot capacity at equal HBM below its floor (1.5x dense) or
+  equal-slot paged tokens/s below its floor (within 15% of dense).  Both
+  ratios are measured dense-vs-paged inside one run on one host, so they
+  are gated exactly, not against the committed absolute numbers.
 
 Absolute tokens/s moves with the host, so the tolerance is deliberately
 loose; the ``CHECK_TOLERANCE`` env var (or ``--tolerance``) can widen it for
@@ -81,6 +86,45 @@ def check_slo(fresh: dict) -> list:
     return errors
 
 
+# The paging acceptance floors are owned HERE, not read from the snapshot —
+# a fresh run cannot relax its own gate (bench_paging.py asserts the same
+# bars at generation time; keep the two in sync deliberately).
+PAGING_CAPACITY_FLOOR = 1.5
+PAGING_TOKENS_RATIO_FLOOR = 0.85
+
+
+def check_paging(fresh: dict) -> list:
+    """Recorded acceptance bits AND the re-derived ratios themselves."""
+    errors = []
+    cap_floor = PAGING_CAPACITY_FLOOR
+    tok_floor = PAGING_TOKENS_RATIO_FLOOR
+    if not fresh.get("acceptance_capacity"):
+        errors.append("paging: snapshot does not record the capacity acceptance")
+    if not fresh.get("acceptance_tokens"):
+        errors.append("paging: snapshot does not record the tokens/s acceptance")
+    by_mode = {row["mode"]: row for row in fresh.get("rows", [])}
+    dense = by_mode.get("dense")
+    eq_slots = by_mode.get("paged_equal_slots")
+    eq_hbm = by_mode.get("paged_equal_hbm")
+    if not (dense and eq_slots and eq_hbm):
+        errors.append(f"paging: rows missing, have {sorted(by_mode)}")
+        return errors
+    if eq_hbm["cache_mb"] > dense["cache_mb"] + 1e-6:
+        errors.append(
+            f"paging: equal-HBM run used {eq_hbm['cache_mb']} MB "
+            f"> dense {dense['cache_mb']} MB"
+        )
+    cap = eq_hbm["peak_resident"] / max(dense["slots"], 1)
+    if cap < cap_floor:
+        errors.append(
+            f"paging: effective capacity {cap:.2f}x dense < {cap_floor}x floor")
+    tok = eq_slots["tokens_per_s"] / max(dense["tokens_per_s"], 1e-9)
+    if tok < tok_floor:
+        errors.append(
+            f"paging: equal-slot tokens/s ratio {tok:.3f} < {tok_floor} floor")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="experiments/bench",
@@ -107,6 +151,12 @@ def main(argv=None) -> int:
         errors.extend(check_slo(_load(slo_path)))
     else:
         errors.append(f"slo: {slo_path} missing (bench_slo did not run?)")
+    paging_path = os.path.join(args.fresh, "BENCH_paging.json")
+    if os.path.exists(paging_path):
+        errors.extend(check_paging(_load(paging_path)))
+    else:
+        errors.append(
+            f"paging: {paging_path} missing (bench_paging did not run?)")
 
     if errors:
         for e in errors:

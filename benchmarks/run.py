@@ -24,6 +24,7 @@ BENCHES = [
     ("roofline", "bench_roofline", "§Roofline — dry-run derived terms"),
     ("serving", "bench_serving", "beyond-paper — chunked/donated decode hot path"),
     ("slo", "bench_slo", "beyond-paper — SLO attainment under open-loop Poisson traffic"),
+    ("paging", "bench_paging", "beyond-paper — paged KV pool capacity at equal HBM"),
 ]
 
 

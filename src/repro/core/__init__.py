@@ -52,6 +52,7 @@ from .hypervisor import (
     PolicyContext,
     PoolExecutor,
     TenantSpec,
+    kv_pages_proportional,
     latency_slo,
     queueing_latency,
     resolve_policy,
@@ -72,8 +73,8 @@ __all__ = [
     "emit_requests", "HRPError", "Lease",
     "ResourcePool", "HardwareModel", "fpga_core", "fpga_large_core",
     "fpga_small_core", "tpu_v5e_chip", "POLICIES", "Hypervisor",
-    "PolicyContext", "PoolExecutor", "TenantSpec", "latency_slo",
-    "queueing_latency", "resolve_policy", "slo_demand",
+    "PolicyContext", "PoolExecutor", "TenantSpec", "kv_pages_proportional",
+    "latency_slo", "queueing_latency", "resolve_policy", "slo_demand",
     "IFP", "Strategy", "dedupe_onchip",
     "make_layer_ifps", "Chain", "Instr", "Op", "Program", "SYNC_PROGRAM",
     "Unit", "concat",

@@ -10,6 +10,12 @@ here (they are *the* public-cloud requirement of the paper):
   (128-bit DDR slice in the paper; a chip's own HBM on TPU); the pool checks
   that the per-DDR-group port-bit budget is never oversubscribed
   (``sum(core ports) <= 512 bit`` per DDR bank, §4.2.2).
+* **KV-page quota** — a second, memory-side lease dimension: the pool can
+  own ``n_kv_pages`` cache pages (the serving layer's paged-KV pool,
+  ``repro.serving.kv_cache``), leased per tenant as a *count* (pages are
+  fungible — placement is device state).  Like the DDR port budget, the sum
+  of kv leases must never exceed the pool, and only tenants holding a core
+  lease may hold pages (memory without compute is a leak).
 
 The pool is pure bookkeeping — deliberately no JAX here; the serving glue
 (`repro.serving.tenancy`) turns leases into `jax.sharding.Mesh` slices.
@@ -45,6 +51,7 @@ class ResourcePool:
         cores_per_ddr: int = 4,
         ddr_port_bits: int = 512,
         core_port_bits: int = 128,
+        n_kv_pages: int = 0,
     ) -> None:
         if cores_per_ddr * core_port_bits > ddr_port_bits:
             raise HRPError(
@@ -55,19 +62,51 @@ class ResourcePool:
         self.cores_per_ddr = cores_per_ddr
         self.ddr_port_bits = ddr_port_bits
         self.core_port_bits = core_port_bits
+        self.n_kv_pages = n_kv_pages
         self._leases: Dict[str, Lease] = {}
         self._owner: List[Optional[str]] = [None] * n_cores
+        self._kv_leases: Dict[str, int] = {}
 
     # -- queries ------------------------------------------------------------
     @property
     def leases(self) -> Dict[str, Lease]:
         return dict(self._leases)
 
+    @property
+    def kv_leases(self) -> Dict[str, int]:
+        return dict(self._kv_leases)
+
     def free_cores(self) -> List[int]:
         return [i for i, o in enumerate(self._owner) if o is None]
 
+    def free_kv_pages(self) -> int:
+        return self.n_kv_pages - sum(self._kv_leases.values())
+
     def lease_of(self, tenant: str) -> Optional[Lease]:
         return self._leases.get(tenant)
+
+    def kv_lease_of(self, tenant: str) -> int:
+        return self._kv_leases.get(tenant, 0)
+
+    # -- kv-page leases (memory dimension; counts, not placements) -----------
+    def set_kv_lease(self, tenant: str, pages: int) -> None:
+        """Set ``tenant``'s kv-page lease to ``pages`` (0 releases it).  The
+        tenant must hold a core lease, and the pool total must fit — the
+        §4.2.2-style budget rule applied to cache memory."""
+        if pages < 0:
+            raise HRPError(f"negative kv lease for {tenant}: {pages}")
+        if pages and tenant not in self._leases:
+            raise HRPError(f"tenant {tenant} holds no core lease for kv pages")
+        others = sum(p for t, p in self._kv_leases.items() if t != tenant)
+        if others + pages > self.n_kv_pages:
+            raise HRPError(
+                f"kv pool oversubscribed: {others} held + {pages} for "
+                f"{tenant} > {self.n_kv_pages}"
+            )
+        if pages:
+            self._kv_leases[tenant] = pages
+        else:
+            self._kv_leases.pop(tenant, None)
 
     # -- invariants ----------------------------------------------------------
     def check_isolation(self) -> None:
@@ -94,6 +133,21 @@ class ResourcePool:
             )
             if bits > self.ddr_port_bits:
                 raise HRPError(f"DDR group {g} oversubscribed: {bits}b")
+
+    def check_kv_quota(self) -> None:
+        """KV-page leases must fit the pool, be non-negative, and only be
+        held by tenants that also hold cores (the memory-dimension analogue
+        of the per-DDR-group port budget)."""
+        total = 0
+        for t, p in self._kv_leases.items():
+            if p < 0:
+                raise HRPError(f"negative kv lease: {t} -> {p}")
+            if t not in self._leases:
+                raise HRPError(f"kv lease without a core lease: {t}")
+            total += p
+        if total > self.n_kv_pages:
+            raise HRPError(
+                f"kv pool oversubscribed: {total} > {self.n_kv_pages}")
 
     # -- placement ------------------------------------------------------------
     def _groups(self) -> List[range]:
@@ -184,6 +238,7 @@ class ResourcePool:
             raise HRPError(f"tenant {tenant} holds no lease")
         for c in lease.cores:
             self._owner[c] = None
+        self._kv_leases.pop(tenant, None)
 
     def resize(self, tenant: str, n: int) -> Lease:
         """Grow/shrink a lease in place — the private-cloud reconfiguration

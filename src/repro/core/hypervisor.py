@@ -46,10 +46,28 @@ reconfiguration.  ``admission="fifo"`` (default) drains it head-of-line —
 deterministic, but a big blocked head stalls everyone behind it;
 ``admission="backfill"`` walks the whole queue in order each drain, so small
 tenants slip past a blocked head (EASY-style backfilling without
-reservations).  With ``preemptive=True`` an arrival that cannot be admitted
-may **evict** strictly-lower-priority residents (lowest priority, youngest
-first) until it fits; victims are charged a context switch by the executor
-(``exec_evict``) and re-queued at the head of the wait queue.
+reservations — churn can starve the head); ``admission="easy"`` adds the
+**reservation**: anyone admitted past a blocked head must leave the head's
+floor in free cores, so departures accumulate toward the head's start time
+instead of being re-consumed forever.  With ``preemptive=True`` an arrival
+that cannot be admitted may **evict** strictly-lower-priority residents —
+lowest priority tier first, largest **SLO slack** first within a tier (the
+resident with the most latency headroom pays; no-SLO tenants are infinitely
+slack), deterministic youngest-arrival/name tie-break — until it fits;
+victims are charged a context switch by the executor (``exec_evict``) and
+re-queued at the head of the wait queue.
+
+**Second lease dimension — kv pages.**  When the pool is built with
+``n_kv_pages > 0``, every admission/rebalance also splits the cache-page
+budget (the serving layer's paged-KV pool): the core policy decides compute,
+then ``kv_policy`` (default :func:`kv_pages_proportional` — memory follows
+compute) maps that decision to per-tenant page leases, honouring
+``TenantSpec.min_kv_pages`` floors all-or-nothing exactly like ``min_cores``.
+Leases are recorded in the pool (``set_kv_lease``) with shrink-before-grow
+ordering, surfaced to executors through the optional
+``exec_kv_resize(name, pages, at)`` hook (the serving adapter turns it into
+``ContinuousBatcher.set_page_limit``), and re-checked after every event by
+``check_kv_quota`` alongside the isolation/bandwidth invariants.
 
 **Open-loop traffic** rides on the same queue: ``REQUEST`` events (from
 :class:`~repro.core.events.PoissonTraffic` / ``TraceTraffic`` via
@@ -109,6 +127,11 @@ class TenantSpec:
     admission — it idles until its first REQUEST instead of re-issuing
     closed-loop inferences (a tenant also flips open-loop implicitly on its
     first delivered request).
+
+    ``requested_kv_pages`` / ``min_kv_pages`` are the **memory dimension**
+    of the lease (the paged-KV pool of ``repro.serving``): how many cache
+    pages the tenant wants, and the floor below which it cannot run.
+    Admission is all-or-nothing on the floor, exactly like ``min_cores``.
     """
 
     name: str
@@ -121,6 +144,8 @@ class TenantSpec:
     latency_slo: Optional[float] = None
     arrival_rate: float = 0.0
     open_loop: bool = False
+    requested_kv_pages: int = 0
+    min_kv_pages: int = 0
 
 
 @dataclasses.dataclass
@@ -136,6 +161,9 @@ class PolicyContext:
     current: Dict[str, int]
     time: float
     latency: Optional[Callable[[TenantSpec, int], float]] = None
+    # memory dimension: pool-wide kv-page budget and current kv leases
+    n_kv_pages: int = 0
+    current_kv: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 Policy = Callable[[PolicyContext], Dict[str, int]]
@@ -361,6 +389,51 @@ def no_realloc(ctx: PolicyContext) -> Dict[str, int]:
     return alloc
 
 
+def kv_pages_proportional(ctx: PolicyContext,
+                          core_alloc: Dict[str, int]) -> Dict[str, int]:
+    """Default kv-page split: among tenants granted cores, reserve every
+    floor (``min_kv_pages``, arrival order), then share the remainder
+    proportionally to the *core* grant (largest remainder), capped at each
+    tenant's request — memory follows compute unless a policy says
+    otherwise.  Tenants asking for no pages get none."""
+    order = [s for s in _arrival_order(ctx.tenants)
+             if core_alloc.get(s.name, 0) > 0 and s.requested_kv_pages > 0]
+    if not order or ctx.n_kv_pages <= 0:
+        return {s.name: 0 for s in ctx.tenants}
+    alloc: Dict[str, int] = {s.name: 0 for s in ctx.tenants}
+    free = ctx.n_kv_pages
+    for s in order:
+        floor = min(s.min_kv_pages, s.requested_kv_pages, free)
+        alloc[s.name] = floor
+        free -= floor
+    if free > 0:
+        weights = {s.name: core_alloc.get(s.name, 0) for s in order}
+        total_w = sum(weights.values()) or 1.0
+        raw = {s.name: free * weights[s.name] / total_w for s in order}
+        grants = {}
+        for s in order:
+            grants[s.name] = min(int(raw[s.name]),
+                                 s.requested_kv_pages - alloc[s.name])
+            alloc[s.name] += grants[s.name]
+        left = free - sum(grants.values())
+        by_remainder = sorted(
+            order, key=lambda s: (-(raw[s.name] - int(raw[s.name])),
+                                  s.arrived_at, s.name),
+        )
+        while left > 0:
+            progress = False
+            for s in by_remainder:
+                if left == 0:
+                    break
+                if alloc[s.name] < s.requested_kv_pages:
+                    alloc[s.name] += 1
+                    left -= 1
+                    progress = True
+            if not progress:
+                break
+    return alloc
+
+
 POLICIES: Dict[str, Policy] = {
     "even_split": even_split,
     "weighted_by_workload": weighted_by_workload,
@@ -447,15 +520,18 @@ class Hypervisor:
         switch_mode: SwitchMode = SwitchMode.LAYER_LEVEL,
         admission: str = "fifo",
         preemptive: bool = False,
+        kv_policy: Optional[Callable[[PolicyContext, Dict[str, int]],
+                                     Dict[str, int]]] = None,
         on_event: Optional[Callable[["Hypervisor", Event], None]] = None,
     ) -> None:
         if pool is None:
             if executor is None or not hasattr(executor, "pool"):
                 raise ValueError("pass a ResourcePool or an executor exposing .pool")
             pool = executor.pool
-        if admission not in ("fifo", "backfill"):
+        if admission not in ("fifo", "backfill", "easy"):
             raise ValueError(
-                f"unknown admission order {admission!r}; use 'fifo' or 'backfill'"
+                f"unknown admission order {admission!r}; "
+                "use 'fifo', 'backfill' or 'easy'"
             )
         self.pool = pool
         self.policy = resolve_policy(policy)
@@ -467,6 +543,8 @@ class Hypervisor:
         self.switch_mode = switch_mode
         self.admission = admission
         self.preemptive = preemptive
+        self.kv_policy = kv_policy if kv_policy is not None \
+            else kv_pages_proportional
         self.on_event = on_event
         self.clock = 0.0
         self.trace: List[Event] = []
@@ -563,6 +641,9 @@ class Hypervisor:
     def allocation(self) -> Dict[str, int]:
         return {t: lease.n_cores for t, lease in self.pool.leases.items()}
 
+    def kv_allocation(self) -> Dict[str, int]:
+        return dict(self.pool.kv_leases)
+
     def waiting_tenants(self) -> List[str]:
         return [s.name for s in self.waiting]
 
@@ -604,6 +685,7 @@ class Hypervisor:
     def _post_event(self, ev: Event) -> None:
         self.pool.check_isolation()
         self.pool.check_bandwidth()
+        self.pool.check_kv_quota()
         self.trace.append(ev)
         if self.on_event is not None:
             self.on_event(self, ev)
@@ -619,6 +701,8 @@ class Hypervisor:
                 resident.min_cores = spec.min_cores
                 resident.priority = spec.priority
                 resident.weight = spec.weight
+                resident.requested_kv_pages = spec.requested_kv_pages
+                resident.min_kv_pages = spec.min_kv_pages
                 if not self._drain_waiting(t):
                     self._rebalance(t)
                 return
@@ -626,10 +710,13 @@ class Hypervisor:
             self.waiting = [w for w in self.waiting if w.name != spec.name]
             spec.arrived_at = t
             # FIFO fairness: an arrival never jumps a non-empty wait queue
-            # (backfill allows it — that is the point); preemption is the
-            # one exception, since it outranks the queue by priority
+            # (backfill allows it — that is the point; EASY allows it only
+            # around the head's reservation); preemption is the one
+            # exception, since it outranks the queue by priority
             jumped = self.admission == "fifo" and bool(self.waiting)
-            if not (not jumped and self._try_admit(spec, t)) and not (
+            if not (not jumped and self._try_admit(
+                spec, t, reserve=self._head_reservation())
+            ) and not (
                 self.preemptive and self._try_preempt(spec, t, try_free=jumped)
             ):
                 self.waiting.append(spec)
@@ -680,6 +767,9 @@ class Hypervisor:
         return PolicyContext(
             self.pool.n_cores, tenants, self._current(), t,
             latency=getattr(self.executor, "estimate_latency", None),
+            n_kv_pages=self.pool.n_kv_pages,
+            current_kv={n: p for n, p in self.pool.kv_leases.items()
+                        if n in self.specs},
         )
 
     def _flush_backlog(self, name: str, t: float) -> None:
@@ -689,16 +779,34 @@ class Hypervisor:
                 self.executor.exec_request(name, record, t)
 
     def _try_admit(self, spec: TenantSpec, t: float,
-                   mode: Optional[SwitchMode] = None) -> bool:
+                   mode: Optional[SwitchMode] = None,
+                   reserve: tuple = (0, 0)) -> bool:
+        reserve_cores, reserve_kv = reserve
         candidates = list(self.specs.values()) + [spec]
-        targets = self.policy(self._policy_ctx(candidates, t))
+        ctx = self._policy_ctx(candidates, t)
+        targets = self.policy(ctx)
         floor = max(spec.min_cores, 1)
         if targets.get(spec.name, 0) < floor:
             return False
         for s in self.specs.values():
             if targets.get(s.name, 0) < max(s.min_cores, 1):
                 return False  # admitting would starve a resident below floor
-        self._apply(targets, t, admit={spec.name: spec}, mode=mode)
+        if reserve_cores > 0 and \
+                self.pool.n_cores - sum(targets.values()) < reserve_cores:
+            return False  # EASY reservation: the wait-queue head's cores
+        # memory dimension: both the newcomer and every resident must keep
+        # their kv-page floor under the proposed split
+        kv_targets = self.kv_policy(ctx, targets)
+        if kv_targets.get(spec.name, 0) < spec.min_kv_pages:
+            return False
+        for s in self.specs.values():
+            if kv_targets.get(s.name, 0) < s.min_kv_pages:
+                return False
+        if reserve_kv > 0 and \
+                self.pool.n_kv_pages - sum(kv_targets.values()) < reserve_kv:
+            return False  # EASY reservation: the head's kv-page floor
+        self._apply(targets, t, admit={spec.name: spec}, mode=mode,
+                    kv_targets=kv_targets)
         self.specs[spec.name] = spec
         self._flush_backlog(spec.name, t)
         return True
@@ -715,21 +823,41 @@ class Hypervisor:
             self.executor.exec_remove(victim.name, t)
         self.preemptions.append(victim.name)
 
+    def _slo_slack(self, spec: TenantSpec) -> float:
+        """Headroom between a resident's SLO and its estimated queue-adjusted
+        latency at its *current* lease.  Tenants without an SLO (or without a
+        latency model) report infinite slack — evicting them costs no
+        attainment.  A tenant already blowing its SLO reports -inf."""
+        est_fn = getattr(self.executor, "estimate_latency", None)
+        if est_fn is None or spec.latency_slo is None:
+            return float("inf")
+        lease = self.pool.lease_of(spec.name)
+        k = lease.n_cores if lease is not None else max(spec.min_cores, 1)
+        est = est_fn(spec, k)
+        if est is None:
+            return float("inf")
+        return spec.latency_slo - queueing_latency(est, spec.arrival_rate)
+
     def _try_preempt(self, spec: TenantSpec, t: float, *,
                      try_free: bool = False) -> bool:
-        """Evict strictly-lower-priority residents — lowest priority first,
-        youngest arrival first within a tier — until ``spec`` fits.  Victims
-        re-queue at the head of the wait queue (earliest arrival first).  If
-        even evicting every lower-priority resident cannot seat ``spec``,
-        the evictions are rolled back: each victim is restored at exactly
-        its pre-eviction lease size (the cores it held are still free, so
-        the restore cannot fail) — though it has paid the context switch."""
+        """Evict strictly-lower-priority residents until ``spec`` fits —
+        lowest priority tier first, and *within* a tier the resident with
+        the largest SLO slack first (it has the most latency headroom to
+        give up; no-SLO tenants count as infinitely slack).  Ties break
+        deterministically on youngest arrival, then name.  Victims re-queue
+        at the head of the wait queue (earliest arrival first).  If even
+        evicting every lower-priority resident cannot seat ``spec``, the
+        evictions are rolled back: each victim is restored at exactly its
+        pre-eviction core and kv-page lease (the resources it held are
+        still free, so the restore cannot fail) — though it has paid the
+        context switch."""
         if max(spec.min_cores, 1) > self.pool.n_cores:
             return False    # could never fit even on an empty pool: don't
                             # charge residents for a doomed attempt
         victims = sorted(
             (s for s in self.specs.values() if s.priority < spec.priority),
-            key=lambda s: (s.priority, -s.arrived_at, s.name),
+            key=lambda s: (s.priority, -self._slo_slack(s),
+                           -s.arrived_at, s.name),
         )
         if not victims:
             return False
@@ -741,10 +869,12 @@ class Hypervisor:
         if try_free and self._try_admit(spec, t):
             return True
         sizes: Dict[str, int] = {}
+        kv_sizes: Dict[str, int] = {}
         evicted: List[TenantSpec] = []
         admitted = False
         for v in victims:
             sizes[v.name] = self.pool.lease_of(v.name).n_cores
+            kv_sizes[v.name] = self.pool.kv_lease_of(v.name)
             self._evict(v, t)
             evicted.append(v)
             if self._try_admit(spec, t):
@@ -755,6 +885,8 @@ class Hypervisor:
             for v in by_arrival:                    # exact rollback
                 self.executor.exec_admit(v, sizes[v.name], t)
                 self.specs[v.name] = v
+                if kv_sizes[v.name]:
+                    self.pool.set_kv_lease(v.name, kv_sizes[v.name])
                 self._flush_backlog(v.name, t)
             return False
         for v in reversed(by_arrival):
@@ -764,14 +896,37 @@ class Hypervisor:
     def _rebalance(self, t: float, mode: Optional[SwitchMode] = None) -> None:
         if not self.specs:
             return
-        targets = self.policy(self._policy_ctx(list(self.specs.values()), t))
-        self._apply(targets, t, mode=mode)
+        ctx = self._policy_ctx(list(self.specs.values()), t)
+        targets = self.policy(ctx)
+        self._apply(targets, t, mode=mode,
+                    kv_targets=self.kv_policy(ctx, targets))
+
+    def _apply_kv(self, kv_targets: Dict[str, int], t: float) -> None:
+        """Carry the memory-dimension decision out: shrinks first (they free
+        the pages the grows need — the same discipline as core resizes), and
+        notify the executor through the optional ``exec_kv_resize`` hook."""
+        current = dict(self.pool.kv_leases)
+        changes = [
+            (name, pages) for name, pages in sorted(kv_targets.items())
+            if name in self.specs and self.pool.lease_of(name) is not None
+            and pages != current.get(name, 0)
+        ]
+        notify = getattr(self.executor, "exec_kv_resize", None)
+        for shrink_pass in (True, False):
+            for name, pages in changes:
+                if (pages < current.get(name, 0)) is not shrink_pass:
+                    continue
+                self.pool.set_kv_lease(name, pages)
+                if notify is not None:
+                    notify(name, pages, t)
 
     def _apply(self, targets: Dict[str, int], t: float, *,
                admit: Optional[Dict[str, TenantSpec]] = None,
-               mode: Optional[SwitchMode] = None) -> None:
+               mode: Optional[SwitchMode] = None,
+               kv_targets: Optional[Dict[str, int]] = None) -> None:
         """Carry a policy decision out through the executor: shrinks first
-        (they free the cores the grows need), then grows, then admissions."""
+        (they free the cores the grows need), then grows, then admissions,
+        then kv-page lease changes (which need the admitted core leases)."""
         admit = admit or {}
         mode = mode or self.switch_mode
         current = {
@@ -788,23 +943,48 @@ class Hypervisor:
                 self.executor.exec_resize(name, targets[name], t, mode)
         for name, spec in admit.items():
             self.executor.exec_admit(spec, targets[name], t)
+        if kv_targets is not None:
+            # admissions just landed: record them before the kv pass so the
+            # admitted tenant's pages pass the holds-a-core-lease check
+            for name, spec in admit.items():
+                self.specs.setdefault(name, spec)
+            self._apply_kv(kv_targets, t)
+
+    def _head_reservation(self) -> tuple:
+        """EASY start-time guarantee: while the wait-queue head is blocked,
+        anyone admitted past it must leave the head's floor in free cores
+        AND free kv pages — capacity released by departures *accumulates*
+        for the head instead of being endlessly re-consumed by backfill
+        churn, so the head starts as soon as enough has drained (in
+        whichever dimension is binding).  Plain ``backfill`` reserves
+        nothing (that is exactly its starvation mode).  Returns
+        ``(cores, kv_pages)``."""
+        if self.admission != "easy" or not self.waiting:
+            return (0, 0)
+        head = self.waiting[0]
+        return (max(head.min_cores, 1), max(head.min_kv_pages, 0))
 
     def _drain_waiting(self, t: float, mode: Optional[SwitchMode] = None) -> int:
         """Admit from the wait queue.  ``fifo``: head-of-line — stop at the
         first waiter that doesn't fit.  ``backfill``: one deterministic pass
         over the whole queue in order, so a small tenant may be admitted past
-        a blocked head (EASY backfilling without reservations — the head
-        keeps its queue position and is always offered capacity first).
-        Returns how many were admitted — each admission already re-applied
-        the policy over the full tenant set, so the caller skips its own
-        rebalance when this is non-zero."""
+        a blocked head (EASY-style backfilling without reservations — the
+        head keeps its queue position and is always offered capacity first,
+        but churn can starve it).  ``easy``: the same walk, except everyone
+        admitted past a blocked head must respect the head's reservation
+        (:meth:`_head_reservation`) — the regression the plain backfill
+        test suite pins down.  Returns how many were admitted — each
+        admission already re-applied the policy over the full tenant set,
+        so the caller skips its own rebalance when this is non-zero."""
         admitted = 0
         i = 0
         while i < len(self.waiting):
-            if self._try_admit(self.waiting[i], t, mode=mode):
+            reserve = self._head_reservation() if i > 0 else (0, 0)
+            if self._try_admit(self.waiting[i], t, mode=mode,
+                               reserve=reserve):
                 self.waiting.pop(i)
                 admitted += 1
-            elif self.admission == "backfill":
+            elif self.admission in ("backfill", "easy"):
                 i += 1
             else:
                 break

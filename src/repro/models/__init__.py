@@ -7,6 +7,7 @@ from .transformer import (
     encoder_forward,
     forward,
     init_caches,
+    init_paged_caches,
     init_params,
     lm_loss,
     logits_fn,
@@ -18,6 +19,7 @@ from .transformer import (
 
 __all__ = [
     "Caches", "FwdOut", "decode_step", "encoder_forward", "forward",
-    "init_caches", "init_params", "lm_loss", "logits_fn", "n_blocks",
+    "init_caches", "init_paged_caches", "init_params", "lm_loss",
+    "logits_fn", "n_blocks",
     "period_len", "period_structure", "prefill",
 ]

@@ -470,3 +470,124 @@ def init_kv_cache(cfg, batch: int, max_len: int, *, dtype=None) -> KVCacheView:
         v=jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), dtype=dt),
         pos=jnp.full((batch, C), -1, dtype=jnp.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Paged decode path (block-granular KV virtualization)
+# ---------------------------------------------------------------------------
+
+
+class PagedKVView(NamedTuple):
+    """One layer's cache as a shared pool of fixed-size pages.
+
+    k, v: (n_pages + 1, page_size, Hkv, dh) — one extra *trash* page at
+    index ``n_pages`` that absorbs writes from slots with no mapping
+    (inactive, page-fault denied).  Which pool page holds which slot's
+    tokens lives outside the view, in the per-slot **page table**
+    (B, max_pages) int32 where entry j maps the slot's logical page j
+    (absolute positions [j*page_size, (j+1)*page_size)) to a physical
+    page id, -1 = unmapped.
+
+    No per-token ``pos`` array is needed: paged placement is
+    position-indexed by construction — logical page j, offset o *is*
+    absolute position j*page_size + o — so validity of a gathered key is
+    ``page mapped and position <= cur_pos``.  (A slot only ever attends
+    to positions it has itself written since acquiring the page, so
+    stale contents of recycled pages can never leak across slots.)
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[0] - 1
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
+def init_paged_kv_cache(cfg, n_pages: int, page_size: int, *, dtype=None) -> PagedKVView:
+    """Page pool for ONE attention layer (+1 trash page).  Paging assumes a
+    full-length cache, i.e. no sliding-window ring (the ring would recycle
+    *within* a slot; pages recycle *across* slots)."""
+    if cfg.sliding_window:
+        raise ValueError("paged KV does not support sliding-window archs")
+    dt = jnp.dtype(dtype or cfg.dtype)
+    return PagedKVView(
+        k=jnp.zeros((n_pages + 1, page_size, cfg.n_kv_heads, cfg.d_head), dtype=dt),
+        v=jnp.zeros((n_pages + 1, page_size, cfg.n_kv_heads, cfg.d_head), dtype=dt),
+    )
+
+
+def paged_decode_attention(params, x, cache: PagedKVView, cur_pos, page_table,
+                           cfg, *, impl: str = "xla", policy=None):
+    """Single-token decode against a paged pool.
+
+    x: (B, 1, D); cur_pos: (B,) absolute position of the new token;
+    page_table: (B, max_pages) int32 physical page per logical page.
+
+    The new token's K/V is written at (page_table[b, cur_pos // ps],
+    cur_pos % ps); unmapped slots write to the trash page.  Attention
+    gathers the slot's pages into a (B, max_pages*ps, Hkv, dh) view —
+    the same bytes the dense path reads — masked to mapped pages and
+    positions <= cur_pos.
+
+    Only the XLA path exists so far: the Pallas decode kernel and the
+    length-sharded ``kv_slot_update`` policy hook are dense-cache-only,
+    so both are rejected loudly instead of silently falling back.
+    """
+    if impl == "pallas":
+        raise NotImplementedError(
+            "paged decode has no Pallas kernel yet; use attn_impl='xla'")
+    if policy is not None and getattr(policy, "kv_len_sharded", False):
+        raise NotImplementedError(
+            "paged decode does not support a length-sharded KV cache")
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, x, cfg, positions=cur_pos[:, None], rope=True
+    )
+    P = cache.n_pages
+    ps = cache.page_size
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+
+    cur_pos = cur_pos.astype(jnp.int32)
+    logical = cur_pos // ps                                    # (B,)
+    pid = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    dest = jnp.where(pid >= 0, pid, P)                         # trash if unmapped
+    off = cur_pos % ps
+    k = cache.k.at[dest, off].set(k_new[:, 0])
+    v = cache.v.at[dest, off].set(v_new[:, 0])
+
+    gather = jnp.where(page_table >= 0, page_table, P)         # (B, maxp)
+    kg = k[gather]                                             # (B, maxp, ps, Hkv, dh)
+    vg = v[gather]
+    maxp = page_table.shape[1]
+    L = maxp * ps
+    kg = kg.reshape(B, L, cfg.n_kv_heads, cfg.d_head)
+    vg = vg.reshape(B, L, cfg.n_kv_heads, cfg.d_head)
+    pos_l = jnp.arange(L, dtype=jnp.int32)                     # flat == absolute
+    valid = (page_table >= 0)[:, pos_l // ps] & (pos_l[None, :] <= cur_pos[:, None])
+
+    out = _paged_attn_xla(q, kg, vg, valid, cfg)
+    y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return y, PagedKVView(k=k, v=v)
+
+
+def _paged_attn_xla(q, k, v, valid, cfg):
+    """q: (B,1,H,dh); k/v: (B,L,Hkv,dh); valid: (B,L).  Same masked-softmax
+    math as :func:`_decode_attn_xla`, validity precomputed from the page
+    table instead of a per-slot ``pos`` array."""
+    B, _, H, dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = (q.reshape(B, Hkv, group, dh) / jnp.sqrt(jnp.float32(dh))).astype(q.dtype)
+    s = jnp.einsum("bgid,bkgd->bgik", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgik,bkgd->bgid", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

@@ -197,12 +197,17 @@ def _apply_layer_train(
 
 def _apply_layer_decode(
     lp, spec: LayerSpec, x, cfg, *, cur_pos, kv_cache, ssm_state, cross_kv,
-    impl, policy,
+    impl, policy, page_table=None,
 ):
     """One layer, single-token decode.  Returns (x, new_kv, new_ssm)."""
     h = rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
     new_kv, new_ssm = kv_cache, ssm_state
-    if spec.mixer == "attn":
+    if spec.mixer == "attn" and page_table is not None:
+        y, new_kv = attn_mod.paged_decode_attention(
+            lp["attn"], h, kv_cache, cur_pos, page_table, cfg,
+            impl=impl, policy=policy,
+        )
+    elif spec.mixer == "attn":
         y, new_kv = attn_mod.decode_attention(
             lp["attn"], h, kv_cache, cur_pos, cfg, impl=impl, policy=policy
         )
@@ -411,6 +416,41 @@ def init_caches(cfg, batch: int, max_len: int) -> Caches:
     return Caches(kv=kv, ssm=ssm, cross=cross)
 
 
+def init_paged_caches(cfg, batch: int, n_pages: int, page_size: int) -> Caches:
+    """Decode caches with the attention layers backed by one shared page
+    pool (:class:`~repro.models.attention.PagedKVView`) instead of per-slot
+    dense buffers.  SSM and cross-attention state stay dense per slot —
+    they are fixed-size per sequence, so there is nothing to page.  The
+    per-slot page *table* lives with the slot bookkeeping
+    (``serving.engine.PageState``), not in the cache tree."""
+    specs = period_structure(cfg)
+    nb = n_blocks(cfg)
+    kv, ssm = {}, {}
+    for p, spec in enumerate(specs):
+        if spec.mixer == "attn":
+            one = attn_mod.init_paged_kv_cache(cfg, n_pages, page_size)
+            kv[str(p)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape).copy(), one
+            )
+        else:
+            one = ssm_mod.init_ssm_state(cfg, batch)
+            ssm[str(p)] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (nb,) + a.shape).copy(), one
+            )
+    cross = None
+    if cfg.family == "audio":
+        cross = {
+            str(p): (
+                jnp.zeros((nb, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+                          dtype=jnp.dtype(cfg.dtype)),
+                jnp.zeros((nb, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head),
+                          dtype=jnp.dtype(cfg.dtype)),
+            )
+            for p in range(len(specs))
+        }
+    return Caches(kv=kv, ssm=ssm, cross=cross)
+
+
 def prefill(
     params, tokens, cfg, *, max_len: int, positions=None, extra_embeds=None,
     enc_out=None, impl: str = "xla", policy=None, remat: str = "none",
@@ -483,10 +523,15 @@ def prefill(
 
 def decode_step(
     params, tokens, caches: Caches, cur_pos, cfg, *, impl: str = "xla",
-    policy=None,
+    policy=None, page_table=None,
 ):
     """One decode step.  tokens: (B,) int32; cur_pos: (B,) absolute position.
-    Returns (logits (B, Vp), updated Caches)."""
+    Returns (logits (B, Vp), updated Caches).
+
+    With ``page_table`` (B, max_pages) the attention caches are treated as
+    paged pools (:func:`init_paged_caches`); the table is read-only here —
+    page allocation happens in the caller (chunk scan body or admission).
+    """
     specs = period_structure(cfg)
     x = _embed(params, tokens, policy)[:, None, :]     # (B, 1, d)
     if cfg.family == "audio":
@@ -507,6 +552,7 @@ def decode_step(
                 block_params[p], spec, x, cfg, cur_pos=cur_pos,
                 kv_cache=kv_in.get(str(p)), ssm_state=ssm_in.get(str(p)),
                 cross_kv=cross_in.get(str(p)), impl=impl, policy=policy,
+                page_table=page_table,
             )
             if spec.mixer == "attn":
                 kv_out[str(p)] = nkv

@@ -1,19 +1,27 @@
 from .engine import (
+    PageState,
     ServeConfig,
     SlotState,
     admit_program,
     chunk_bucket,
     decode_chunk_program,
     generate,
+    init_page_state,
     init_slot_state,
     make_admit_step,
     make_decode_chunk,
+    make_paged_admit_step,
+    make_paged_decode_chunk,
     make_prefill_step,
     make_serve_step,
+    paged_admit_program,
+    paged_decode_chunk_program,
 )
 from .batcher import BatcherStats, ContinuousBatcher, Request
 from .kv_cache import (
-    cache_len, kv_cache_bytes, seed_kv_cache, seed_ssm_state, tree_bytes,
+    PagedKVPool, PageQuotaError, cache_len, kv_cache_bytes, page_bytes,
+    paged_kv_cache_bytes, pages_for, seed_kv_cache, seed_ssm_state,
+    tree_bytes,
 )
 from .tenancy import (
     CompiledProgram,
@@ -24,12 +32,15 @@ from .tenancy import (
 )
 
 __all__ = [
-    "ServeConfig", "SlotState", "admit_program", "chunk_bucket",
-    "decode_chunk_program", "generate", "init_slot_state",
-    "make_admit_step", "make_decode_chunk", "make_prefill_step",
-    "make_serve_step", "BatcherStats", "ContinuousBatcher", "Request",
-    "cache_len", "kv_cache_bytes", "seed_kv_cache", "seed_ssm_state",
-    "tree_bytes",
+    "PageState", "ServeConfig", "SlotState", "admit_program", "chunk_bucket",
+    "decode_chunk_program", "generate", "init_page_state", "init_slot_state",
+    "make_admit_step", "make_decode_chunk", "make_paged_admit_step",
+    "make_paged_decode_chunk", "make_prefill_step", "make_serve_step",
+    "paged_admit_program", "paged_decode_chunk_program",
+    "BatcherStats", "ContinuousBatcher", "Request",
+    "PagedKVPool", "PageQuotaError", "cache_len", "kv_cache_bytes",
+    "page_bytes", "paged_kv_cache_bytes", "pages_for", "seed_kv_cache",
+    "seed_ssm_state", "tree_bytes",
     "CompiledProgram", "ServingExecutor", "TwoStageCompiler",
     "VirtualAcceleratorPool", "make_serving_hypervisor",
 ]

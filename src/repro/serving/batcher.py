@@ -34,8 +34,23 @@ Invariants:
   reuse (see ``serving.engine``).
 
 Host-side bookkeeping is numpy; device work happens only in the two jitted
-programs.  (Paged/block KV is out of scope — the ring-buffer cache is
-position-indexed, so slot reuse is a pure overwrite.)
+programs.
+
+**Paged mode** (``paged=True``): the per-slot dense ring buffers are replaced
+by one pre-allocated pool of fixed-size KV pages (the cache analogue of the
+paper's instruction-frame tile) with per-slot page tables — see
+``serving.engine.PageState``.  Admission is gated on *page availability*
+instead of slot count alone: each joining request reserves its worst-case
+footprint (``ceil((prompt_len + max_new)/page_size)`` pages, or just the
+prompt pages with ``reserve_pages=False``) in a host-side
+:class:`~repro.serving.kv_cache.PagedKVPool` ledger, so the pool can hold
+far more slots than dense rings of the same HBM would (slots whose actual
+use is below ``max_len`` stop paying for it).  Page faults during decode are
+handled on device inside the chunk scan; a slot denied a page (pool dry or
+``kv_pages`` quota hit — only possible without reservations) deactivates,
+and the host requeues its request at the queue head
+(``stats.oom_requeues``).  The single post-chunk sync additionally carries
+``active`` and ``free_top`` so the host ledger stays reconciled.
 """
 
 from __future__ import annotations
@@ -48,15 +63,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import Caches, init_caches
-from .kv_cache import tree_bytes
+from repro.models.transformer import Caches, init_caches, init_paged_caches
+from .kv_cache import PagedKVPool, pages_for, tree_bytes
 from .engine import (
+    PageState,
     ServeConfig,
     SlotState,
     admit_program,
     chunk_bucket,
     decode_chunk_program,
+    init_page_state,
     init_slot_state,
+    paged_admit_program,
+    paged_decode_chunk_program,
 )
 
 
@@ -84,6 +103,12 @@ class BatcherStats:
     admit_tokens: int = 0        # first tokens emitted at admission
     cache_bytes: int = 0         # resident cache-tree size (donated in place)
     admit_scatter_bytes: int = 0  # bytes scattered at admission (vs. full-tree)
+    # paged mode
+    oom_requeues: int = 0        # requests requeued after a denied page fault
+    oom_discarded_tokens: int = 0  # emitted tokens thrown away by requeues
+    pages_in_use: int = 0        # device-allocated pages after the last sync
+    peak_pages_in_use: int = 0
+    peak_resident: int = 0       # most simultaneously-resident requests
 
     @property
     def occupancy(self) -> float:
@@ -91,7 +116,12 @@ class BatcherStats:
 
     @property
     def tokens(self) -> int:
-        return self.decode_tokens + self.admit_tokens
+        """Tokens actually *delivered*: a restarted (OOM-requeued) request's
+        discarded emissions were device work but not throughput — without
+        the correction, over-subscribed tokens/s would be inflated by
+        exactly the thrashing the residency throttle exists to limit."""
+        return self.decode_tokens + self.admit_tokens \
+            - self.oom_discarded_tokens
 
     @property
     def dispatches_per_token(self) -> float:
@@ -112,7 +142,10 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, *, slots: int, prompt_len: int,
                  max_len: int, policy=None, attn_impl: str = "xla",
-                 chunk: int = 8):
+                 chunk: int = 8, paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 page_quota: Optional[int] = None,
+                 reserve_pages: bool = True):
         self.params = params
         self.cfg = cfg
         self.B = slots
@@ -122,34 +155,103 @@ class ContinuousBatcher:
                            chunk=self.chunk)
         self.scfg = scfg
         self._policy = policy
-        self._admit_fn = admit_program(cfg, scfg, policy=policy)
+        self.paged = paged
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * slots
-        self.caches: Caches = init_caches(cfg, slots, max_len)
         self.state: SlotState = init_slot_state(slots)
+        if paged:
+            self.page_size = max(1, page_size)
+            self.max_pages = pages_for(max_len, self.page_size)
+            # default pool == dense capacity; pass a smaller n_pages to
+            # over-subscribe (the bench's equal-HBM capacity argument)
+            self.n_pages = n_pages if n_pages is not None \
+                else slots * self.max_pages
+            self.reserve_pages = reserve_pages
+            self._page_limit = min(page_quota, self.n_pages) \
+                if page_quota is not None else self.n_pages
+            self.kv_pool = PagedKVPool(self.n_pages, self.page_size)
+            self.caches: Caches = init_paged_caches(
+                cfg, slots, self.n_pages, self.page_size)
+            if not self.caches.kv:
+                raise ValueError("paged mode needs at least one attn layer")
+            self.pages: Optional[PageState] = init_page_state(
+                slots, self.n_pages, self.max_pages, quota=self._page_limit)
+            self._admit_fn = paged_admit_program(cfg, scfg, policy=policy)
+        else:
+            self.caches = init_caches(cfg, slots, max_len)
+            self.pages = None
+            self._admit_fn = admit_program(cfg, scfg, policy=policy)
         self.stats = BatcherStats(cache_bytes=tree_bytes(self.caches))
         self._key = jax.random.PRNGKey(0)
+        self._stalled = 0           # consecutive zero-emission paged chunks
+        self._admitted_pages_since_sync = 0
+        # over-subscription throttle: after a denied page fault, cap
+        # residency at the survivors so restarted requests stop thrashing
+        # the ones still making progress; recover one slot per clean round
+        self._resident_cap = slots
 
     # -- request intake ------------------------------------------------
     def submit(self, req: Request) -> None:
         assert req.prompt.shape[0] <= self.prompt_len
+        if self.paged:
+            assert self._request_pages(req) <= self.n_pages, \
+                "request footprint exceeds the whole page pool"
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    # -- paged-mode ledger ----------------------------------------------
+    def _request_pages(self, req: Request) -> int:
+        """Ledger reservation for one request: its worst-case footprint
+        (bucketed prompt + full decode budget) when reserving, prompt pages
+        only when running over-subscribed."""
+        toks = self.prompt_len + (req.max_new if self.reserve_pages else 0)
+        return pages_for(toks, self.page_size)
+
+    def set_page_limit(self, n_pages: int) -> None:
+        """Adjust the tenant's ``kv_pages`` lease cap mid-run (hypervisor
+        kv resize).  Takes effect on the next dispatch; shrinking below the
+        current allocation only blocks further growth — resident pages
+        drain as their slots complete."""
+        assert self.paged, "page limits only apply to paged batchers"
+        self._page_limit = max(0, min(int(n_pages), self.n_pages))
+        self.pages = self.pages._replace(quota=jnp.int32(self._page_limit))
+
+    def _pages_available(self, need: int) -> bool:
+        if self.kv_pool.used + need > self._page_limit:
+            return False
+        avail = self.kv_pool.available
+        if not self.reserve_pages:
+            # the ledger only reserved prompt pages; residents' decode pages
+            # live on device.  Bound admission by the device allocation seen
+            # at the last sync (plus prompts admitted since), and keep one
+            # page of headroom whenever someone is already resident so at
+            # least one slot can take the decode-time fault and progress.
+            device_avail = (self.n_pages - self.stats.pages_in_use
+                            - self._admitted_pages_since_sync)
+            avail = min(avail, device_avail)
+            need += int(any(r is not None for r in self.slot_req))
+        return need <= avail
 
     # -- mid-run migration (Hypervisor resize between chunks) -----------
     def live_state(self) -> Dict[str, Any]:
         """Current device state, for ``TwoStageCompiler.reconfigure``
         migration.  Pull-only: the returned arrays are donated (dead) after
         the next step — register this *method* (not its result) with
-        ``ServingExecutor.register_state``."""
-        return {"caches": self.caches, "slots": self.state}
+        ``ServingExecutor.register_state``.  Paged batchers also carry the
+        page tables / free stack, so a resize migrates the whole pool."""
+        out = {"caches": self.caches, "slots": self.state}
+        if self.paged:
+            out["pages"] = self.pages
+        return out
 
     def adopt_state(self, state: Dict[str, Any]) -> None:
         """Adopt a migrated state tree; decode resumes at the same token."""
         self.caches = state["caches"]
         self.state = state["slots"]
+        if self.paged:
+            self.pages = state["pages"]
 
     # -- admission: right-sized prefill + per-slot scatter ---------------
     def _admit(self) -> None:
@@ -157,8 +259,23 @@ class ContinuousBatcher:
         if not free or not self.queue:
             return
         joins = []
+        resident = sum(r is not None for r in self.slot_req)
         while free and self.queue:
+            if self.paged:
+                if resident + len(joins) >= self._resident_cap:
+                    break
+                # admission by page availability: the queue head joins only
+                # when its ledger reservation fits the pool AND the lease
+                # cap (head-of-line — a later smaller request never jumps)
+                need = self._request_pages(self.queue[0])
+                if not self._pages_available(need):
+                    break
+                self.kv_pool.alloc(self.queue[0].rid, need)
+                self._admitted_pages_since_sync += pages_for(
+                    self.prompt_len, self.page_size)
             joins.append((free.pop(0), self.queue.popleft()))
+        if not joins:
+            return
         n = len(joins)
         nb = min(1 << (n - 1).bit_length() if n > 1 else 1, self.B)
         toks = np.zeros((nb, self.prompt_len), dtype=np.int32)
@@ -180,11 +297,21 @@ class ContinuousBatcher:
             budget[j] = budget[0]
             eos[j] = eos[0]
         pos0 = np.full((nb,), self.prompt_len, dtype=np.int32)
-        nxt, self.caches, self.state = self._admit_fn(
-            self.params, {"tokens": jnp.asarray(toks)}, self.caches,
-            self.state, jnp.asarray(slots), jnp.asarray(pos0),
-            jnp.asarray(budget), jnp.asarray(eos),
-        )
+        if self.paged:
+            real = np.zeros((nb,), dtype=bool)
+            real[:n] = True
+            nxt, self.caches, self.state, self.pages = self._admit_fn(
+                self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+                self.state, self.pages, jnp.asarray(slots),
+                jnp.asarray(pos0), jnp.asarray(budget), jnp.asarray(eos),
+                jnp.asarray(real),
+            )
+        else:
+            nxt, self.caches, self.state = self._admit_fn(
+                self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+                self.state, jnp.asarray(slots), jnp.asarray(pos0),
+                jnp.asarray(budget), jnp.asarray(eos),
+            )
         self.stats.prefills += 1
         self.stats.dispatches += 1
         self.stats.admit_scatter_bytes += int(
@@ -200,8 +327,21 @@ class ContinuousBatcher:
             if len(req.out) >= req.max_new or hit_eos:
                 req.done = True
                 self.stats.completed += 1
+                if self.paged:
+                    self.kv_pool.free(req.rid)
+                    # done at admission: the device never popped its prompt
+                    # pages (a non-activating row allocates nothing), so
+                    # take it back out of the since-sync estimate — else
+                    # admit-only rounds leak the counter and starve
+                    # over-subscribed admission with the pool entirely free
+                    self._admitted_pages_since_sync -= pages_for(
+                        self.prompt_len, self.page_size)
             else:
                 self.slot_req[slot] = req
+        if self.paged:
+            self.stats.peak_resident = max(
+                self.stats.peak_resident,
+                sum(r is not None for r in self.slot_req))
 
     # -- chunk sizing: adaptive to queue pressure ------------------------
     def _pick_chunk(self, active: List[int]) -> int:
@@ -214,6 +354,10 @@ class ContinuousBatcher:
         return chunk_bucket(max(1, min(horizon, self.chunk)))
 
     def _chunk_fn(self, n_steps: int) -> Callable:
+        if self.paged:
+            return paged_decode_chunk_program(
+                self.cfg, self.scfg, n_steps, self.page_size,
+                policy=self._policy)
         return decode_chunk_program(self.cfg, self.scfg, n_steps,
                                     policy=self._policy)
 
@@ -225,13 +369,22 @@ class ContinuousBatcher:
             return
         T = self._pick_chunk(active)
         self._key, sub = jax.random.split(self._key)
-        self.caches, self.state, toks, emitted = self._chunk_fn(T)(
-            self.params, self.caches, self.state, sub
-        )
+        if self.paged:
+            (self.caches, self.state, self.pages, toks,
+             emitted) = self._chunk_fn(T)(
+                self.params, self.caches, self.state, self.pages, sub
+            )
+            fetch = (toks, emitted, self.state.active, self.pages.free_top)
+        else:
+            self.caches, self.state, toks, emitted = self._chunk_fn(T)(
+                self.params, self.caches, self.state, sub
+            )
+            fetch = (toks, emitted)
         self.stats.chunks += 1
         self.stats.dispatches += 1
         self.stats.steps += T
-        toks_np, emit_np = jax.device_get((toks, emitted))   # ONE host sync
+        fetched = jax.device_get(fetch)                      # ONE host sync
+        toks_np, emit_np = fetched[0], fetched[1]
         self.stats.host_syncs += 1
         self.stats.slot_total_steps += self.B * T
         self.stats.slot_busy_steps += int(emit_np.sum())
@@ -248,9 +401,45 @@ class ContinuousBatcher:
                 req.done = True
                 self.slot_req[i] = None
                 self.stats.completed += 1
+                if self.paged:
+                    self.kv_pool.free(req.rid)
+        if self.paged:
+            active_np = fetched[2]
+            self._stalled = self._stalled + 1 \
+                if int(emit_np.sum()) == 0 else 0
+            # a slot that deactivated without finishing was denied a page
+            # (pool dry / quota hit): requeue its request at the head — it
+            # re-prefills from scratch once capacity frees
+            oomed = 0
+            for i in active:
+                req = self.slot_req[i]
+                if req is not None and not bool(active_np[i]):
+                    self.slot_req[i] = None
+                    self.kv_pool.free(req.rid)
+                    self.stats.oom_discarded_tokens += len(req.out)
+                    req.out.clear()
+                    self.queue.appendleft(req)
+                    self.stats.oom_requeues += 1
+                    oomed += 1
+            if oomed:
+                self._resident_cap = max(
+                    1, sum(r is not None for r in self.slot_req))
+            elif self._resident_cap < self.B:
+                self._resident_cap += 1
+            self.stats.pages_in_use = self.n_pages - int(fetched[3])
+            self.stats.peak_pages_in_use = max(
+                self.stats.peak_pages_in_use, self.stats.pages_in_use)
+            self._admitted_pages_since_sync = 0
 
     def run(self, *, max_steps: int = 10_000) -> BatcherStats:
         while (self.queue or any(r is not None for r in self.slot_req)) and \
                 self.stats.steps < max_steps:
+            before = self.stats.dispatches
             self.step()
+            if self.stats.dispatches == before and \
+                    not any(r is not None for r in self.slot_req):
+                break   # starved: queued work cannot be admitted (page limit)
+            if self._stalled >= 8:
+                break   # page-fault livelock: the pool cannot fit even one
+                        # request's footprint at the current quota
         return self.stats

@@ -45,6 +45,8 @@ import numpy as np
 from repro.models import decode_step, encoder_forward, prefill
 from repro.models.transformer import Caches
 
+from .kv_cache import pages_for
+
 
 @functools.lru_cache(maxsize=32)
 def _logit_mask(vocab: int, vocab_padded: int):
@@ -296,6 +298,274 @@ def make_admit_step(cfg, scfg: ServeConfig, *, policy=None):
         return nxt, Caches(kv=kv, ssm=ssm, cross=cross), state
 
     return admit_step
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: on-device page tables, free-list and page-fault allocation
+# ---------------------------------------------------------------------------
+
+
+class PageState(NamedTuple):
+    """Device-resident page-pool bookkeeping, donated alongside the caches.
+
+    table:    (B, max_pages) int32 — physical page backing each slot's
+              logical page (absolute positions [j*ps, (j+1)*ps)); -1 =
+              unmapped.  A physical page is mapped by at most one
+              (slot, logical) entry — the no-double-mapping invariant.
+    free:     (n_pages + 1,) int32 — stack of free page ids; entries
+              [0, free_top) are valid, the last element is scratch for
+              masked-out pushes (mirrors the trash page of the pool).
+    free_top: () int32 — stack pointer; allocated pages = n_pages - free_top.
+    quota:    () int32 — lease cap on allocated pages (the hypervisor's
+              ``kv_pages`` dimension); a fault beyond it is denied even if
+              the pool has free pages.
+    """
+
+    table: jax.Array
+    free: jax.Array
+    free_top: jax.Array
+    quota: jax.Array
+
+    @property
+    def n_pages(self) -> int:
+        return self.free.shape[0] - 1
+
+
+def init_page_state(batch: int, n_pages: int, max_pages: int,
+                    *, quota: Optional[int] = None) -> PageState:
+    return PageState(
+        table=jnp.full((batch, max_pages), -1, jnp.int32),
+        free=jnp.concatenate([jnp.arange(n_pages, dtype=jnp.int32),
+                              jnp.full((1,), -1, jnp.int32)]),
+        free_top=jnp.int32(n_pages),
+        quota=jnp.int32(n_pages if quota is None else min(quota, n_pages)),
+    )
+
+
+def _free_finished_pages(pages_table, free, free_top, finished):
+    """Push every page mapped by a ``finished`` slot back onto the free
+    stack (cumsum-ranked scatter; masked-out entries land on the scratch
+    element) and clear those table rows.  Returns (table, free, free_top)."""
+    scratch = free.shape[0] - 1
+    pmask = finished[:, None] & (pages_table >= 0)
+    flat = pmask.reshape(-1)
+    prank = jnp.cumsum(flat.astype(jnp.int32)) - 1
+    idx = jnp.where(flat, free_top + prank, scratch)
+    free = free.at[idx].set(pages_table.reshape(-1))
+    free_top = free_top + flat.sum(dtype=jnp.int32)
+    table = jnp.where(finished[:, None], -1, pages_table)
+    return table, free, free_top
+
+
+def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
+                            page_size: int, *, policy=None):
+    """decode_chunk(params, caches, state, pages, key) ->
+    (caches, state, pages, tokens (T, B), emitted (T, B)).
+
+    The paged twin of :func:`make_decode_chunk`: same ``lax.scan`` with the
+    same EOS/budget bookkeeping, plus **page faults handled inside the
+    chunk boundary** — a slot whose write position crosses into an
+    unmapped logical page pops a page from the device free stack before
+    the decode step (so the batcher still pays ≤1 dispatch and ≤1 host
+    sync per chunk).  Grants are prefix-ordered by slot index (both the
+    stack bound and the quota bound are monotone in the cumsum rank, so a
+    denied slot implies every later needer is denied too — pops stay
+    contiguous at the top of the stack).  A denied slot (pool dry or
+    quota hit) deactivates immediately without emitting — the host sees
+    ``active`` drop without EOS/budget and requeues the request.  Pages
+    of slots that finish (EOS, budget, or denial) are pushed back onto
+    the stack in the same step, so capacity frees mid-chunk.  Jit with
+    ``donate_argnums=(1, 2, 3)``.
+    """
+    mask = scfg.logit_mask(cfg)
+    ps = int(page_size)
+
+    def decode_chunk(params, caches: Caches, state: SlotState,
+                     pages: PageState, key):
+        n_pages = pages.free.shape[0] - 1
+        B = state.tokens.shape[0]
+        bidx = jnp.arange(B)
+
+        def body(carry, _):
+            caches, st, pg, key = carry
+            key, sub = jax.random.split(key)
+            # -- page fault: map the write position's logical page --------
+            logical = (st.cur_pos // ps).astype(jnp.int32)
+            cur_pid = jnp.take_along_axis(pg.table, logical[:, None], axis=1)[:, 0]
+            need = st.active & (cur_pid < 0)
+            rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+            allocated = n_pages - pg.free_top
+            got = need & (rank < pg.free_top) & (allocated + rank < pg.quota)
+            pid = pg.free[jnp.clip(pg.free_top - 1 - rank, 0, n_pages)]
+            table = pg.table.at[bidx, logical].set(
+                jnp.where(got, pid, cur_pid))
+            free_top = pg.free_top - got.sum(dtype=jnp.int32)
+            oom = need & ~got
+            active = st.active & ~oom
+            # -- decode against the (updated) page table ------------------
+            logits, caches = decode_step(
+                params, st.tokens, caches, st.cur_pos, cfg,
+                impl=scfg.attn_impl, policy=policy, page_table=table,
+            )
+            nxt = select_token(logits, mask, scfg, sub)
+            nxt = jnp.where(active, nxt, st.tokens)
+            emitted = active
+            remaining = st.remaining - active.astype(jnp.int32)
+            done = active & ((nxt == st.eos) | (remaining <= 0))
+            # -- recycle pages of finished slots --------------------------
+            table, free, free_top = _free_finished_pages(
+                table, pg.free, free_top, done | oom)
+            st = SlotState(
+                tokens=nxt,
+                cur_pos=st.cur_pos + active.astype(jnp.int32),
+                active=active & ~done,
+                remaining=remaining,
+                eos=st.eos,
+            )
+            pg = PageState(table=table, free=free, free_top=free_top,
+                           quota=pg.quota)
+            return (caches, st, pg, key), (nxt, emitted)
+
+        (caches, state, pages, _), (toks, emitted) = jax.lax.scan(
+            body, (caches, state, pages, key), None, length=n_steps
+        )
+        return caches, state, pages, toks, emitted
+
+    return decode_chunk
+
+
+def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
+    """admit_step(params, batch, caches, state, pages, slots, pos0, budget,
+    eos, real) -> (first_tokens (n,), caches, state, pages).
+
+    Paged admission: right-sized bucketed prefill exactly like
+    :func:`make_admit_step`, but the fresh K/V is scattered into
+    **freshly-popped pool pages** instead of per-slot dense rows, and the
+    joining slots' page-table rows are rewritten.  ``real`` (n,) bool marks
+    genuine rows — bucket padding duplicates row 0 and must neither pop
+    pages nor write conflicting values (every duplicate scatter carries row
+    0's values, keeping the duplicate-index writes deterministic).  A row
+    that never activates (immediate EOS / zero budget / allocation denied)
+    gets no pages and a cleared table row.  Jit with
+    ``donate_argnums=(2, 3, 4)``.
+    """
+    mask = scfg.logit_mask(cfg)
+
+    def admit_step(params, batch, caches: Caches, state: SlotState,
+                   pages: PageState, slots, pos0, budget, eos, real):
+        n_pages = pages.free.shape[0] - 1
+        ps = None
+        for view in caches.kv.values():
+            ps = view.k.shape[2]
+            break
+        assert ps is not None, "paged admission needs at least one attn layer"
+        kw: Dict[str, Any] = dict(impl=scfg.attn_impl, policy=policy)
+        S = batch["tokens"].shape[1]
+        if cfg.family == "vlm":
+            kw["extra_embeds"] = batch["extra_embeds"]
+            kw["positions"] = batch["positions"]
+            S += batch["extra_embeds"].shape[1]
+        if cfg.family == "audio":
+            kw["enc_out"] = encoder_forward(
+                params, batch["frames"], cfg, impl=scfg.attn_impl, policy=policy
+            )
+        # seed a dense cache sized exactly to the prompt: identity placement,
+        # so fresh K/V rows are in absolute-position order for page packing
+        logits, fresh = prefill(params, batch["tokens"], cfg, max_len=S, **kw)
+        if mask is not None:
+            logits = logits + mask.astype(logits.dtype)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        n = nxt.shape[0]
+        np_ = pages_for(S, ps)
+        maxp = pages.table.shape[1]
+        remaining = budget - 1
+        wants = (remaining > 0) & (nxt != eos)
+        ask = real & wants
+        # prefix-feasible grants (cum is monotone, so stack/quota denials
+        # only ever cut a suffix — pops stay contiguous at the stack top)
+        cum = jnp.cumsum(ask.astype(jnp.int32)) * np_
+        allocated = n_pages - pages.free_top
+        ok = (cum <= pages.free_top) & (allocated + cum <= pages.quota)
+        grant = ask & ok
+        ranks = ((jnp.cumsum(grant.astype(jnp.int32)) - 1)[:, None] * np_
+                 + jnp.arange(np_, dtype=jnp.int32)[None, :])        # (n, np_)
+        pid = pages.free[jnp.clip(pages.free_top - 1 - ranks, 0, n_pages)]
+        dest = jnp.where(grant[:, None], pid, n_pages)               # trash
+        free_top = pages.free_top - grant.sum(dtype=jnp.int32) * np_
+
+        # page-table rows: granted rows map their np_ pages, everything else
+        # clears; padding rows carry row 0's values (duplicate-scatter rule)
+        row = jnp.full((n, maxp), -1, jnp.int32).at[:, :np_].set(
+            jnp.where(grant[:, None], pid, -1))
+        row = jnp.where(real[:, None], row, row[0:1])
+        table = pages.table.at[slots].set(row)
+
+        pad = np_ * ps - S
+
+        def to_pages(a):
+            # (nb, n, S, ...) -> (nb, n * np_, ps, ...)
+            if pad:
+                width = ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 3)
+                a = jnp.pad(a, width)
+            return a.reshape(a.shape[0], n * np_, ps, *a.shape[3:])
+
+        def scatter_kv(old, new):
+            return old.at[:, dest.reshape(-1)].set(
+                to_pages(new).astype(old.dtype))
+
+        kv = {
+            p: type(view)(k=scatter_kv(view.k, fresh.kv[p].k),
+                          v=scatter_kv(view.v, fresh.kv[p].v))
+            for p, view in caches.kv.items()
+        }
+
+        def merge(old, new):
+            return old.at[:, slots].set(new.astype(old.dtype))
+
+        ssm = jax.tree.map(merge, caches.ssm, fresh.ssm)
+        cross = caches.cross
+        if cross is not None and fresh.cross is not None:
+            cross = jax.tree.map(merge, cross, fresh.cross)
+
+        activates = wants & (ok | (np_ == 0))
+        act_vals = jnp.where(real, activates, activates[0])
+        state = SlotState(
+            tokens=state.tokens.at[slots].set(nxt),
+            cur_pos=state.cur_pos.at[slots].set(pos0),
+            active=state.active.at[slots].set(act_vals),
+            remaining=state.remaining.at[slots].set(remaining),
+            eos=state.eos.at[slots].set(eos),
+        )
+        pages = PageState(table=table, free=pages.free, free_top=free_top,
+                          quota=pages.quota)
+        return nxt, Caches(kv=kv, ssm=ssm, cross=cross), state, pages
+
+    return admit_step
+
+
+def paged_decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int,
+                               page_size: int, *, policy=None):
+    """Jitted :func:`make_paged_decode_chunk`, caches/state/pages donated."""
+    key_scfg = dataclasses.replace(scfg, chunk=0)
+    return _cached_program(
+        ("paged_chunk", cfg, key_scfg, int(n_steps), int(page_size),
+         id(policy)), policy,
+        lambda: jax.jit(
+            make_paged_decode_chunk(cfg, scfg, n_steps, page_size,
+                                    policy=policy),
+            donate_argnums=(1, 2, 3)),
+    )
+
+
+def paged_admit_program(cfg, scfg: ServeConfig, *, policy=None):
+    """Jitted :func:`make_paged_admit_step`, caches/state/pages donated."""
+    key_scfg = dataclasses.replace(scfg, chunk=0)
+    return _cached_program(
+        ("paged_admit", cfg, key_scfg, id(policy)), policy,
+        lambda: jax.jit(make_paged_admit_step(cfg, scfg, policy=policy),
+                        donate_argnums=(2, 3, 4)),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,8 @@ admission control.
 
 from __future__ import annotations
 
+from typing import Dict, Hashable, Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -57,6 +59,143 @@ def tree_bytes(tree) -> int:
     """Resident bytes of a cache pytree (the quantity donation keeps from
     being re-copied every decode step; reported as BatcherStats.cache_bytes)."""
     return sum(int(x.nbytes) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool — host-side allocator / quota ledger
+# ---------------------------------------------------------------------------
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` KV entries."""
+    return -(-max(int(n_tokens), 0) // max(int(page_size), 1))
+
+
+class PageQuotaError(RuntimeError):
+    """A page allocation would exceed the pool or an owner's quota."""
+
+
+class PagedKVPool:
+    """Host-side ledger for one tenant-visible pool of fixed-size KV pages.
+
+    The *device* owns the authoritative free stack and page tables (see
+    ``serving.engine.PageState`` — allocation happens inside the jitted
+    chunk/admit programs); this class is the admission-control mirror: it
+    tracks how many pages each owner (a request, a slot, a tenant…) has
+    reserved, enforces per-owner quotas and the pool bound, and does the
+    byte accounting the tenancy layer leases against.  It deliberately
+    deals in *counts*, not page ids — ids are device state.
+
+    Conservation invariant (checked by :meth:`check`): the sum of all
+    owners' reservations never exceeds ``n_pages``, and no owner exceeds
+    its quota.  Over-subscription is expressed through quotas: the sum of
+    quotas may exceed the pool (that is the point of paging) — the pool
+    bound is enforced on actual reservations.
+    """
+
+    def __init__(self, n_pages: int, page_size: int) -> None:
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("n_pages and page_size must be >= 1")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._held: Dict[Hashable, int] = {}
+        self._quota: Dict[Hashable, int] = {}
+
+    # -- queries --------------------------------------------------------
+    @property
+    def used(self) -> int:
+        return sum(self._held.values())
+
+    @property
+    def available(self) -> int:
+        return self.n_pages - self.used
+
+    def held_by(self, owner: Hashable) -> int:
+        return self._held.get(owner, 0)
+
+    def quota_of(self, owner: Hashable) -> int:
+        return self._quota.get(owner, self.n_pages)
+
+    def can_alloc(self, owner: Hashable, n: int) -> bool:
+        return (n <= self.available
+                and self.held_by(owner) + n <= self.quota_of(owner))
+
+    # -- lifecycle ------------------------------------------------------
+    def set_quota(self, owner: Hashable, quota: Optional[int]) -> None:
+        """Cap ``owner``'s reservation; ``None`` removes the cap.  A quota
+        below the owner's current holding is allowed (it only blocks further
+        growth — the hypervisor shrinks leases the same way)."""
+        if quota is None:
+            self._quota.pop(owner, None)
+        else:
+            self._quota[owner] = max(int(quota), 0)
+
+    def alloc(self, owner: Hashable, n: int) -> int:
+        """Reserve ``n`` pages for ``owner``; returns the owner's new total.
+        Raises :class:`PageQuotaError` when the pool or quota is exceeded."""
+        if n < 0:
+            raise ValueError("cannot alloc a negative page count")
+        if n > self.available:
+            raise PageQuotaError(
+                f"want {n} pages, only {self.available}/{self.n_pages} free")
+        held = self.held_by(owner) + n
+        if held > self.quota_of(owner):
+            raise PageQuotaError(
+                f"owner {owner!r} would hold {held} pages "
+                f"(quota {self.quota_of(owner)})")
+        self._held[owner] = held
+        return held
+
+    def free(self, owner: Hashable, n: Optional[int] = None) -> int:
+        """Return ``n`` pages (default: all) from ``owner``; returns how many
+        were actually freed."""
+        held = self.held_by(owner)
+        n = held if n is None else min(int(n), held)
+        if n < 0:
+            raise ValueError("cannot free a negative page count")
+        left = held - n
+        if left:
+            self._held[owner] = left
+        else:
+            self._held.pop(owner, None)
+        return n
+
+    def check(self) -> None:
+        """Conservation + quota invariants; raises :class:`PageQuotaError`."""
+        if self.used > self.n_pages:
+            raise PageQuotaError(
+                f"pool oversubscribed: {self.used} > {self.n_pages}")
+        for owner, held in self._held.items():
+            if held < 0:
+                raise PageQuotaError(f"owner {owner!r} holds {held} pages")
+            if held > self.quota_of(owner):
+                raise PageQuotaError(
+                    f"owner {owner!r} holds {held} > quota "
+                    f"{self.quota_of(owner)}")
+
+    def page_bytes(self, cfg) -> int:
+        return page_bytes(cfg, self.page_size)
+
+    def pool_bytes(self, cfg) -> int:
+        return paged_kv_cache_bytes(cfg, self.n_pages, self.page_size)
+
+
+def page_bytes(cfg, page_size: int) -> int:
+    """HBM bytes of ONE pool page summed over every attention layer (the
+    granularity the hypervisor's ``kv_pages`` lease dimension trades in)."""
+    from repro.models.transformer import n_blocks, period_structure
+
+    specs = period_structure(cfg)
+    nb = n_blocks(cfg)
+    dt = jnp.dtype(cfg.dtype).itemsize
+    n_attn = sum(1 for s in specs if s.mixer == "attn")
+    return n_attn * nb * page_size * cfg.n_kv_heads * cfg.d_head * 2 * dt
+
+
+def paged_kv_cache_bytes(cfg, n_pages: int, page_size: int) -> int:
+    """HBM bytes of the full paged pool (incl. the trash page) — the paged
+    analogue of :func:`kv_cache_bytes` for admission control."""
+    return (n_pages + 1) * page_bytes(cfg, page_size)
 
 
 def kv_cache_bytes(cfg, batch: int, max_len: int) -> int:

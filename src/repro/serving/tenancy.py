@@ -35,16 +35,22 @@ from repro.core.dispatch import SwitchMode
 from repro.core.events import RequestRecord
 from repro.core.hrp import HRPError, Lease, ResourcePool
 from repro.core.hypervisor import Hypervisor, TenantSpec
-from repro.serving.kv_cache import kv_cache_bytes
+from repro.serving.kv_cache import kv_cache_bytes, paged_kv_cache_bytes
 
 HBM_BYTES_PER_DEVICE = 16 << 30   # TPU v5e
 
 
 class VirtualAcceleratorPool:
-    """Device-backed hardware resource pool (paper §4.2.2 on a TPU slice)."""
+    """Device-backed hardware resource pool (paper §4.2.2 on a TPU slice).
+
+    ``kv_pages`` adds the memory lease dimension: a pool-wide budget of
+    paged-KV cache pages the hypervisor may divide among tenants alongside
+    cores (see ``repro.core.hrp.ResourcePool.set_kv_lease``).
+    """
 
     def __init__(self, devices: Optional[Sequence] = None, *,
-                 devices_per_core: int = 1, cores_per_group: int = 4):
+                 devices_per_core: int = 1, cores_per_group: int = 4,
+                 kv_pages: int = 0):
         devices = list(devices if devices is not None else jax.devices())
         assert len(devices) % devices_per_core == 0
         self.devices_per_core = devices_per_core
@@ -56,6 +62,7 @@ class VirtualAcceleratorPool:
         self.pool = ResourcePool(
             n_cores=len(self.core_devices), cores_per_ddr=cores_per_group,
             ddr_port_bits=cores_per_group * 128, core_port_bits=128,
+            n_kv_pages=kv_pages,
         )
 
     @property
@@ -89,6 +96,22 @@ class VirtualAcceleratorPool:
             raise HRPError(
                 f"lease of {n_dev} devices cannot hold {need/2**30:.1f} GiB/device "
                 f"(params {param_bytes/2**30:.1f} + kv {kv/2**30:.1f} GiB)"
+            )
+
+    def check_hbm_paged(self, cfg, lease: Lease, *, n_pages: int,
+                        page_size: int) -> None:
+        """Paged variant of :meth:`check_hbm`: model + page-pool bytes must
+        fit the lease — the pool is sized by *pages*, not slots x max_len,
+        which is exactly how paging over-subscribes nominal capacity."""
+        n_dev = len(lease.cores) * self.devices_per_core
+        param_bytes = cfg.param_count() * 2
+        kv = paged_kv_cache_bytes(cfg, n_pages, page_size)
+        need = (param_bytes + kv) / n_dev
+        if need > HBM_BYTES_PER_DEVICE:
+            raise HRPError(
+                f"lease of {n_dev} devices cannot hold {need/2**30:.1f} "
+                f"GiB/device (params {param_bytes/2**30:.1f} + paged kv "
+                f"{kv/2**30:.1f} GiB)"
             )
 
 
@@ -236,6 +259,7 @@ class ServingExecutor:
         self.reconfig_log: List[Dict[str, Any]] = []
         self._keys: Dict[str, Optional[str]] = {}
         self._on_migrate: Dict[str, Callable[[Any], None]] = {}
+        self._kv_limit_cbs: Dict[str, Callable[[int], None]] = {}
         # SLO plumbing
         self.completion_sink = None
         self.pending_requests: Dict[str, List[RequestRecord]] = {}
@@ -273,6 +297,13 @@ class ServingExecutor:
         ``latency_slo`` policy's demand computation (takes precedence over
         the measured EWMA)."""
         self._latency_models[tenant] = fn
+
+    def register_kv_limit(self, tenant: str,
+                          fn: Callable[[int], None]) -> None:
+        """Where the tenant's ``kv_pages`` lease changes land — typically
+        ``batcher.set_page_limit``, so a hypervisor trading memory between
+        tenants throttles the live page pool mid-run."""
+        self._kv_limit_cbs[tenant] = fn
 
     def register_request_sink(self, tenant: str,
                               fn: Callable[[RequestRecord], None]) -> None:
@@ -398,11 +429,21 @@ class ServingExecutor:
             cb(migrated)
         self.reconfig_log.append({"tenant": name, "n_cores": n_cores, **timing})
 
+    def exec_kv_resize(self, name: str, kv_pages: int, at: float) -> None:
+        """Apply a kv-page lease change: forward the new cap to the tenant's
+        registered page-limit callback (``ContinuousBatcher.set_page_limit``)
+        and log it next to core reconfigs."""
+        cb = self._kv_limit_cbs.get(name)
+        if cb is not None:
+            cb(kv_pages)
+        self.reconfig_log.append({"tenant": name, "kv_pages": kv_pages})
+
     def exec_remove(self, name: str, at: float) -> None:
         self.vpool.release(name)
         for table in (self.programs, self.live_state, self.state_specs,
                       self._keys, self._on_migrate, self._request_sinks,
-                      self.pending_requests, self._latency_models):
+                      self.pending_requests, self._latency_models,
+                      self._kv_limit_cbs):
             table.pop(name, None)
 
     def exec_request(self, name: str, record: RequestRecord, at: float) -> None:

@@ -1,0 +1,307 @@
+"""Hypervisor memory dimension (kv_pages leases + quota invariants),
+EASY backfill reservations, and SLO-slack preemption victims."""
+
+import pytest
+
+from repro.core.hrp import HRPError, ResourcePool
+from repro.core.hypervisor import (
+    Hypervisor,
+    PolicyContext,
+    TenantSpec,
+    kv_pages_proportional,
+)
+
+
+class RecordingExecutor:
+    """Minimal pool executor that records kv resizes and serves a
+    per-tenant latency table for the slack-victim tests."""
+
+    def __init__(self, pool, latency=None):
+        self.pool = pool
+        self.latency = latency or {}
+        self.kv_log = []
+
+    def exec_admit(self, spec, n_cores, at):
+        self.pool.alloc(spec.name, n_cores)
+
+    def exec_resize(self, name, n_cores, at, mode):
+        self.pool.resize(name, n_cores)
+
+    def exec_remove(self, name, at):
+        self.pool.release(name)
+
+    def exec_kv_resize(self, name, pages, at):
+        self.kv_log.append((name, pages))
+
+    def estimate_latency(self, spec, n_cores):
+        return self.latency.get(spec.name)
+
+
+class TestResourcePoolKV:
+    def test_set_and_release(self):
+        pool = ResourcePool(n_cores=4, n_kv_pages=10)
+        pool.alloc("a", 2)
+        pool.set_kv_lease("a", 6)
+        assert pool.kv_lease_of("a") == 6
+        assert pool.free_kv_pages() == 4
+        pool.set_kv_lease("a", 0)
+        assert pool.kv_lease_of("a") == 0
+        pool.set_kv_lease("a", 3)
+        pool.release("a")                        # drops the kv lease too
+        assert pool.kv_leases == {}
+        pool.check_kv_quota()
+
+    def test_requires_core_lease(self):
+        pool = ResourcePool(n_cores=4, n_kv_pages=10)
+        with pytest.raises(HRPError):
+            pool.set_kv_lease("ghost", 1)
+
+    def test_oversubscription_raises(self):
+        pool = ResourcePool(n_cores=4, n_kv_pages=10)
+        pool.alloc("a", 1)
+        pool.alloc("b", 1)
+        pool.set_kv_lease("a", 7)
+        with pytest.raises(HRPError):
+            pool.set_kv_lease("b", 4)
+        pool.set_kv_lease("b", 3)
+        pool.check_kv_quota()
+
+    def test_negative_raises(self):
+        pool = ResourcePool(n_cores=4, n_kv_pages=10)
+        pool.alloc("a", 1)
+        with pytest.raises(HRPError):
+            pool.set_kv_lease("a", -1)
+
+
+class TestKVSplit:
+    def _ctx(self, tenants, alloc, n_kv=100):
+        return PolicyContext(8, tenants, {t: c for t, c in alloc.items()},
+                             0.0, n_kv_pages=n_kv)
+
+    def test_memory_follows_compute(self):
+        a = TenantSpec("a", 6, requested_kv_pages=100)
+        b = TenantSpec("b", 2, requested_kv_pages=100, arrived_at=1.0)
+        alloc = {"a": 6, "b": 2}
+        kv = kv_pages_proportional(self._ctx([a, b], alloc), alloc)
+        assert kv["a"] + kv["b"] == 100
+        assert kv["a"] == 75 and kv["b"] == 25
+
+    def test_floors_and_caps(self):
+        a = TenantSpec("a", 4, requested_kv_pages=10, min_kv_pages=10)
+        b = TenantSpec("b", 4, requested_kv_pages=200, min_kv_pages=5,
+                       arrived_at=1.0)
+        alloc = {"a": 4, "b": 4}
+        kv = kv_pages_proportional(self._ctx([a, b], alloc), alloc)
+        assert kv["a"] == 10                     # capped at request
+        assert kv["b"] == 90                     # leftovers flow to b
+        assert sum(kv.values()) <= 100
+
+    def test_no_cores_no_pages(self):
+        a = TenantSpec("a", 4, requested_kv_pages=50)
+        b = TenantSpec("b", 4, requested_kv_pages=50, arrived_at=1.0)
+        alloc = {"a": 4, "b": 0}
+        kv = kv_pages_proportional(self._ctx([a, b], alloc), alloc)
+        assert kv["b"] == 0
+
+
+class TestHypervisorKV:
+    def _hv(self, n_cores=8, n_kv=100, **kw):
+        pool = ResourcePool(n_cores=n_cores, n_kv_pages=n_kv)
+        ex = RecordingExecutor(pool)
+        checked = []
+        hv = Hypervisor(pool, executor=ex,
+                        on_event=lambda h, e: checked.append(e.kind), **kw)
+        return hv, ex, checked
+
+    def test_admission_grants_pages_and_rechecks_invariants(self):
+        hv, ex, checked = self._hv()
+        assert hv.admit(TenantSpec("a", 4, requested_kv_pages=60,
+                                   min_kv_pages=20))
+        assert hv.admit(TenantSpec("b", 4, requested_kv_pages=60,
+                                   min_kv_pages=20))
+        kv = hv.kv_allocation()
+        assert sum(kv.values()) <= 100
+        assert kv["a"] >= 20 and kv["b"] >= 20
+        assert ("a", kv["a"]) in ex.kv_log and ("b", kv["b"]) in ex.kv_log
+        assert len(checked) == 2                 # invariants ran per event
+
+    def test_kv_floor_blocks_admission(self):
+        hv, ex, _ = self._hv()
+        assert hv.admit(TenantSpec("a", 4, requested_kv_pages=70,
+                                   min_kv_pages=70))
+        assert not hv.admit(TenantSpec("b", 4, requested_kv_pages=80,
+                                       min_kv_pages=80))
+        assert hv.waiting_tenants() == ["b"]
+        # departure frees pages; the waiter admits with its floor met
+        hv.depart("a")
+        assert hv.kv_allocation().get("b", 0) >= 80
+
+    def test_departure_releases_pages(self):
+        hv, ex, _ = self._hv()
+        hv.admit(TenantSpec("a", 4, requested_kv_pages=50))
+        hv.admit(TenantSpec("b", 4, requested_kv_pages=50))
+        hv.depart("a")
+        kv = hv.kv_allocation()
+        assert "a" not in kv
+        assert sum(kv.values()) <= 100
+        hv.pool.check_kv_quota()
+
+    def test_resident_resubmission_updates_kv_contract(self):
+        """A resident re-ARRIVing with new kv fields renegotiates them,
+        exactly like requested_cores/min_cores/priority."""
+        hv, ex, _ = self._hv()
+        assert hv.admit(TenantSpec("a", 8, requested_kv_pages=10))
+        assert hv.kv_allocation()["a"] == 10
+        assert hv.admit(TenantSpec("a", 8, requested_kv_pages=80,
+                                   min_kv_pages=40))
+        assert hv.specs["a"].requested_kv_pages == 80
+        assert hv.specs["a"].min_kv_pages == 40
+        assert hv.kv_allocation()["a"] == 80
+
+    def test_preemption_rollback_restores_kv_lease(self):
+        """A doomed preemption attempt must restore victims at their exact
+        core AND page leases."""
+        pool = ResourcePool(n_cores=4, n_kv_pages=100)
+        ex = RecordingExecutor(pool)
+        hv = Hypervisor(pool, executor=ex, preemptive=True)
+        assert hv.admit(TenantSpec("low", 4, priority=1.0,
+                                   requested_kv_pages=40))
+        before = hv.kv_allocation()["low"]
+        # the arrival wants more kv pages than exist: eviction happens, the
+        # re-admission fails, and the rollback restores low's page lease
+        assert not hv.admit(TenantSpec("hi", 2, priority=2.0,
+                                       requested_kv_pages=200,
+                                       min_kv_pages=200))
+        assert hv.allocation() == {"low": 4}
+        assert hv.kv_allocation()["low"] == before
+        hv.pool.check_kv_quota()
+
+
+class TestEasyReservation:
+    """Regression: plain backfill starves a large waiter under churn of
+    small short-lived tenants; EASY's head reservation bounds its start."""
+
+    @staticmethod
+    def _churn(admission):
+        admitted_at = {}
+
+        def on_event(hv, ev):
+            for name in hv.allocation():
+                admitted_at.setdefault(name, hv.clock)
+
+        pool = ResourcePool(n_cores=4)
+        hv = Hypervisor(pool, policy="no_realloc", admission=admission,
+                        on_event=on_event)
+        hv.schedule_arrival(TenantSpec("A", 2), at=0.0)
+        hv.schedule_departure("A", at=2.0)
+        hv.schedule_arrival(TenantSpec("H", 3, min_cores=3), at=0.1)
+        t, i = 0.2, 0
+        while t < 6.0:                           # churn outlives A by far
+            hv.schedule_arrival(TenantSpec(f"s{i}", 2), at=t)
+            hv.schedule_departure(f"s{i}", at=t + 0.5)
+            t += 0.4
+            i += 1
+        hv.run(8.0)
+        return admitted_at.get("H"), hv
+
+    def test_backfill_starves_head_easy_does_not(self):
+        t_backfill, _ = self._churn("backfill")
+        t_easy, hv = self._churn("easy")
+        # EASY: A's departure at t=2 hands the head its reserved cores
+        assert t_easy is not None and t_easy <= 2.0
+        # naive backfill: churn re-consumes every departure until it stops
+        assert t_backfill is None or t_backfill > 6.0
+        assert "H" in hv.allocation()
+
+    def test_easy_still_backfills_when_harmless(self):
+        """EASY is not FIFO: a small tenant that leaves the head's floor in
+        free cores still slips past the blocked head; one that would eat
+        into the reservation does not."""
+        pool = ResourcePool(n_cores=8)
+        hv = Hypervisor(pool, policy="no_realloc", admission="easy")
+        assert hv.admit(TenantSpec("A", 4))
+        assert not hv.admit(TenantSpec("H", 6, min_cores=6))   # waits (4 free)
+        assert not hv.admit(TenantSpec("big", 2))  # 4-2=2 < 6: blocked
+        assert hv.waiting_tenants() == ["H", "big"]
+        hv.depart("A")                             # 8 free: H seats, big next
+        assert "H" in hv.allocation() and "big" in hv.allocation()
+        # with a small head floor, harmless backfill still happens
+        hv2 = Hypervisor(ResourcePool(n_cores=8), policy="no_realloc",
+                         admission="easy")
+        assert hv2.admit(TenantSpec("B", 5))
+        assert not hv2.admit(TenantSpec("h", 5, min_cores=2))  # waits (3 free)
+        assert hv2.admit(TenantSpec("s", 1))       # leaves 2 >= head floor
+        assert hv2.waiting_tenants() == ["h"]
+
+    def test_reservation_covers_kv_pages(self):
+        """The head's start-time guarantee must hold when kv pages, not
+        cores, are the binding resource: a backfiller that would eat the
+        head's kv floor is blocked under EASY."""
+
+        def run(admission):
+            pool = ResourcePool(n_cores=8, n_kv_pages=10)
+            hv = Hypervisor(pool, policy="no_realloc", admission=admission)
+            assert hv.admit(TenantSpec("A", 2, requested_kv_pages=6,
+                                       min_kv_pages=6))
+            # head: cores are plentiful, kv pages are not (needs 10)
+            assert not hv.admit(TenantSpec("H", 1, requested_kv_pages=10,
+                                           min_kv_pages=10))
+            # small backfiller wants the remaining 4 pages
+            jumped = hv.admit(TenantSpec("s", 1, requested_kv_pages=4,
+                                         min_kv_pages=4))
+            return hv, jumped
+
+        hv_b, jumped_b = run("backfill")
+        assert jumped_b                          # naive backfill takes them
+        hv_e, jumped_e = run("easy")
+        assert not jumped_e                      # reservation protects H
+        hv_e.depart("A")
+        assert hv_e.kv_allocation().get("H") == 10
+
+    def test_fifo_unaffected(self):
+        pool = ResourcePool(n_cores=4)
+        hv = Hypervisor(pool, policy="no_realloc", admission="fifo")
+        hv.admit(TenantSpec("A", 4))
+        assert not hv.admit(TenantSpec("H", 2))
+        assert not hv.admit(TenantSpec("s", 1))    # FIFO: never jumps
+        assert hv.waiting_tenants() == ["H", "s"]
+
+
+class TestSlackVictims:
+    def _hv(self, latency):
+        pool = ResourcePool(n_cores=4)
+        ex = RecordingExecutor(pool, latency=latency)
+        return Hypervisor(pool, policy="no_realloc", preemptive=True,
+                          executor=ex)
+
+    def test_largest_slack_in_lowest_tier_goes_first(self):
+        hv = self._hv({"x": 1.0, "y": 5.0})
+        assert hv.admit(TenantSpec("x", 2, priority=1.0, latency_slo=10.0))
+        assert hv.admit(TenantSpec("y", 2, priority=1.0, latency_slo=6.0))
+        assert hv.admit(TenantSpec("hi", 2, priority=2.0))
+        # x has slack 9, y has slack 1: x pays
+        assert hv.preemptions == ["x"]
+        assert "y" in hv.allocation() and "hi" in hv.allocation()
+
+    def test_no_slo_counts_as_infinite_slack(self):
+        hv = self._hv({"tight": 5.0})
+        assert hv.admit(TenantSpec("tight", 2, priority=1.0, latency_slo=6.0))
+        assert hv.admit(TenantSpec("loose", 2, priority=1.0))   # no SLO
+        assert hv.admit(TenantSpec("hi", 2, priority=2.0))
+        assert hv.preemptions == ["loose"]
+
+    def test_tier_outranks_slack(self):
+        """Priority tier still dominates: a lower-tier tenant with small
+        slack is evicted before a higher-tier tenant with huge slack."""
+        hv = self._hv({"t0": 5.9, "t1": 0.1})
+        assert hv.admit(TenantSpec("t0", 2, priority=0.5, latency_slo=6.0))
+        assert hv.admit(TenantSpec("t1", 2, priority=1.0, latency_slo=10.0))
+        assert hv.admit(TenantSpec("hi", 2, priority=2.0))
+        assert hv.preemptions == ["t0"]
+
+    def test_equal_slack_tie_breaks_youngest_then_name(self):
+        hv = self._hv({})                        # no estimates: all inf slack
+        assert hv.admit(TenantSpec("old", 2, priority=1.0), at=0.0)
+        assert hv.admit(TenantSpec("young", 2, priority=1.0), at=1.0)
+        assert hv.admit(TenantSpec("hi", 2, priority=2.0), at=2.0)
+        assert hv.preemptions == ["young"]
