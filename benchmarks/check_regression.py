@@ -14,7 +14,11 @@ build when
   effective slot capacity at equal HBM below its floor (1.5x dense) or
   equal-slot paged tokens/s below its floor (within 15% of dense).  Both
   ratios are measured dense-vs-paged inside one run on one host, so they
-  are gated exactly, not against the committed absolute numbers.
+  are gated exactly, not against the committed absolute numbers, or
+* the fresh ``BENCH_prefix.json`` no longer meets the shared-prefix-cache
+  acceptance at 90% prompt overlap: cached admission throughput below
+  1.3x cold, prefill tokens skipped below 80%, or cache hit rate below
+  0.8 — again cached-vs-cold on one host, gated exactly.
 
 Absolute tokens/s moves with the host, so the tolerance is deliberately
 loose; the ``CHECK_TOLERANCE`` env var (or ``--tolerance``) can widen it for
@@ -86,11 +90,15 @@ def check_slo(fresh: dict) -> list:
     return errors
 
 
-# The paging acceptance floors are owned HERE, not read from the snapshot —
-# a fresh run cannot relax its own gate (bench_paging.py asserts the same
-# bars at generation time; keep the two in sync deliberately).
+# The paging/prefix acceptance floors are owned HERE, not read from the
+# snapshot — a fresh run cannot relax its own gate (bench_paging.py /
+# bench_prefix.py assert the same bars at generation time; keep them in
+# sync deliberately).
 PAGING_CAPACITY_FLOOR = 1.5
 PAGING_TOKENS_RATIO_FLOOR = 0.85
+PREFIX_ADMIT_RATIO_FLOOR = 1.3
+PREFIX_SKIPPED_FRAC_FLOOR = 0.8
+PREFIX_HIT_RATE_FLOOR = 0.8
 
 
 def check_paging(fresh: dict) -> list:
@@ -122,6 +130,38 @@ def check_paging(fresh: dict) -> list:
     if tok < tok_floor:
         errors.append(
             f"paging: equal-slot tokens/s ratio {tok:.3f} < {tok_floor} floor")
+    return errors
+
+
+def check_prefix(fresh: dict) -> list:
+    """Recorded acceptance bits AND the re-derived 90%-overlap ratios.  All
+    three are cached-vs-cold on the same host in one run, so they gate
+    exactly (host speed cancels)."""
+    errors = []
+    for bit in ("acceptance_admit_ratio", "acceptance_skipped_frac",
+                "acceptance_hit_rate"):
+        if not fresh.get(bit):
+            errors.append(f"prefix: snapshot does not record {bit}")
+    at90 = {row["mode"]: row for row in fresh.get("rows", [])
+            if row.get("overlap") == 0.9}
+    cold, cached = at90.get("cold"), at90.get("cached")
+    if not (cold and cached):
+        errors.append(f"prefix: 90%-overlap rows missing, have {sorted(at90)}")
+        return errors
+    ratio = cached["admit_throughput_rps"] / max(
+        cold["admit_throughput_rps"], 1e-9)
+    if ratio < PREFIX_ADMIT_RATIO_FLOOR:
+        errors.append(
+            f"prefix: admission throughput {ratio:.2f}x cold "
+            f"< {PREFIX_ADMIT_RATIO_FLOOR}x floor at 90% overlap")
+    if cached["skipped_frac"] < PREFIX_SKIPPED_FRAC_FLOOR:
+        errors.append(
+            f"prefix: prefill tokens skipped {cached['skipped_frac']:.2f} "
+            f"< {PREFIX_SKIPPED_FRAC_FLOOR} floor at 90% overlap")
+    if cached["hit_rate"] < PREFIX_HIT_RATE_FLOOR:
+        errors.append(
+            f"prefix: hit rate {cached['hit_rate']:.2f} "
+            f"< {PREFIX_HIT_RATE_FLOOR} floor at 90% overlap")
     return errors
 
 
@@ -157,6 +197,12 @@ def main(argv=None) -> int:
     else:
         errors.append(
             f"paging: {paging_path} missing (bench_paging did not run?)")
+    prefix_path = os.path.join(args.fresh, "BENCH_prefix.json")
+    if os.path.exists(prefix_path):
+        errors.extend(check_prefix(_load(prefix_path)))
+    else:
+        errors.append(
+            f"prefix: {prefix_path} missing (bench_prefix did not run?)")
 
     if errors:
         for e in errors:

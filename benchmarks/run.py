@@ -25,6 +25,7 @@ BENCHES = [
     ("serving", "bench_serving", "beyond-paper — chunked/donated decode hot path"),
     ("slo", "bench_slo", "beyond-paper — SLO attainment under open-loop Poisson traffic"),
     ("paging", "bench_paging", "beyond-paper — paged KV pool capacity at equal HBM"),
+    ("prefix", "bench_prefix", "beyond-paper — shared-prefix KV cache admission speedup"),
 ]
 
 

@@ -1,0 +1,88 @@
+"""Shared-prefix KV cache: two tenants, one shared system prompt.
+
+Two tenants ("ada" and "bob") serve prompts that all begin with the same
+system preamble.  Their requests run through one paged batcher with a
+prefix cache attached:
+
+* requests submitted under the **same namespace** (the tenants agreed on
+  ``"support-bot-v1"`` for the shared preamble) map the same physical
+  pages read-only and prefill only their private tail — pages are billed
+  once to the namespace, refcounted per in-flight request;
+* a request submitted under a **private namespace** (or ``namespace=None``)
+  never shares — isolation is opt-in by key;
+* the hypervisor sees the shared set through
+  ``ResourcePool.note_shared_kv`` and treats it as a soft floor when
+  splitting kv-page leases, so a rebalance doesn't hand a tenant's warm
+  cache to someone else while it is pinned.
+
+    PYTHONPATH=src python examples/prefix_caching.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.core import ResourcePool, TenantSpec, Hypervisor  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.serving.batcher import ContinuousBatcher, Request  # noqa: E402
+
+PROMPT_LEN = 64
+PAGE_SIZE = 8
+SHARED_NS = "support-bot-v1"
+
+
+def main():
+    cfg = get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # one system preamble both tenants use, plus per-request user tails
+    system_prompt = rng.integers(1, cfg.vocab, size=56).astype(np.int32)
+
+    def request(rid):
+        tail = rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+        return Request(rid=rid, prompt=np.concatenate([system_prompt, tail]),
+                       max_new=4, namespace=SHARED_NS)
+
+    b = ContinuousBatcher(params, cfg, slots=4, prompt_len=PROMPT_LEN,
+                          max_len=96, chunk=4, paged=True,
+                          page_size=PAGE_SIZE, prefix_cache=True)
+    # even rids are ada's traffic, odd rids bob's — same namespace, so the
+    # shared preamble's pages are physically one copy across both tenants
+    reqs = [request(i) for i in range(16)]
+    for r in reqs:
+        b.submit(r)
+    stats = b.run(max_steps=4000)
+
+    n = len(reqs)
+    print(f"served {stats.completed}/{n} requests (ada+bob interleaved)")
+    print(f"prefix hits:            {stats.prefix_hits}/{n} "
+          f"(hit rate {stats.prefix_hits / n:.2f})")
+    print(f"prefill tokens skipped: {stats.prefill_tokens_skipped} "
+          f"of {n * PROMPT_LEN} "
+          f"({stats.prefill_tokens_skipped / (n * PROMPT_LEN):.0%})")
+    print(f"pages in the cache:     {stats.shared_pages} "
+          f"(vs {stats.prefix_tokens_saved // PAGE_SIZE} page-maps served "
+          f"from them — that is the dedup)")
+
+    # hypervisor-side billing: the shared set is recorded once against the
+    # owning tenant and raises its floor in the default kv split
+    pool = ResourcePool(4, n_kv_pages=64)
+    hv = Hypervisor(pool, policy="even_split")
+    assert hv.admit(TenantSpec("ada", 2, requested_kv_pages=48,
+                               min_kv_pages=4))
+    pool.note_shared_kv("ada", b.kv_pool.shared)
+    assert hv.admit(TenantSpec("bob", 2, requested_kv_pages=48,
+                               min_kv_pages=4))
+    print(f"kv split with ada's {b.kv_pool.shared} shared pages billed "
+          f"once: {hv.kv_allocation()}")
+    pool.check_kv_quota()
+
+
+if __name__ == "__main__":
+    main()

@@ -128,14 +128,22 @@ class RequestRecord:
     attainment afterwards without collecting anything from the engine.  A
     request that was never served keeps ``t_complete is None`` and counts
     against attainment (the open-loop contract: offered load doesn't shrink
-    because the system is slow)."""
+    because the system is slow).
+
+    ``deadline`` is a hard useless-after time (absolute, same clock as
+    ``t_arrival``): an executor that would only *start* the request after
+    its deadline sheds it instead of serving it hopelessly late —
+    ``dropped`` marks that outcome (``t_complete`` stays None, so the drop
+    still counts against attainment)."""
 
     tenant: str
     rid: int
     t_arrival: float
     slo: Optional[float] = None        # per-request latency target (seconds)
+    deadline: Optional[float] = None   # absolute shed-after time
     t_start: Optional[float] = None
     t_complete: Optional[float] = None
+    dropped: bool = False
 
     @property
     def latency(self) -> Optional[float]:
@@ -195,10 +203,13 @@ def emit_requests(
     *,
     slo: Optional[float] = None,
     start_rid: int = 0,
+    deadline_after: Optional[float] = None,
 ) -> List[RequestRecord]:
     """Schedule one ``REQUEST`` event per arrival of ``traffic`` (anything
     with a ``times(horizon)`` method, or a plain iterable of times) and
-    return the shared :class:`RequestRecord` list for later SLO accounting."""
+    return the shared :class:`RequestRecord` list for later SLO accounting.
+    ``deadline_after`` stamps each record's ``deadline`` at arrival +
+    that many seconds (the drop-policy knob)."""
     times: Iterable[float]
     if hasattr(traffic, "times"):
         times = traffic.times(horizon)
@@ -206,7 +217,10 @@ def emit_requests(
         times = [t for t in sorted(traffic) if t <= horizon]
     records = []
     for i, t in enumerate(times):
-        rec = RequestRecord(tenant=tenant, rid=start_rid + i, t_arrival=t, slo=slo)
+        rec = RequestRecord(
+            tenant=tenant, rid=start_rid + i, t_arrival=t, slo=slo,
+            deadline=(t + deadline_after if deadline_after is not None
+                      else None))
         queue.schedule(EventKind.REQUEST, t, tenant=tenant, record=rec)
         records.append(rec)
     return records

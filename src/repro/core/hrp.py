@@ -66,6 +66,7 @@ class ResourcePool:
         self._leases: Dict[str, Lease] = {}
         self._owner: List[Optional[str]] = [None] * n_cores
         self._kv_leases: Dict[str, int] = {}
+        self._shared_kv: Dict[str, int] = {}
 
     # -- queries ------------------------------------------------------------
     @property
@@ -87,6 +88,38 @@ class ResourcePool:
 
     def kv_lease_of(self, tenant: str) -> int:
         return self._kv_leases.get(tenant, 0)
+
+    @property
+    def shared_kv(self) -> Dict[str, int]:
+        return dict(self._shared_kv)
+
+    def shared_kv_of(self, tenant: str) -> int:
+        return self._shared_kv.get(tenant, 0)
+
+    def note_shared_kv(self, tenant: str, pages: int) -> None:
+        """Record how many of ``tenant``'s leased kv pages currently back its
+        **shared prefix cache** (billed once to the tenant's namespace,
+        reused by every request that hits).  Pure bookkeeping fed by the
+        serving layer; policies read it from ``PolicyContext.shared_kv_pages``
+        so a rebalance knows a tenant's lease cannot usefully drop below its
+        pinned shared set without an eviction pass first (the batcher's
+        ``set_page_limit`` evicts cache entries before live requests fault).
+        ``0`` clears the entry."""
+        if pages < 0:
+            raise HRPError(f"negative shared kv for {tenant}: {pages}")
+        if pages and tenant not in self._leases:
+            raise HRPError(
+                f"tenant {tenant} holds no core lease for shared kv pages")
+        if pages > self.n_kv_pages:
+            # fail at the write site, not at some later unrelated event's
+            # invariant sweep: a pool with no kv budget can't bill pages
+            raise HRPError(
+                f"shared kv for {tenant} exceeds the pool: {pages} > "
+                f"{self.n_kv_pages}")
+        if pages:
+            self._shared_kv[tenant] = int(pages)
+        else:
+            self._shared_kv.pop(tenant, None)
 
     # -- kv-page leases (memory dimension; counts, not placements) -----------
     def set_kv_lease(self, tenant: str, pages: int) -> None:
@@ -137,7 +170,13 @@ class ResourcePool:
     def check_kv_quota(self) -> None:
         """KV-page leases must fit the pool, be non-negative, and only be
         held by tenants that also hold cores (the memory-dimension analogue
-        of the per-DDR-group port budget)."""
+        of the per-DDR-group port budget).  Shared (prefix-cache) pages are
+        part of the owning tenant's lease, billed once: they must belong to
+        a leased tenant and fit the pool in total.  A tenant's shared set
+        *may* transiently exceed a freshly-shrunk lease — that is exactly
+        the drain window in which the serving layer must evict cache
+        entries before live requests fault (``set_page_limit``) — so the
+        check bounds shared pages by the pool, not the per-tenant lease."""
         total = 0
         for t, p in self._kv_leases.items():
             if p < 0:
@@ -148,6 +187,17 @@ class ResourcePool:
         if total > self.n_kv_pages:
             raise HRPError(
                 f"kv pool oversubscribed: {total} > {self.n_kv_pages}")
+        shared_total = 0
+        for t, p in self._shared_kv.items():
+            if p < 0:
+                raise HRPError(f"negative shared kv: {t} -> {p}")
+            if t not in self._leases:
+                raise HRPError(f"shared kv without a core lease: {t}")
+            shared_total += p
+        if shared_total > self.n_kv_pages:
+            raise HRPError(
+                f"shared kv exceeds the pool: {shared_total} > "
+                f"{self.n_kv_pages}")
 
     # -- placement ------------------------------------------------------------
     def _groups(self) -> List[range]:
@@ -239,6 +289,7 @@ class ResourcePool:
         for c in lease.cores:
             self._owner[c] = None
         self._kv_leases.pop(tenant, None)
+        self._shared_kv.pop(tenant, None)
 
     def resize(self, tenant: str, n: int) -> Lease:
         """Grow/shrink a lease in place — the private-cloud reconfiguration

@@ -164,6 +164,12 @@ class PolicyContext:
     # memory dimension: pool-wide kv-page budget and current kv leases
     n_kv_pages: int = 0
     current_kv: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # pages of each tenant's lease that back its shared prefix cache,
+    # billed once to the owning namespace (``ResourcePool.note_shared_kv``):
+    # a kv split that drops a tenant below this set forces a cache-eviction
+    # drain before its live requests can even use the lease, so policies
+    # treat it as a soft floor
+    shared_kv_pages: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 Policy = Callable[[PolicyContext], Dict[str, int]]
@@ -395,7 +401,15 @@ def kv_pages_proportional(ctx: PolicyContext,
     floor (``min_kv_pages``, arrival order), then share the remainder
     proportionally to the *core* grant (largest remainder), capped at each
     tenant's request — memory follows compute unless a policy says
-    otherwise.  Tenants asking for no pages get none."""
+    otherwise.  Tenants asking for no pages get none.
+
+    A tenant's **shared prefix-cache pages** (``ctx.shared_kv_pages``,
+    billed once to the owning namespace) raise its floor: granting below
+    the pinned shared set would force the serving layer to tear the cache
+    down just to re-fault the same contents privately per request — the
+    split avoids that unless the pool genuinely cannot cover every floor,
+    in which case the shrink lands and the batcher's eviction-before-fault
+    discipline (``set_page_limit``) drains the cache first."""
     order = [s for s in _arrival_order(ctx.tenants)
              if core_alloc.get(s.name, 0) > 0 and s.requested_kv_pages > 0]
     if not order or ctx.n_kv_pages <= 0:
@@ -403,7 +417,8 @@ def kv_pages_proportional(ctx: PolicyContext,
     alloc: Dict[str, int] = {s.name: 0 for s in ctx.tenants}
     free = ctx.n_kv_pages
     for s in order:
-        floor = min(s.min_kv_pages, s.requested_kv_pages, free)
+        shared = ctx.shared_kv_pages.get(s.name, 0)
+        floor = min(max(s.min_kv_pages, shared), s.requested_kv_pages, free)
         alloc[s.name] = floor
         free -= floor
     if free > 0:
@@ -598,12 +613,17 @@ class Hypervisor:
         return record
 
     def open_traffic(self, name: str, traffic: Any, horizon: float, *,
-                     slo: Optional[float] = None) -> List[RequestRecord]:
+                     slo: Optional[float] = None,
+                     deadline_after: Optional[float] = None,
+                     ) -> List[RequestRecord]:
         """Attach a seeded open-loop arrival stream
         (:class:`~repro.core.events.PoissonTraffic`, ``TraceTraffic``, or a
         plain iterable of times) to tenant ``name`` and return its records
-        for SLO accounting after :meth:`run`."""
-        return emit_requests(self.queue, name, traffic, horizon, slo=slo)
+        for SLO accounting after :meth:`run`.  ``deadline_after`` stamps
+        each request with a drop deadline (arrival + seconds): the executor
+        sheds requests it would only start past their deadline."""
+        return emit_requests(self.queue, name, traffic, horizon, slo=slo,
+                             deadline_after=deadline_after)
 
     def _request_completed(self, record: RequestRecord) -> None:
         # executor callback -> COMPLETION event, so request lifecycles are
@@ -770,6 +790,8 @@ class Hypervisor:
             n_kv_pages=self.pool.n_kv_pages,
             current_kv={n: p for n, p in self.pool.kv_leases.items()
                         if n in self.specs},
+            shared_kv_pages={n: p for n, p in self.pool.shared_kv.items()
+                             if n in self.specs},
         )
 
     def _flush_backlog(self, name: str, t: float) -> None:

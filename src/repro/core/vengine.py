@@ -68,6 +68,7 @@ class TenantMetrics:
     arrivals: int = 0
     requests: List[RequestRecord] = dataclasses.field(default_factory=list)
     evictions: int = 0
+    dropped: int = 0          # shed before start: deadline already passed
 
     def throughput(self, horizon: float) -> float:
         return len(self.completions) / horizon if horizon > 0 else 0.0
@@ -419,9 +420,20 @@ class VirtualEngine:
         (its clock jumps to the arrival — idle cores don't do work).  Returns
         False when the inbox is empty: the tenant idles, but still honours
         any due reconfiguration at this (trivially task-level) boundary."""
-        if tenant.inbox:
+        while tenant.inbox:
             req = tenant.inbox.pop(0)
-            req.t_start = max(tenant.clock, req.t_arrival)
+            start = max(tenant.clock, req.t_arrival)
+            if req.deadline is not None and start > req.deadline:
+                # drop policy: the deadline already passed before the
+                # request could even start — serving it would burn core
+                # time on an answer nobody is waiting for.  The record
+                # keeps t_complete=None (counts against attainment) and is
+                # stamped dropped so owners can tell shed from starved.
+                req.dropped = True
+                tenant.metrics.dropped += 1
+                tenant.metrics.requests.append(req)
+                continue
+            req.t_start = start
             tenant.clock = req.t_start
             tenant.current_req = req
             # a request is a whole inference: discard any half-run

@@ -15,11 +15,12 @@ from .transformer import (
     period_len,
     period_structure,
     prefill,
+    prefix_prefill,
 )
 
 __all__ = [
     "Caches", "FwdOut", "decode_step", "encoder_forward", "forward",
     "init_caches", "init_paged_caches", "init_params", "lm_loss",
     "logits_fn", "n_blocks",
-    "period_len", "period_structure", "prefill",
+    "period_len", "period_structure", "prefill", "prefix_prefill",
 ]

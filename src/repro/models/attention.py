@@ -322,10 +322,45 @@ def flash_attention_train(q, k, v, *, causal: bool = True,
 def self_attention(
     params, x, cfg, *, positions=None, causal: bool = True,
     impl: str = "xla", q_offset: int = 0, block_k: int = 512,
+    prefix_kv=None,
 ):
     """Training/prefill self-attention.  Returns (out, (k, v)) so prefill can
-    seed the KV cache."""
+    seed the KV cache.
+
+    ``prefix_kv=(pk, pv)`` prepends an already-computed K/V context of
+    length ``Lp`` (shared-prefix admission: the cached prompt pages): the
+    queries attend to ``[prefix; self]`` with the causal mask offset by
+    ``Lp``, which is exactly rows ``[Lp:]`` of the full-sequence causal
+    attention — so a suffix prefill over the same tokens/positions
+    reproduces the cold prefill's suffix rows.  Callers must pass
+    ``positions`` already offset by ``Lp``; the returned (k, v) cover only
+    the fresh suffix.  Requires a non-windowed arch (the prefix would fall
+    out of a sliding window anyway)."""
     q, k, v = _project_qkv(params, x, cfg, positions=positions)
+    if prefix_kv is not None:
+        if cfg.sliding_window:
+            raise ValueError("prefix_kv requires a non-sliding-window arch")
+        if impl == "pallas":
+            # no Pallas path: silently switching kernels would break the
+            # cached==cold token-identity contract (different accumulation
+            # order), so reject loudly like paged_decode_attention does
+            raise NotImplementedError(
+                "prefix-context prefill has no Pallas kernel yet; "
+                "use attn_impl='xla'")
+        pk, pv = prefix_kv
+        Lp = pk.shape[1]
+        k_att = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_att = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        if impl == "naive":
+            out = naive_attention(q, k_att, v_att, causal=causal,
+                                  q_offset=q_offset + Lp)
+        else:
+            out = chunked_flash_attention(q, k_att, v_att, causal=causal,
+                                          q_offset=q_offset + Lp,
+                                          block_k=block_k)
+        B, S, _, _ = q.shape
+        y = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+        return y, (k, v)
     if impl == "pallas":
         from repro.kernels.flash_attention import ops as fa_ops
 

@@ -166,17 +166,19 @@ class FwdOut(NamedTuple):
 
 def _apply_layer_train(
     lp, spec: LayerSpec, x, cfg, *, positions, impl, policy, enc_kv=None,
-    causal: bool = True,
+    causal: bool = True, prefix_kv=None,
 ):
     """One layer, full-sequence (train/prefill shape).  Returns
-    (x, aux, kv_or_None, ssm_state_or_None)."""
+    (x, aux, kv_or_None, ssm_state_or_None).  ``prefix_kv`` threads a cached
+    K/V context into the attention (shared-prefix suffix prefill)."""
     aux = jnp.float32(0.0)
     kv = None
     sstate = None
     h = rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
     if spec.mixer == "attn":
         y, kv = attn_mod.self_attention(
-            lp["attn"], h, cfg, positions=positions, causal=causal, impl=impl
+            lp["attn"], h, cfg, positions=positions, causal=causal, impl=impl,
+            prefix_kv=prefix_kv,
         )
     else:
         y, sstate = ssm_mod.ssm_forward(lp["ssm"], h, cfg, impl=impl, return_state=True)
@@ -519,6 +521,60 @@ def prefill(
     if enc_kvs is not None:
         cross = {str(p): enc_kvs[p] for p in range(len(specs))}
     return logits, Caches(kv=kv, ssm=ssm, cross=cross)
+
+
+def prefix_prefill(
+    params, tokens, prefix_kv, cfg, *, prefix_len: int, impl: str = "xla",
+    policy=None,
+):
+    """Suffix prefill against a cached prompt prefix (shared-prefix
+    admission): run only the uncached tail of the prompt, attending to the
+    per-layer prefix K/V gathered from the paged pool.
+
+    tokens:     (B, S_suffix) int32 — the prompt tail, absolute positions
+                ``prefix_len + [0, S_suffix)``.
+    prefix_kv:  {str(p): (k, v)} with k/v (nb, B, prefix_len, Hkv, dh) —
+                the cached pages' contents, one entry per period position.
+
+    Returns (last-token logits (B, Vp), {str(p): (k, v)}) where the output
+    K/V cover only the suffix, in absolute-position order (ready for page
+    packing).  Because causal attention makes the suffix rows independent
+    of whether the prefix was recomputed or read back, this reproduces the
+    cold ``prefill``'s suffix exactly (bit-for-bit when the cache dtype is
+    the compute dtype — the page store's dtype cast is the only lossy step).
+
+    Pure-attention archs only: an SSM layer's post-prompt state depends on
+    every prompt token (nothing positional to cache), and audio/VLM prompts
+    carry non-token context that shifts positions.
+    """
+    specs = period_structure(cfg)
+    if any(s.mixer != "attn" for s in specs):
+        raise ValueError(
+            "prefix_prefill requires a pure-attention arch (SSM state is "
+            "not positional — there is no per-page prefix to reuse)")
+    if cfg.family in ("audio", "vlm"):
+        raise ValueError(
+            f"prefix_prefill does not support the {cfg.family} family")
+    x = _embed(params, tokens, policy)
+    B, S, _ = x.shape
+    positions = prefix_len + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = _shard(x, policy, "hidden")
+
+    def body(x, xs_in):
+        block_params, pkv = xs_in
+        outs = {}
+        for p, spec in enumerate(specs):
+            x, _, kv, _ = _apply_layer_train(
+                block_params[p], spec, x, cfg, positions=positions, impl=impl,
+                policy=policy, causal=True, prefix_kv=pkv[str(p)],
+            )
+            outs[str(p)] = kv
+        return x, outs
+
+    x, ys = jax.lax.scan(body, x, (params["blocks"], prefix_kv))
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = logits_fn(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, ys
 
 
 def decode_step(

@@ -3,17 +3,20 @@ from .engine import (
     ServeConfig,
     SlotState,
     admit_program,
+    cached_admit_program,
     chunk_bucket,
     decode_chunk_program,
     generate,
     init_page_state,
     init_slot_state,
     make_admit_step,
+    make_cached_admit_step,
     make_decode_chunk,
     make_paged_admit_step,
     make_paged_decode_chunk,
     make_prefill_step,
     make_serve_step,
+    page_push_program,
     paged_admit_program,
     paged_decode_chunk_program,
 )
@@ -23,6 +26,7 @@ from .kv_cache import (
     paged_kv_cache_bytes, pages_for, seed_kv_cache, seed_ssm_state,
     tree_bytes,
 )
+from .prefix_cache import PrefixCache, PrefixCacheStats, PrefixNode
 from .tenancy import (
     CompiledProgram,
     ServingExecutor,
@@ -32,15 +36,18 @@ from .tenancy import (
 )
 
 __all__ = [
-    "PageState", "ServeConfig", "SlotState", "admit_program", "chunk_bucket",
+    "PageState", "ServeConfig", "SlotState", "admit_program",
+    "cached_admit_program", "chunk_bucket",
     "decode_chunk_program", "generate", "init_page_state", "init_slot_state",
-    "make_admit_step", "make_decode_chunk", "make_paged_admit_step",
+    "make_admit_step", "make_cached_admit_step", "make_decode_chunk",
+    "make_paged_admit_step",
     "make_paged_decode_chunk", "make_prefill_step", "make_serve_step",
-    "paged_admit_program", "paged_decode_chunk_program",
+    "page_push_program", "paged_admit_program", "paged_decode_chunk_program",
     "BatcherStats", "ContinuousBatcher", "Request",
     "PagedKVPool", "PageQuotaError", "cache_len", "kv_cache_bytes",
     "page_bytes", "paged_kv_cache_bytes", "pages_for", "seed_kv_cache",
     "seed_ssm_state", "tree_bytes",
+    "PrefixCache", "PrefixCacheStats", "PrefixNode",
     "CompiledProgram", "ServingExecutor", "TwoStageCompiler",
     "VirtualAcceleratorPool", "make_serving_hypervisor",
 ]

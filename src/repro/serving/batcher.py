@@ -49,31 +49,60 @@ use is below ``max_len`` stop paying for it).  Page faults during decode are
 handled on device inside the chunk scan; a slot denied a page (pool dry or
 ``kv_pages`` quota hit — only possible without reservations) deactivates,
 and the host requeues its request at the queue head
-(``stats.oom_requeues``).  The single post-chunk sync additionally carries
-``active`` and ``free_top`` so the host ledger stays reconciled.
+(``stats.oom_requeues``) — keeping its generated tokens when
+prompt+output still fits the prompt bucket (resume-on-OOM: re-admission
+prefills the concatenation instead of restarting).  The single post-chunk
+sync additionally carries ``active`` and ``free_top`` so the host ledger
+stays reconciled.
+
+**Prefix sharing** (``prefix_cache=True``, paged + pure-attention archs):
+admission consults a :class:`~repro.serving.prefix_cache.PrefixCache`
+(refcounted radix tree over the pool at page granularity, namespaced by
+``Request.namespace``): hits map cached physical pages read-only into the
+slot's table and prefill only the uncached suffix
+(``engine.cached_admit_program``); misses insert their prefix pages for
+the next request — but only with **recurrence evidence** (another pending
+request carries the same prefix, or the cache's ghost index saw it
+before), so single-use tails never spend cache pages (ownership of
+inserted pages moves to the namespace — ``PagedKVPool.share`` — billed
+once).  Cache-owned pages are pinned on
+device (``PageState.pinned``) so finishing slots never push them to the
+free stack; they return only through LRU eviction (admission pressure or a
+``set_page_limit`` shrink, which evicts the cache *before* live requests
+fault) via ``page_push_program``.
+
+**Deadlines**: a ``Request.deadline`` (in the ``clock`` timebase) already
+past at admission time sheds the request (``dropped`` /
+``stats.deadline_drops``) instead of starting it hopelessly late.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import Caches, init_caches, init_paged_caches
+from repro.models.transformer import (
+    Caches, init_caches, init_paged_caches, period_structure,
+)
 from .kv_cache import PagedKVPool, pages_for, tree_bytes
+from .prefix_cache import PrefixCache, PrefixNode
 from .engine import (
     PageState,
     ServeConfig,
     SlotState,
     admit_program,
+    cached_admit_program,
     chunk_bucket,
     decode_chunk_program,
     init_page_state,
     init_slot_state,
+    page_push_program,
     paged_admit_program,
     paged_decode_chunk_program,
 )
@@ -81,12 +110,33 @@ from .engine import (
 
 @dataclasses.dataclass
 class Request:
+    """One generation request.
+
+    ``namespace`` keys the shared-prefix cache: requests (possibly from
+    different tenants multiplexed on one batcher) share cached prompt pages
+    only within a namespace.  Sharing is **opt-in**: the default ``None``
+    never shares — callers that want reuse pick a namespace key (and
+    thereby accept that admission timing reveals prefix reuse within it).
+    Note: prompts are left-padded to the batcher's ``prompt_len`` bucket,
+    so only requests whose prompts have equal *total* length align
+    positions and can share a prefix (see ``prefix_cache`` module docs).
+    ``deadline`` (same clock as the batcher's ``clock`` callable) lets the
+    batcher shed the request instead of starting it hopelessly late —
+    ``dropped`` marks that outcome (``done`` is set too, with no output).
+    """
+
     rid: int
     prompt: np.ndarray           # (S,) int32
     max_new: int
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    namespace: Optional[str] = None
+    deadline: Optional[float] = None
+    dropped: bool = False
+    # prefix-cache nodes this request currently pins (internal)
+    _prefix_nodes: List[PrefixNode] = dataclasses.field(
+        default_factory=list, repr=False)
 
 
 @dataclasses.dataclass
@@ -106,9 +156,25 @@ class BatcherStats:
     # paged mode
     oom_requeues: int = 0        # requests requeued after a denied page fault
     oom_discarded_tokens: int = 0  # emitted tokens thrown away by requeues
+    oom_resumed: int = 0         # requeues that kept their generated tokens
+    resumed_tokens_kept: int = 0  # tokens those requeues did NOT discard
     pages_in_use: int = 0        # device-allocated pages after the last sync
     peak_pages_in_use: int = 0
     peak_resident: int = 0       # most simultaneously-resident requests
+    # prefix cache
+    prefix_hits: int = 0         # admissions that mapped >= 1 cached page
+    prefill_tokens_skipped: int = 0  # prompt tokens served from shared pages
+    prefix_inserts: int = 0      # pages newly indexed into the cache
+    prefix_evictions: int = 0    # cached pages reclaimed to the free stack
+    shared_pages: int = 0        # cache-owned pages right now (gauge)
+    # deadlines
+    deadline_drops: int = 0      # requests shed before start (past deadline)
+
+    @property
+    def prefix_tokens_saved(self) -> int:
+        """Alias of ``prefill_tokens_skipped``: every prompt token served
+        from a shared page is exactly one prefill token not re-run."""
+        return self.prefill_tokens_skipped
 
     @property
     def occupancy(self) -> float:
@@ -145,7 +211,9 @@ class ContinuousBatcher:
                  chunk: int = 8, paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None,
                  page_quota: Optional[int] = None,
-                 reserve_pages: bool = True):
+                 reserve_pages: bool = True,
+                 prefix_cache: Union[bool, PrefixCache, None] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.params = params
         self.cfg = cfg
         self.B = slots
@@ -156,9 +224,26 @@ class ContinuousBatcher:
         self.scfg = scfg
         self._policy = policy
         self.paged = paged
+        self._clock = clock if clock is not None else time.monotonic
+        self._has_deadlines = False
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.state: SlotState = init_slot_state(slots)
+        if prefix_cache and not paged:
+            raise ValueError("the prefix cache rides on the paged pool; "
+                             "pass paged=True")
+        if prefix_cache and (
+                any(s.mixer != "attn" for s in period_structure(cfg))
+                or cfg.family in ("audio", "vlm")):
+            raise ValueError(
+                "prefix caching requires a pure-attention arch (SSM state "
+                "is not positional; audio/vlm prompts shift positions)")
+        self.prefix: Optional[PrefixCache] = None
+        if isinstance(prefix_cache, PrefixCache):
+            assert prefix_cache.page_size == page_size
+            self.prefix = prefix_cache
+        elif prefix_cache:
+            self.prefix = PrefixCache(page_size)
         if paged:
             self.page_size = max(1, page_size)
             self.max_pages = pages_for(max_len, self.page_size)
@@ -196,10 +281,28 @@ class ContinuousBatcher:
         if self.paged:
             assert self._request_pages(req) <= self.n_pages, \
                 "request footprint exceeds the whole page pool"
+        if req.deadline is not None:
+            self._has_deadlines = True
         self.queue.append(req)
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _shed_expired(self) -> None:
+        """Drop queued requests whose deadline has already passed — serving
+        them would burn slots on answers nobody is waiting for."""
+        if not self._has_deadlines:
+            return
+        now = self._clock()
+        kept: Deque[Request] = deque()
+        for req in self.queue:
+            if req.deadline is not None and now > req.deadline:
+                req.done = True
+                req.dropped = True
+                self.stats.deadline_drops += 1
+            else:
+                kept.append(req)
+        self.queue = kept
 
     # -- paged-mode ledger ----------------------------------------------
     def _request_pages(self, req: Request) -> int:
@@ -213,15 +316,55 @@ class ContinuousBatcher:
         """Adjust the tenant's ``kv_pages`` lease cap mid-run (hypervisor
         kv resize).  Takes effect on the next dispatch; shrinking below the
         current allocation only blocks further growth — resident pages
-        drain as their slots complete."""
+        drain as their slots complete.  With a prefix cache attached, a
+        shrink **evicts unpinned cache entries first** (shared pages count
+        against the lease like any allocation), so the cache pays for the
+        smaller lease before live requests start faulting against it."""
         assert self.paged, "page limits only apply to paged batchers"
         self._page_limit = max(0, min(int(n_pages), self.n_pages))
         self.pages = self.pages._replace(quota=jnp.int32(self._page_limit))
+        if self.prefix is not None:
+            est = self.stats.pages_in_use + self._admitted_pages_since_sync
+            if est > self._page_limit:
+                self._evict_cached(est - self._page_limit)
 
-    def _pages_available(self, need: int) -> bool:
-        if self.kv_pool.used + need > self._page_limit:
-            return False
-        avail = self.kv_pool.available
+    def _evict_cached(self, n: int) -> int:
+        """Reclaim up to ``n`` pages from the prefix cache (LRU, refcount-0
+        only): drop them from the shared ledger and push them back onto the
+        device free stack.  Returns how many pages came back."""
+        if self.prefix is None or n <= 0:
+            return 0
+        pids = self.prefix.evict(n)
+        if not pids:
+            return 0
+        self.kv_pool.drop_shared(pids)
+        self.stats.prefix_evictions += len(pids)
+        self.stats.shared_pages = self.kv_pool.shared
+        # pad the pid vector to a power-of-two bucket (-1 = no-op) so the
+        # push program compiles log2(n_pages) shapes, not one per eviction
+        width = 1 << (len(pids) - 1).bit_length() if len(pids) > 1 else 1
+        vec = np.full((width,), -1, dtype=np.int32)
+        vec[: len(pids)] = pids
+        self.pages = page_push_program()(self.pages, jnp.asarray(vec))
+        self.stats.dispatches += 1
+        self.stats.pages_in_use = max(0, self.stats.pages_in_use - len(pids))
+        return len(pids)
+
+    def _page_shortfall(self, need: int, pop_need: Optional[int] = None,
+                        ) -> int:
+        """Pages missing before ``need`` can be admitted: the worst deficit
+        over the lease bound, the ledger bound, and (without reservations)
+        the device free-stack estimate for ``pop_need`` (the pages the
+        admission dispatch will actually pop — the prompt's uncached pages;
+        defaults to ``need``).  0 means the admission fits.  Every evicted
+        cache page relieves all three bounds at once, so this is exactly
+        how many pages an eviction pass must reclaim — evicting a whole
+        request footprint instead would flush warm entries that were never
+        in the way."""
+        if pop_need is None:
+            pop_need = need
+        short = max(0, self.kv_pool.used + need - self._page_limit)
+        short = max(short, need - self.kv_pool.available)
         if not self.reserve_pages:
             # the ledger only reserved prompt pages; residents' decode pages
             # live on device.  Bound admission by the device allocation seen
@@ -230,9 +373,15 @@ class ContinuousBatcher:
             # least one slot can take the decode-time fault and progress.
             device_avail = (self.n_pages - self.stats.pages_in_use
                             - self._admitted_pages_since_sync)
-            avail = min(avail, device_avail)
-            need += int(any(r is not None for r in self.slot_req))
-        return need <= avail
+            short = max(
+                short,
+                pop_need + int(any(r is not None for r in self.slot_req))
+                - device_avail)
+        return short
+
+    def _pages_available(self, need: int, pop_need: Optional[int] = None,
+                         ) -> bool:
+        return self._page_shortfall(need, pop_need) == 0
 
     # -- mid-run migration (Hypervisor resize between chunks) -----------
     def live_state(self) -> Dict[str, Any]:
@@ -254,28 +403,154 @@ class ContinuousBatcher:
             self.pages = state["pages"]
 
     # -- admission: right-sized prefill + per-slot scatter ---------------
+    def _padded_row(self, req: Request) -> np.ndarray:
+        """The request's prompt-bucket row: prompt (plus any tokens kept by
+        a resume-on-OOM requeue) left-padded with 0s to ``prompt_len``.
+        Memoized per (request, emitted-token count) — the witness scan asks
+        for every queued request's row each admission round."""
+        cached = getattr(req, "_row_cache", None)
+        if cached is not None and cached[0] == len(req.out):
+            return cached[1]
+        row = np.zeros((self.prompt_len,), dtype=np.int32)
+        toks = np.asarray(req.prompt, dtype=np.int32)
+        if req.out:
+            toks = np.concatenate(
+                [toks, np.asarray(req.out, dtype=np.int32)])
+        row[self.prompt_len - len(toks):] = toks
+        req._row_cache = (len(req.out), row)
+        return row
+
+    def _release_prefix(self, req: Request) -> None:
+        """Unpin the request's cached-prefix pages (tree refcounts + ledger
+        refcounts).  Refcount-0 pages stay cached until an eviction."""
+        if req._prefix_nodes:
+            self.prefix.release(req._prefix_nodes)
+            self.kv_pool.release([n.page_id for n in req._prefix_nodes])
+            req._prefix_nodes = []
+
+    def _queue_path_counts(self) -> Dict[Any, int]:
+        """How many pending requests carry each page-aligned prefix path —
+        the round's sharing witness for the insert heuristic.  Bounded to
+        the queue's first 16·B entries so a deep backlog doesn't make
+        admission O(queue²); sharing deeper in the queue is still caught by
+        the ghost index when those requests reach the front."""
+        counts: Dict[Any, int] = {}
+        if self.prefix is None:
+            return counts
+        ps = self.page_size
+        max_share = self.prefix.max_shareable(self.prompt_len)
+        for n_seen, r in enumerate(self.queue):
+            if n_seen >= 16 * self.B:
+                break
+            if r.namespace is None:
+                continue
+            row = self._padded_row(r)
+            for i in range(max_share):
+                key = (r.namespace, i, row[:(i + 1) * ps].tobytes())
+                counts[key] = counts.get(key, 0) + 1
+        return counts
+
+    def _plan_join(self, req: Request, planned_paths: set,
+                   witness: Dict[Any, int]):
+        """Prefix-cache plan for one joining request: the cached page path
+        (hits), and how many of the following full pages this admission will
+        insert.  Inserts are contiguous from the hit depth, capped at the
+        deepest prefix with **recurrence evidence** — shared by another
+        pending request (queue witness) or seen in an earlier lookup (ghost
+        index) — so single-use tails never consume cache pages; and they
+        skip paths another join of this same round already claimed (its
+        physical ids are unknown until that dispatch's sync, so a duplicate
+        maps private pages and converges to sharing on a later round)."""
+        if self.prefix is None or req.namespace is None:
+            return [], 0
+        row = self._padded_row(req)
+        max_share = self.prefix.max_shareable(self.prompt_len)
+        nodes = self.prefix.lookup(req.namespace, row, max_pages=max_share)
+        seen_depth = self.prefix.note_seen(req.namespace, row,
+                                           max_pages=max_share)
+        ps = self.page_size
+        queue_depth = 0
+        for i in range(max_share):
+            key = (req.namespace, i, row[:(i + 1) * ps].tobytes())
+            if witness.get(key, 0) < 2:     # this request counts once
+                break
+            queue_depth = i + 1
+        worth = max(seen_depth, queue_depth, len(nodes))
+        inserts = 0
+        for i in range(len(nodes), min(max_share, worth)):
+            path = (req.namespace, tuple(int(t) for t in row[:(i + 1) * ps]))
+            if path in planned_paths:
+                break
+            planned_paths.add(path)
+            inserts += 1
+        return nodes, inserts
+
     def _admit(self) -> None:
+        self._shed_expired()
         free = self._free_slots()
         if not free or not self.queue:
             return
-        joins = []
+        if not self.paged:
+            self._admit_dense(free)
+            return
+        joins: List[Dict[str, Any]] = []
+        planned_paths: set = set()
+        witness = self._queue_path_counts()
         resident = sum(r is not None for r in self.slot_req)
+        prompt_pages = pages_for(self.prompt_len, self.page_size)
         while free and self.queue:
-            if self.paged:
-                if resident + len(joins) >= self._resident_cap:
+            if resident + len(joins) >= self._resident_cap:
+                break
+            req = self.queue[0]
+            nodes, inserts = self._plan_join(req, planned_paths, witness)
+            k = len(nodes)
+            if nodes:
+                # pin the hit path NOW: the pressure-eviction below must
+                # never reclaim pages this join is about to map
+                self.prefix.acquire(nodes)
+                self.kv_pool.acquire([n.page_id for n in nodes])
+                req._prefix_nodes = list(nodes)
+            # admission by page availability: the queue head joins only when
+            # its ledger reservation (minus cache-served pages) fits the
+            # pool AND the lease cap (head-of-line — a later smaller request
+            # never jumps); under pressure, LRU cache entries are evicted
+            # back to the free stack before giving up
+            need = self._request_pages(req) - k
+            pop = prompt_pages - k
+            short = self._page_shortfall(need, pop)
+            if short:
+                self._evict_cached(short)
+                if not self._pages_available(need, pop):
+                    if nodes:
+                        self._release_prefix(req)
                     break
-                # admission by page availability: the queue head joins only
-                # when its ledger reservation fits the pool AND the lease
-                # cap (head-of-line — a later smaller request never jumps)
-                need = self._request_pages(self.queue[0])
-                if not self._pages_available(need):
-                    break
-                self.kv_pool.alloc(self.queue[0].rid, need)
-                self._admitted_pages_since_sync += pages_for(
-                    self.prompt_len, self.page_size)
-            joins.append((free.pop(0), self.queue.popleft()))
+            self.kv_pool.alloc(req.rid, need)
+            if nodes:
+                self.stats.prefix_hits += 1
+                self.stats.prefill_tokens_skipped += k * self.page_size
+            self._admitted_pages_since_sync += pop
+            joins.append({"slot": free.pop(0), "req": self.queue.popleft(),
+                          "k": k, "pin": k + inserts, "pop": pop,
+                          "nodes": nodes})
         if not joins:
             return
+        # one dispatch per cached-prefix depth: the suffix length is a
+        # static program shape (bounded by prompt_len / page_size programs)
+        by_depth: Dict[int, List[Dict[str, Any]]] = {}
+        for join in joins:
+            by_depth.setdefault(join["k"], []).append(join)
+        for k in sorted(by_depth):
+            self._dispatch_paged(by_depth[k], k)
+        self.stats.peak_resident = max(
+            self.stats.peak_resident,
+            sum(r is not None for r in self.slot_req))
+        self.stats.shared_pages = self.kv_pool.shared
+
+    def _admit_dense(self, free: List[int]) -> None:
+        """The original dense-ring admission path (no paging)."""
+        joins = []
+        while free and self.queue:
+            joins.append((free.pop(0), self.queue.popleft()))
         n = len(joins)
         nb = min(1 << (n - 1).bit_length() if n > 1 else 1, self.B)
         toks = np.zeros((nb, self.prompt_len), dtype=np.int32)
@@ -283,10 +558,9 @@ class ContinuousBatcher:
         budget = np.zeros((nb,), dtype=np.int32)
         eos = np.full((nb,), -1, dtype=np.int32)
         for j, (slot, req) in enumerate(joins):
-            p = req.prompt
-            toks[j, self.prompt_len - len(p):] = p   # left-pad with 0s
+            toks[j] = self._padded_row(req)
             slots[j] = slot
-            budget[j] = req.max_new
+            budget[j] = req.max_new - len(req.out)
             if req.eos is not None:
                 eos[j] = req.eos
         # pad a partial bucket by repeating row 0: duplicate-index scatters
@@ -297,21 +571,11 @@ class ContinuousBatcher:
             budget[j] = budget[0]
             eos[j] = eos[0]
         pos0 = np.full((nb,), self.prompt_len, dtype=np.int32)
-        if self.paged:
-            real = np.zeros((nb,), dtype=bool)
-            real[:n] = True
-            nxt, self.caches, self.state, self.pages = self._admit_fn(
-                self.params, {"tokens": jnp.asarray(toks)}, self.caches,
-                self.state, self.pages, jnp.asarray(slots),
-                jnp.asarray(pos0), jnp.asarray(budget), jnp.asarray(eos),
-                jnp.asarray(real),
-            )
-        else:
-            nxt, self.caches, self.state = self._admit_fn(
-                self.params, {"tokens": jnp.asarray(toks)}, self.caches,
-                self.state, jnp.asarray(slots), jnp.asarray(pos0),
-                jnp.asarray(budget), jnp.asarray(eos),
-            )
+        nxt, self.caches, self.state = self._admit_fn(
+            self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+            self.state, jnp.asarray(slots), jnp.asarray(pos0),
+            jnp.asarray(budget), jnp.asarray(eos),
+        )
         self.stats.prefills += 1
         self.stats.dispatches += 1
         self.stats.admit_scatter_bytes += int(
@@ -327,21 +591,103 @@ class ContinuousBatcher:
             if len(req.out) >= req.max_new or hit_eos:
                 req.done = True
                 self.stats.completed += 1
-                if self.paged:
-                    self.kv_pool.free(req.rid)
-                    # done at admission: the device never popped its prompt
-                    # pages (a non-activating row allocates nothing), so
-                    # take it back out of the since-sync estimate — else
-                    # admit-only rounds leak the counter and starve
-                    # over-subscribed admission with the pool entirely free
-                    self._admitted_pages_since_sync -= pages_for(
-                        self.prompt_len, self.page_size)
             else:
                 self.slot_req[slot] = req
-        if self.paged:
-            self.stats.peak_resident = max(
-                self.stats.peak_resident,
-                sum(r is not None for r in self.slot_req))
+
+    def _dispatch_paged(self, group: List[Dict[str, Any]], k: int) -> None:
+        """One paged admission dispatch for joins sharing ``k`` cached
+        prefix pages: cold program at k == 0, cached-suffix program
+        otherwise.  Both return the written page-table rows, from which the
+        planned full-page inserts learn their physical ids."""
+        n = len(group)
+        nb = min(1 << (n - 1).bit_length() if n > 1 else 1, self.B)
+        ps = self.page_size
+        S = self.prompt_len - k * ps
+        toks = np.zeros((nb, S), dtype=np.int32)
+        slots = np.zeros((nb,), dtype=np.int32)
+        budget = np.zeros((nb,), dtype=np.int32)
+        eos = np.full((nb,), -1, dtype=np.int32)
+        pin = np.zeros((nb,), dtype=np.int32)
+        pids = np.zeros((nb, max(k, 1)), dtype=np.int32)
+        rows = [self._padded_row(join["req"]) for join in group]
+        for j, join in enumerate(group):
+            req = join["req"]
+            toks[j] = rows[j][k * ps:]
+            slots[j] = join["slot"]
+            budget[j] = req.max_new - len(req.out)
+            if req.eos is not None:
+                eos[j] = req.eos
+            pin[j] = join["pin"]
+            if k:
+                pids[j] = [node.page_id for node in join["nodes"]]
+        for j in range(n, nb):        # duplicate-pad with row 0 (see above)
+            toks[j] = toks[0]
+            slots[j] = slots[0]
+            budget[j] = budget[0]
+            eos[j] = eos[0]
+            pin[j] = pin[0]
+            pids[j] = pids[0]
+        pos0 = np.full((nb,), self.prompt_len, dtype=np.int32)
+        real = np.zeros((nb,), dtype=bool)
+        real[:n] = True
+        if k:
+            fn = cached_admit_program(self.cfg, self.scfg, k,
+                                      policy=self._policy)
+            nxt, self.caches, self.state, self.pages, out_rows = fn(
+                self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+                self.state, self.pages, jnp.asarray(slots),
+                jnp.asarray(pos0), jnp.asarray(budget), jnp.asarray(eos),
+                jnp.asarray(real), jnp.asarray(pids), jnp.asarray(pin),
+            )
+        else:
+            nxt, self.caches, self.state, self.pages, out_rows = \
+                self._admit_fn(
+                    self.params, {"tokens": jnp.asarray(toks)}, self.caches,
+                    self.state, self.pages, jnp.asarray(slots),
+                    jnp.asarray(pos0), jnp.asarray(budget),
+                    jnp.asarray(eos), jnp.asarray(real), jnp.asarray(pin),
+                )
+        self.stats.prefills += 1
+        self.stats.dispatches += 1
+        self.stats.admit_scatter_bytes += int(
+            self.stats.cache_bytes * nb * S
+            / max(self.B * self.prompt_len, 1)
+        )
+        nxt_np, rows_np = jax.device_get((nxt, out_rows))    # ONE host sync
+        self.stats.host_syncs += 1
+        for j, join in enumerate(group):
+            slot, req = join["slot"], join["req"]
+            tok = int(nxt_np[j])
+            req.out.append(tok)
+            self.stats.admit_tokens += 1
+            hit_eos = req.eos is not None and tok == req.eos
+            if len(req.out) >= req.max_new or hit_eos:
+                req.done = True
+                self.stats.completed += 1
+                if self.prefix is not None:
+                    self._release_prefix(req)
+                self.kv_pool.free(req.rid)
+                # done at admission: the device never popped its prompt
+                # pages (a non-activating row allocates nothing), so take
+                # it back out of the since-sync estimate — else admit-only
+                # rounds leak the counter and starve over-subscribed
+                # admission with the pool entirely free
+                self._admitted_pages_since_sync -= join["pop"]
+                continue
+            self.slot_req[slot] = req
+            inserts = join["pin"] - k
+            if inserts > 0:
+                new_pids = rows_np[j, k:join["pin"]]
+                if (new_pids >= 0).all():
+                    created = self.prefix.insert(
+                        req.namespace, rows[j], new_pids, start_page=k)
+                    assert len(created) == inserts, (created, inserts)
+                    cpids = [node.page_id for node in created]
+                    self.kv_pool.share(req.rid, req.namespace, cpids)
+                    self.kv_pool.acquire(cpids)
+                    self.prefix.acquire(created)
+                    req._prefix_nodes.extend(created)
+                    self.stats.prefix_inserts += len(created)
 
     # -- chunk sizing: adaptive to queue pressure ------------------------
     def _pick_chunk(self, active: List[int]) -> int:
@@ -402,22 +748,38 @@ class ContinuousBatcher:
                 self.slot_req[i] = None
                 self.stats.completed += 1
                 if self.paged:
+                    if self.prefix is not None:
+                        self._release_prefix(req)
                     self.kv_pool.free(req.rid)
         if self.paged:
             active_np = fetched[2]
             self._stalled = self._stalled + 1 \
                 if int(emit_np.sum()) == 0 else 0
             # a slot that deactivated without finishing was denied a page
-            # (pool dry / quota hit): requeue its request at the head — it
-            # re-prefills from scratch once capacity frees
+            # (pool dry / quota hit): requeue its request at the head.  When
+            # prompt + generated still fit the prompt bucket, the generated
+            # tokens are KEPT — re-admission prefills prompt+output and
+            # decoding resumes where the eviction cut it off; only an
+            # overflowing request restarts from its prompt (the discarded
+            # emissions stay out of ``stats.tokens``).  Note the resumed
+            # row is left-padded differently than the original prompt, so
+            # it does NOT hit the original's cached prefix pages — only
+            # other requests resumed at the same output length would align
             oomed = 0
             for i in active:
                 req = self.slot_req[i]
                 if req is not None and not bool(active_np[i]):
                     self.slot_req[i] = None
+                    if self.prefix is not None:
+                        self._release_prefix(req)
                     self.kv_pool.free(req.rid)
-                    self.stats.oom_discarded_tokens += len(req.out)
-                    req.out.clear()
+                    if req.out and \
+                            len(req.prompt) + len(req.out) <= self.prompt_len:
+                        self.stats.oom_resumed += 1
+                        self.stats.resumed_tokens_kept += len(req.out)
+                    else:
+                        self.stats.oom_discarded_tokens += len(req.out)
+                        req.out.clear()
                     self.queue.appendleft(req)
                     self.stats.oom_requeues += 1
                     oomed += 1

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, encoder_forward, prefill
+from repro.models import decode_step, encoder_forward, prefill, prefix_prefill
 from repro.models.transformer import Caches
 
 from .kv_cache import pages_for
@@ -319,12 +319,19 @@ class PageState(NamedTuple):
     quota:    () int32 — lease cap on allocated pages (the hypervisor's
               ``kv_pages`` dimension); a fault beyond it is denied even if
               the pool has free pages.
+    pinned:   (B,) int32 — leading logical pages of each slot's row that are
+              owned by the **prefix cache** (shared, read-only): a finishing
+              slot never pushes them back onto the free stack — the host's
+              refcount ledger decides when a shared page becomes free.
+              Decode never writes them either, by construction: the write
+              position's logical page is ``cur_pos // page_size >= pinned``.
     """
 
     table: jax.Array
     free: jax.Array
     free_top: jax.Array
     quota: jax.Array
+    pinned: jax.Array
 
     @property
     def n_pages(self) -> int:
@@ -339,22 +346,29 @@ def init_page_state(batch: int, n_pages: int, max_pages: int,
                               jnp.full((1,), -1, jnp.int32)]),
         free_top=jnp.int32(n_pages),
         quota=jnp.int32(n_pages if quota is None else min(quota, n_pages)),
+        pinned=jnp.zeros((batch,), jnp.int32),
     )
 
 
-def _free_finished_pages(pages_table, free, free_top, finished):
-    """Push every page mapped by a ``finished`` slot back onto the free
-    stack (cumsum-ranked scatter; masked-out entries land on the scratch
-    element) and clear those table rows.  Returns (table, free, free_top)."""
+def _free_finished_pages(pages_table, free, free_top, finished, pinned):
+    """Push every *private* page mapped by a ``finished`` slot back onto the
+    free stack (cumsum-ranked scatter; masked-out entries land on the
+    scratch element) and clear those table rows.  The slot's first
+    ``pinned`` logical pages are cache-owned (shared) and are NOT pushed —
+    the host releases their refcounts at sync time.  Returns
+    (table, free, free_top, pinned)."""
     scratch = free.shape[0] - 1
-    pmask = finished[:, None] & (pages_table >= 0)
+    maxp = pages_table.shape[1]
+    private = jnp.arange(maxp, dtype=jnp.int32)[None, :] >= pinned[:, None]
+    pmask = finished[:, None] & (pages_table >= 0) & private
     flat = pmask.reshape(-1)
     prank = jnp.cumsum(flat.astype(jnp.int32)) - 1
     idx = jnp.where(flat, free_top + prank, scratch)
     free = free.at[idx].set(pages_table.reshape(-1))
     free_top = free_top + flat.sum(dtype=jnp.int32)
     table = jnp.where(finished[:, None], -1, pages_table)
-    return table, free, free_top
+    pinned = jnp.where(finished, 0, pinned)
+    return table, free, free_top, pinned
 
 
 def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
@@ -413,8 +427,8 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
             remaining = st.remaining - active.astype(jnp.int32)
             done = active & ((nxt == st.eos) | (remaining <= 0))
             # -- recycle pages of finished slots --------------------------
-            table, free, free_top = _free_finished_pages(
-                table, pg.free, free_top, done | oom)
+            table, free, free_top, pinned = _free_finished_pages(
+                table, pg.free, free_top, done | oom, pg.pinned)
             st = SlotState(
                 tokens=nxt,
                 cur_pos=st.cur_pos + active.astype(jnp.int32),
@@ -423,7 +437,7 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
                 eos=st.eos,
             )
             pg = PageState(table=table, free=free, free_top=free_top,
-                           quota=pg.quota)
+                           quota=pg.quota, pinned=pinned)
             return (caches, st, pg, key), (nxt, emitted)
 
         (caches, state, pages, _), (toks, emitted) = jax.lax.scan(
@@ -434,9 +448,52 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
     return decode_chunk
 
 
+def _grant_admission_pages(pages: PageState, ask, np_: int):
+    """Prefix-feasible page grants for one admission batch: every asking
+    row needs ``np_`` pages.  ``cum`` is monotone, so stack/quota denials
+    only ever cut a suffix — pops stay contiguous at the stack top.
+    Shared by the cold and cached admit programs (one discipline, edited
+    once).  Returns (ok, grant, pid (n, np_), dest, free_top)."""
+    n_pages = pages.free.shape[0] - 1
+    cum = jnp.cumsum(ask.astype(jnp.int32)) * np_
+    allocated = n_pages - pages.free_top
+    ok = (cum <= pages.free_top) & (allocated + cum <= pages.quota)
+    grant = ask & ok
+    ranks = ((jnp.cumsum(grant.astype(jnp.int32)) - 1)[:, None] * np_
+             + jnp.arange(np_, dtype=jnp.int32)[None, :])          # (n, np_)
+    pid = pages.free[jnp.clip(pages.free_top - 1 - ranks, 0, n_pages)]
+    dest = jnp.where(grant[:, None], pid, n_pages)                 # trash
+    free_top = pages.free_top - grant.sum(dtype=jnp.int32) * np_
+    return ok, grant, pid, dest, free_top
+
+
+def _scatter_fresh_kv(caches_kv, fresh_kv, dest, *, S: int, np_: int,
+                      ps: int, n: int):
+    """Scatter freshly-prefilled K/V (per layer: (nb, n, S, Hkv, dh)) into
+    the popped pool pages at ``dest`` ((n, np_); trash for denied rows).
+    ``fresh_kv`` maps layer key -> (k, v)."""
+    pad = np_ * ps - S
+
+    def to_pages(a):
+        # (nb, n, S, ...) -> (nb, n * np_, ps, ...)
+        if pad:
+            width = ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 3)
+            a = jnp.pad(a, width)
+        return a.reshape(a.shape[0], n * np_, ps, *a.shape[3:])
+
+    def scatter(old, new):
+        return old.at[:, dest.reshape(-1)].set(to_pages(new).astype(old.dtype))
+
+    return {
+        p: type(view)(k=scatter(view.k, fresh_kv[p][0]),
+                      v=scatter(view.v, fresh_kv[p][1]))
+        for p, view in caches_kv.items()
+    }
+
+
 def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
     """admit_step(params, batch, caches, state, pages, slots, pos0, budget,
-    eos, real) -> (first_tokens (n,), caches, state, pages).
+    eos, real, pin) -> (first_tokens (n,), caches, state, pages, rows).
 
     Paged admission: right-sized bucketed prefill exactly like
     :func:`make_admit_step`, but the fresh K/V is scattered into
@@ -446,14 +503,18 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
     pages nor write conflicting values (every duplicate scatter carries row
     0's values, keeping the duplicate-index writes deterministic).  A row
     that never activates (immediate EOS / zero budget / allocation denied)
-    gets no pages and a cleared table row.  Jit with
+    gets no pages and a cleared table row.  ``pin`` (n,) int32 is the
+    prefix-cache pin plan: how many of the row's leading logical pages the
+    host will insert into the shared prefix cache after the sync (0 when
+    prefix caching is off) — recorded in ``PageState.pinned`` so the chunk
+    scan never recycles them.  ``rows`` returns the written page-table rows
+    so the host learns the physical ids it is about to share.  Jit with
     ``donate_argnums=(2, 3, 4)``.
     """
     mask = scfg.logit_mask(cfg)
 
     def admit_step(params, batch, caches: Caches, state: SlotState,
-                   pages: PageState, slots, pos0, budget, eos, real):
-        n_pages = pages.free.shape[0] - 1
+                   pages: PageState, slots, pos0, budget, eos, real, pin):
         ps = None
         for view in caches.kv.values():
             ps = view.k.shape[2]
@@ -482,17 +543,8 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
         remaining = budget - 1
         wants = (remaining > 0) & (nxt != eos)
         ask = real & wants
-        # prefix-feasible grants (cum is monotone, so stack/quota denials
-        # only ever cut a suffix — pops stay contiguous at the stack top)
-        cum = jnp.cumsum(ask.astype(jnp.int32)) * np_
-        allocated = n_pages - pages.free_top
-        ok = (cum <= pages.free_top) & (allocated + cum <= pages.quota)
-        grant = ask & ok
-        ranks = ((jnp.cumsum(grant.astype(jnp.int32)) - 1)[:, None] * np_
-                 + jnp.arange(np_, dtype=jnp.int32)[None, :])        # (n, np_)
-        pid = pages.free[jnp.clip(pages.free_top - 1 - ranks, 0, n_pages)]
-        dest = jnp.where(grant[:, None], pid, n_pages)               # trash
-        free_top = pages.free_top - grant.sum(dtype=jnp.int32) * np_
+        ok, grant, pid, dest, free_top = _grant_admission_pages(
+            pages, ask, np_)
 
         # page-table rows: granted rows map their np_ pages, everything else
         # clears; padding rows carry row 0's values (duplicate-scatter rule)
@@ -501,24 +553,9 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
         row = jnp.where(real[:, None], row, row[0:1])
         table = pages.table.at[slots].set(row)
 
-        pad = np_ * ps - S
-
-        def to_pages(a):
-            # (nb, n, S, ...) -> (nb, n * np_, ps, ...)
-            if pad:
-                width = ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 3)
-                a = jnp.pad(a, width)
-            return a.reshape(a.shape[0], n * np_, ps, *a.shape[3:])
-
-        def scatter_kv(old, new):
-            return old.at[:, dest.reshape(-1)].set(
-                to_pages(new).astype(old.dtype))
-
-        kv = {
-            p: type(view)(k=scatter_kv(view.k, fresh.kv[p].k),
-                          v=scatter_kv(view.v, fresh.kv[p].v))
-            for p, view in caches.kv.items()
-        }
+        kv = _scatter_fresh_kv(
+            caches.kv, {p: (fresh.kv[p].k, fresh.kv[p].v) for p in caches.kv},
+            dest, S=S, np_=np_, ps=ps, n=n)
 
         def merge(old, new):
             return old.at[:, slots].set(new.astype(old.dtype))
@@ -530,6 +567,10 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
 
         activates = wants & (ok | (np_ == 0))
         act_vals = jnp.where(real, activates, activates[0])
+        # pin plan only sticks for rows that really mapped their pages;
+        # padding rows carry row 0's value (duplicate-scatter rule)
+        pin_vals = jnp.where(grant, jnp.clip(pin, 0, np_), 0)
+        pin_vals = jnp.where(real, pin_vals, pin_vals[0])
         state = SlotState(
             tokens=state.tokens.at[slots].set(nxt),
             cur_pos=state.cur_pos.at[slots].set(pos0),
@@ -538,8 +579,9 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
             eos=state.eos.at[slots].set(eos),
         )
         pages = PageState(table=table, free=pages.free, free_top=free_top,
-                          quota=pages.quota)
-        return nxt, Caches(kv=kv, ssm=ssm, cross=cross), state, pages
+                          quota=pages.quota,
+                          pinned=pages.pinned.at[slots].set(pin_vals))
+        return nxt, Caches(kv=kv, ssm=ssm, cross=cross), state, pages, row
 
     return admit_step
 
@@ -565,6 +607,139 @@ def paged_admit_program(cfg, scfg: ServeConfig, *, policy=None):
         ("paged_admit", cfg, key_scfg, id(policy)), policy,
         lambda: jax.jit(make_paged_admit_step(cfg, scfg, policy=policy),
                         donate_argnums=(2, 3, 4)),
+    )
+
+
+def make_cached_admit_step(cfg, scfg: ServeConfig, n_prefix_pages: int,
+                           *, policy=None):
+    """admit_step(params, batch, caches, state, pages, slots, pos0, budget,
+    eos, real, prefix_pids, pin) -> (first_tokens, caches, state, pages,
+    rows) — shared-prefix admission.
+
+    The cached twin of :func:`make_paged_admit_step` for rows whose prompt's
+    first ``n_prefix_pages`` logical pages are already resident in the
+    prefix cache: ``batch["tokens"]`` carries only the **uncached suffix**
+    (``prompt_len - n_prefix_pages * page_size`` tokens), the cached pages'
+    K/V is gathered from the pool and attended to as a prefix context
+    (:func:`repro.models.prefix_prefill`), and only the suffix pages are
+    popped from the free stack.  ``prefix_pids`` (n, n_prefix_pages) are the
+    cached physical page ids, mapped **read-only** into the joining slot's
+    table row — the copy-on-write discipline: the divergent tail (at
+    minimum the page holding the last prompt token — the prefix is capped
+    at ``(prompt_len - 1) // page_size`` pages, so a *fully* cached prompt
+    still prefills its last page privately) always writes private pages,
+    shared pages are never written.  ``pin`` (n,) counts the row's leading
+    cache-owned logical pages (hits + the host's planned inserts), recorded
+    in ``PageState.pinned``.  Bucketing/padding rules are identical to the
+    cold program.  Jit with ``donate_argnums=(2, 3, 4)``.
+    """
+    mask = scfg.logit_mask(cfg)
+    kp = int(n_prefix_pages)
+    assert kp >= 1, "use the cold paged admit program for zero cached pages"
+
+    def admit_step(params, batch, caches: Caches, state: SlotState,
+                   pages: PageState, slots, pos0, budget, eos, real,
+                   prefix_pids, pin):
+        ps = None
+        for view in caches.kv.values():
+            ps = view.k.shape[2]
+            break
+        assert ps is not None, "cached admission needs at least one attn layer"
+        Lp = kp * ps
+        n, S = batch["tokens"].shape                       # S = suffix length
+
+        # cached prefix context: pool pages -> (nb, n, Lp, Hkv, dh) per layer
+        def gather(a):
+            g = a[:, prefix_pids]                          # (nb,n,kp,ps,H,dh)
+            return g.reshape(g.shape[0], n, Lp, *g.shape[4:])
+
+        prefix_kv = {p: (gather(view.k), gather(view.v))
+                     for p, view in caches.kv.items()}
+        logits, ys = prefix_prefill(
+            params, batch["tokens"], prefix_kv, cfg, prefix_len=Lp,
+            impl=scfg.attn_impl, policy=policy,
+        )
+        if mask is not None:
+            logits = logits + mask.astype(logits.dtype)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        np_ = pages_for(S, ps)                             # private pages
+        maxp = pages.table.shape[1]
+        remaining = budget - 1
+        wants = (remaining > 0) & (nxt != eos)
+        ask = real & wants
+        ok, grant, pid, dest, free_top = _grant_admission_pages(
+            pages, ask, np_)
+
+        # table row: [shared prefix (read-only) | fresh suffix | -1 ...]
+        row = jnp.full((n, maxp), -1, jnp.int32)
+        row = row.at[:, :kp].set(jnp.where(grant[:, None], prefix_pids, -1))
+        row = row.at[:, kp:kp + np_].set(jnp.where(grant[:, None], pid, -1))
+        row = jnp.where(real[:, None], row, row[0:1])
+        table = pages.table.at[slots].set(row)
+
+        kv = _scatter_fresh_kv(caches.kv, ys, dest, S=S, np_=np_, ps=ps, n=n)
+
+        activates = wants & ok
+        act_vals = jnp.where(real, activates, activates[0])
+        pin_vals = jnp.where(grant, jnp.clip(pin, kp, kp + np_), 0)
+        pin_vals = jnp.where(real, pin_vals, pin_vals[0])
+        state = SlotState(
+            tokens=state.tokens.at[slots].set(nxt),
+            cur_pos=state.cur_pos.at[slots].set(pos0),
+            active=state.active.at[slots].set(act_vals),
+            remaining=state.remaining.at[slots].set(remaining),
+            eos=state.eos.at[slots].set(eos),
+        )
+        pages = PageState(table=table, free=pages.free, free_top=free_top,
+                          quota=pages.quota,
+                          pinned=pages.pinned.at[slots].set(pin_vals))
+        return (nxt, Caches(kv=kv, ssm=caches.ssm, cross=caches.cross),
+                state, pages, row)
+
+    return admit_step
+
+
+def cached_admit_program(cfg, scfg: ServeConfig, n_prefix_pages: int,
+                         *, policy=None):
+    """Jitted :func:`make_cached_admit_step`, caches/state/pages donated.
+    One executable per (arch × serve shape × prefix-page count) — the
+    prefix-page counts are bounded by ``prompt_len / page_size``, so the
+    program cache stays small."""
+    key_scfg = dataclasses.replace(scfg, chunk=0)
+    return _cached_program(
+        ("cached_admit", cfg, key_scfg, int(n_prefix_pages), id(policy)),
+        policy,
+        lambda: jax.jit(
+            make_cached_admit_step(cfg, scfg, n_prefix_pages, policy=policy),
+            donate_argnums=(2, 3, 4)),
+    )
+
+
+def make_page_push():
+    """push(pages, pids (K,)) -> pages — return evicted prefix-cache pages
+    (host decision: refcount hit 0 and the LRU chose them) to the device
+    free stack.  ``pids`` entries < 0 are padding.  Jit with
+    ``donate_argnums=(0,)``."""
+
+    def push(pages: PageState, pids):
+        scratch = pages.free.shape[0] - 1
+        valid = pids >= 0
+        rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+        idx = jnp.where(valid, pages.free_top + rank, scratch)
+        free = pages.free.at[idx].set(pids)
+        return pages._replace(
+            free=free, free_top=pages.free_top + valid.sum(dtype=jnp.int32))
+
+    return push
+
+
+def page_push_program():
+    """Jitted :func:`make_page_push` (page state donated); one cached
+    executable, re-traced per pid-vector shape by jit itself."""
+    return _cached_program(
+        ("page_push",), None,
+        lambda: jax.jit(make_page_push(), donate_argnums=(0,)),
     )
 
 

@@ -9,7 +9,7 @@ admission control.
 
 from __future__ import annotations
 
-from typing import Dict, Hashable, Optional
+from typing import Dict, Hashable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,17 @@ class PagedKVPool:
     its quota.  Over-subscription is expressed through quotas: the sum of
     quotas may exceed the pool (that is the point of paging) — the pool
     bound is enforced on actual reservations.
+
+    **Shared pages** (the prefix cache, ``serving.prefix_cache``) are the
+    one place the ledger tracks *ids*, not counts: a page whose contents are
+    reusable across requests is moved out of its admitting owner's count
+    (:meth:`share`) into a per-namespace shared set with a per-page
+    **refcount** of active users (:meth:`acquire`/:meth:`release`).  A
+    shared page is recyclable only at ``refcount == 0`` and only through an
+    explicit cache eviction (:meth:`drop_shared`) — until then it stays off
+    the free side of the conservation equation:
+
+        free + Σ owner counts (private) + #shared == n_pages
     """
 
     def __init__(self, n_pages: int, page_size: int) -> None:
@@ -100,11 +111,13 @@ class PagedKVPool:
         self.page_size = int(page_size)
         self._held: Dict[Hashable, int] = {}
         self._quota: Dict[Hashable, int] = {}
+        self._shared: Dict[int, Hashable] = {}   # page id -> owning namespace
+        self._ref: Dict[int, int] = {}           # page id -> active users
 
     # -- queries --------------------------------------------------------
     @property
     def used(self) -> int:
-        return sum(self._held.values())
+        return sum(self._held.values()) + len(self._shared)
 
     @property
     def available(self) -> int:
@@ -160,6 +173,77 @@ class PagedKVPool:
             self._held.pop(owner, None)
         return n
 
+    # -- shared pages (prefix cache) ------------------------------------
+    @property
+    def shared(self) -> int:
+        """Pages currently owned by prefix-cache namespaces."""
+        return len(self._shared)
+
+    def shared_by(self, namespace: Hashable) -> int:
+        return sum(1 for ns in self._shared.values() if ns == namespace)
+
+    def pinned_shared(self) -> int:
+        """Shared pages with at least one active user — the set a lease
+        shrink cannot reclaim without faulting a live request."""
+        return sum(1 for pid, rc in self._ref.items() if rc > 0)
+
+    def refcount(self, page_id: int) -> int:
+        return self._ref.get(int(page_id), 0)
+
+    def share(self, owner: Hashable, namespace: Hashable,
+              page_ids: Iterable[int]) -> None:
+        """Move pages out of ``owner``'s private count into ``namespace``'s
+        shared set (billed once to the namespace, refcount 0 — callers
+        :meth:`acquire` separately for each active user)."""
+        pids = [int(p) for p in page_ids]
+        if not pids:
+            return
+        held = self.held_by(owner)
+        if len(pids) > held:
+            raise PageQuotaError(
+                f"owner {owner!r} shares {len(pids)} pages but holds {held}")
+        for pid in pids:
+            if pid in self._shared:
+                raise PageQuotaError(f"page {pid} is already shared")
+            if not (0 <= pid < self.n_pages):
+                raise PageQuotaError(f"page id {pid} outside the pool")
+            self._shared[pid] = namespace
+            self._ref[pid] = 0
+        self.free(owner, len(pids))
+
+    def acquire(self, page_ids: Iterable[int]) -> None:
+        """Register one more active user on each shared page."""
+        for pid in page_ids:
+            pid = int(pid)
+            if pid not in self._shared:
+                raise PageQuotaError(f"acquire of unshared page {pid}")
+            self._ref[pid] += 1
+
+    def release(self, page_ids: Iterable[int]) -> None:
+        """Drop one active user from each shared page.  A page that reaches
+        refcount 0 stays shared (its contents are the cache's value) until
+        an eviction calls :meth:`drop_shared`."""
+        for pid in page_ids:
+            pid = int(pid)
+            if self._ref.get(pid, 0) < 1:
+                raise PageQuotaError(f"release of page {pid} without users")
+            self._ref[pid] -= 1
+
+    def drop_shared(self, page_ids: Iterable[int]) -> int:
+        """Evict pages from the shared set (cache eviction); they become
+        free.  Only refcount-0 pages may be dropped; returns how many were."""
+        pids = [int(p) for p in page_ids]
+        for pid in pids:
+            if pid not in self._shared:
+                raise PageQuotaError(f"drop of unshared page {pid}")
+            if self._ref.get(pid, 0) != 0:
+                raise PageQuotaError(
+                    f"page {pid} evicted with {self._ref[pid]} active users")
+        for pid in pids:
+            del self._shared[pid]
+            del self._ref[pid]
+        return len(pids)
+
     def check(self) -> None:
         """Conservation + quota invariants; raises :class:`PageQuotaError`."""
         if self.used > self.n_pages:
@@ -172,6 +256,13 @@ class PagedKVPool:
                 raise PageQuotaError(
                     f"owner {owner!r} holds {held} > quota "
                     f"{self.quota_of(owner)}")
+        if set(self._ref) != set(self._shared):
+            raise PageQuotaError("refcount table drifted from the shared set")
+        for pid, rc in self._ref.items():
+            if rc < 0:
+                raise PageQuotaError(f"shared page {pid} has refcount {rc}")
+            if not (0 <= pid < self.n_pages):
+                raise PageQuotaError(f"shared page id {pid} outside the pool")
 
     def page_bytes(self, cfg) -> int:
         return page_bytes(cfg, self.page_size)

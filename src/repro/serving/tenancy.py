@@ -343,6 +343,24 @@ class ServingExecutor:
         if self.completion_sink is not None:
             self.completion_sink(record)
 
+    def note_drop(self, record: RequestRecord) -> None:
+        """Report a request shed by the drop policy (deadline passed before
+        start): it counts as offered-but-unserved in :meth:`slo_report` —
+        never toward the latency EWMA (it has no service time)."""
+        record.dropped = True
+        counts = self._slo_counts.setdefault(
+            record.tenant, {"n": 0, "met": 0})
+        counts["n"] += 1
+        counts["dropped"] = counts.get("dropped", 0) + 1
+
+    def note_shared_kv(self, tenant: str, pages: int) -> None:
+        """Report how many of ``tenant``'s kv pages currently back its
+        shared prefix cache (``ContinuousBatcher.stats.shared_pages``):
+        recorded on the pool (``ResourcePool.note_shared_kv``) so
+        ``kv_pages_proportional`` treats the pinned set as a soft floor and
+        ``check_kv_quota`` audits it each event."""
+        self.pool.note_shared_kv(tenant, pages)
+
     def estimate_latency(self, spec: TenantSpec, n_cores: int) -> Optional[float]:
         """Demand model for ``latency_slo``: the registered model when there
         is one, else the measured EWMA extrapolated from the lease size it
@@ -366,6 +384,7 @@ class ServingExecutor:
             out[tenant] = {
                 "requests": counts["n"],
                 "slo_met": counts["met"],
+                "dropped": counts.get("dropped", 0),
                 "attainment": counts["met"] / counts["n"] if counts["n"] else None,
                 "ewma_latency": ewma[0] if ewma is not None else None,
             }
@@ -447,6 +466,13 @@ class ServingExecutor:
             table.pop(name, None)
 
     def exec_request(self, name: str, record: RequestRecord, at: float) -> None:
+        # drop policy at the delivery point: a request whose deadline
+        # already passed before it could even reach the tenant's batcher is
+        # shed here (counted in slo_report), not handed to a sink that
+        # would serve it hopelessly late
+        if record.deadline is not None and at > record.deadline:
+            self.note_drop(record)
+            return
         sink = self._request_sinks.get(name)
         if sink is not None:
             sink(record)

@@ -67,7 +67,9 @@ SCRIPT = textwrap.dedent("""
     not hasattr(jax, "shard_map"),
     reason="partial-manual shard_map (length-sharded KV slot write) emits a "
            "PartitionId op that the SPMD partitioner of jax<0.6 cannot "
-           "handle; requires the jax.shard_map API",
+           "handle; needs jax >= 0.6.0 (where shard_map graduated from "
+           "jax.experimental to the top-level jax.shard_map API) — this "
+           f"container has jax {jax.__version__}",
 )
 def test_sharded_kv_decode_matches_reference():
     """The partial-manual shard_map slot update (length-sharded KV cache)
