@@ -18,7 +18,12 @@ build when
 * the fresh ``BENCH_prefix.json`` no longer meets the shared-prefix-cache
   acceptance at 90% prompt overlap: cached admission throughput below
   1.3x cold, prefill tokens skipped below 80%, or cache hit rate below
-  0.8 — again cached-vs-cold on one host, gated exactly.
+  0.8 — again cached-vs-cold on one host, gated exactly, or
+* a ``paged_pallas`` / ``cached_pallas`` kernel leg that ran **compiled**
+  (``"interpret": false`` in the row) fell below 1.0x the XLA leg's
+  tokens/s.  Kernel-vs-XLA is same-host/same-run, so the floor is exact
+  and host-independent; interpret-mode legs (CPU CI) record the ratio but
+  are never gated — they measure the Pallas emulator, not the kernel.
 
 Absolute tokens/s moves with the host, so the tolerance is deliberately
 loose; the ``CHECK_TOLERANCE`` env var (or ``--tolerance``) can widen it for
@@ -99,6 +104,23 @@ PAGING_TOKENS_RATIO_FLOOR = 0.85
 PREFIX_ADMIT_RATIO_FLOOR = 1.3
 PREFIX_SKIPPED_FRAC_FLOOR = 0.8
 PREFIX_HIT_RATE_FLOOR = 0.8
+KERNEL_TOKENS_RATIO_FLOOR = 1.0
+
+
+def _check_kernel_leg(bench: str, row: dict, xla_row: dict) -> list:
+    """Compiled pallas leg never slower than the same run's XLA leg.
+
+    Same host, same run — the ratio gates exactly.  Interpret-mode rows
+    (CPU CI) are skipped: they measure the emulator, not the kernel."""
+    if row is None:
+        return [f"{bench}: pallas kernel leg missing from snapshot"]
+    if row.get("interpret"):
+        return []
+    ratio = row["tokens_per_s"] / max(xla_row["tokens_per_s"], 1e-9)
+    if ratio < KERNEL_TOKENS_RATIO_FLOOR:
+        return [f"{bench}: compiled pallas leg at {ratio:.3f}x the XLA leg "
+                f"< {KERNEL_TOKENS_RATIO_FLOOR} floor"]
+    return []
 
 
 def check_paging(fresh: dict) -> list:
@@ -130,6 +152,8 @@ def check_paging(fresh: dict) -> list:
     if tok < tok_floor:
         errors.append(
             f"paging: equal-slot tokens/s ratio {tok:.3f} < {tok_floor} floor")
+    errors.extend(
+        _check_kernel_leg("paging", by_mode.get("paged_pallas"), eq_slots))
     return errors
 
 
@@ -162,6 +186,8 @@ def check_prefix(fresh: dict) -> list:
         errors.append(
             f"prefix: hit rate {cached['hit_rate']:.2f} "
             f"< {PREFIX_HIT_RATE_FLOOR} floor at 90% overlap")
+    errors.extend(
+        _check_kernel_leg("prefix", at90.get("cached_pallas"), cached))
     return errors
 
 

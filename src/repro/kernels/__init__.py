@@ -6,6 +6,9 @@ non-TPU backends kernels run with interpret=True (see common.py).
 
   flash_attention  — prefill/training attention (GQA, causal, window)
   decode_attention — flash-decoding vs ring-buffer KV cache
+  paged_attention  — flash-decoding vs paged pool; page-table walk in-kernel
+                     via scalar prefetch (no materialized gather)
+  prefix_attention — suffix prefill vs cached-prefix + fresh K/V (no concat)
   ssd_scan         — Mamba-2 chunked state-space scan
   rmsnorm          — fused normalization
   matmul           — Eq.-1 (PP, ICP, OCP) -> (block_m, block_k, block_n) tiling

@@ -1,0 +1,1 @@
+"""Paged decode attention: flash-decoding against a shared KV page pool."""

@@ -1,0 +1,133 @@
+"""Paged decode-attention Pallas TPU kernel (flash-decoding over a page pool).
+
+One new token per slot attends to K/V scattered across a shared pool of
+fixed-size pages, ``(n_pages + 1, page_size, Hkv, dh)`` with a trash page at
+index ``n_pages``.  The XLA path materializes a gathered
+``(B, max_pages*page_size, Hkv, dh)`` view of the pool before attending —
+the same bytes twice (pool -> gather copy -> attention read).  This kernel
+walks the slot's **page table inside the kernel** instead:
+
+* the page table (and ``cur_pos``) ride in as *scalar-prefetch* operands
+  (``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index maps can
+  pick the physical page ``table[b, j]`` for grid step ``(b, h, j)`` — the
+  gather becomes the DMA schedule, not a materialized array.  Pallas's
+  pipeline double-buffers these page loads across the innermost grid axis
+  (page ``j+1`` streams into VMEM while page ``j`` is being reduced);
+* unmapped logical pages are redirected to the trash page for the *load*
+  (never out of bounds) and masked out of the softmax for the *math*;
+* validity is fused into the online softmax exactly like
+  ``kernels/decode_attention``: paged placement is position-indexed
+  (logical page j, offset o IS absolute position ``j*page_size + o``), so a
+  key is attendable iff its page is mapped and ``pos <= cur_pos`` — no
+  per-token ``pos`` array needed.
+
+Grid = (B, Hkv, max_pages): each cell owns one (slot, kv-head) pair; the
+logical-page axis is innermost and carries the (m, l, acc) online-softmax
+scratch across steps.  All ``group`` q-heads sharing a kv head ride in one
+cell and reuse the streamed page ``group`` times (the GQA
+arithmetic-intensity win, as in the dense decode kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import NEG_INF
+
+
+def _paged_dec_kernel(
+    gather_ref, cur_ref,                      # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref, o_ref,               # blocks (VMEM)
+    m_ref, l_ref, acc_ref,                     # scratch (VMEM)
+    *, page_size: int, n_pages: int, max_pages: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (group, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (ps, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(q.shape[-1]))             # (group, ps)
+
+    # validity fused into the running max/denominator: page mapped
+    # (gather == n_pages means the trash redirect) AND absolute position
+    # (== flat index, by paged placement) not beyond the current token
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], page_size), 1)
+    mapped = gather_ref[b, j] < n_pages
+    valid = jnp.logical_and(mapped, pos <= cur_ref[b])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (group, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * scale + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(
+    q, k_pool, v_pool, gather, cur_pos, *, interpret: bool = False,
+):
+    """q: (B, Hkv, group, dh); k_pool/v_pool: (n_pages + 1, ps, Hkv, dh);
+    gather: (B, max_pages) int32 physical page per logical page, already
+    sanitized (unmapped -> n_pages, the trash page); cur_pos: (B,) int32.
+    Returns (B, Hkv, group, dh)."""
+    B, Hkv, group, dh = q.shape
+    n_pages = k_pool.shape[0] - 1
+    page_size = k_pool.shape[1]
+    max_pages = gather.shape[1]
+
+    grid = (B, Hkv, max_pages)
+    kern = functools.partial(
+        _paged_dec_kernel, page_size=page_size, n_pages=n_pages,
+        max_pages=max_pages,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b, h, j, g_ref, c_ref: (b, h, 0, 0)),
+            # the page walk: physical page id from the prefetched table
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, j, g_ref, c_ref: (g_ref[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, j, g_ref, c_ref: (g_ref[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, dh),
+                               lambda b, h, j, g_ref, c_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),       # m
+            pltpu.VMEM((group, 1), jnp.float32),       # l
+            pltpu.VMEM((group, dh), jnp.float32),      # acc
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, dh), q.dtype),
+        interpret=interpret,
+    )(gather, cur_pos, q, k_pool, v_pool)

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for paged decode attention (model layout adapter).
+
+``paged_decode_attention`` is what
+``models.attention.paged_decode_attention(impl="pallas")`` calls: the raw
+page table (-1 = unmapped) is sanitized to trash-page redirects on the way
+in — the only per-call host-side work; the (B, max_pages*page_size) gather
+of the XLA path is never materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret
+from .kernel import paged_decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q, k_pool, v_pool, page_table, cur_pos, *,
+    interpret: Optional[bool] = None,
+):
+    """q: (B, H, dh); k_pool/v_pool: (n_pages + 1, page_size, Hkv, dh) with
+    the trash page at index ``n_pages``; page_table: (B, max_pages) int32,
+    -1 = unmapped; cur_pos: (B,) int32.  Returns (B, H, dh)."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, H, dh = q.shape
+    Hkv = k_pool.shape[2]
+    group = H // Hkv
+    n_pages = k_pool.shape[0] - 1
+    gather = jnp.where(page_table >= 0, page_table, n_pages).astype(jnp.int32)
+    out = paged_decode_attention_kernel(
+        q.reshape(B, Hkv, group, dh), k_pool, v_pool, gather,
+        cur_pos.astype(jnp.int32), interpret=interpret,
+    )
+    return out.reshape(B, H, dh)

@@ -1,0 +1,1 @@
+"""Prefix-context flash attention: suffix prefill against cached prefix K/V."""

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: materialized-concat prefix attention (the XLA path's
+semantics — concat [prefix; suffix] K/V, causal over the virtual sequence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import NEG_INF
+
+
+def prefix_flash_attention_ref(q, pk, pv, k, v, *, q_offset=0):
+    """Same layout as ``ops.prefix_flash_attention``: q (B, Sq, H, dh),
+    pk/pv (B, Lp, Hkv, dh), k/v (B, Sk, Hkv, dh) → (B, Sq, H, dh).
+    Query row i sits at suffix-local position ``q_offset + i``; it attends
+    to the whole prefix plus suffix cols ``<= q_offset + i``."""
+    B, Sq, H, dh = q.shape
+    Lp = pk.shape[1]
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    group = H // Hkv
+
+    kc = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+    vc = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+
+    qg = q.reshape(B, Sq, Hkv, group, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    rows = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    cols = jnp.arange(Lp + Sk, dtype=jnp.int32) - Lp   # suffix-local; prefix < 0
+    mask = cols[None, :] <= rows[:, None]
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)

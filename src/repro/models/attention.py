@@ -6,9 +6,18 @@ Three compute paths, selected by ``impl``:
   KV blocks).  This is the default for lowering/dry-run: peak memory is
   O(S·block) instead of O(S²), and the HLO stays small.  It is also the
   numerical oracle for the Pallas kernel.
-* ``"pallas"``  — the flash-attention Pallas TPU kernel
-  (``repro.kernels.flash_attention``), validated in interpret mode.
+* ``"pallas"``  — Pallas TPU kernels, validated in interpret mode: dense
+  prefill (``repro.kernels.flash_attention``), dense decode
+  (``repro.kernels.decode_attention``), paged decode
+  (``repro.kernels.paged_attention`` — walks the page table inside the
+  kernel), and prefix-context prefill (``repro.kernels.prefix_attention``
+  — attends to cached-prefix + fresh-suffix K/V without the concat).
 * ``"naive"``   — materialized-scores einsum, used only by tiny tests.
+
+Which impl is legal for which mode is owned by :data:`ATTN_CAPABILITIES`
+(checked at serving-config/batcher construction via
+:func:`check_attn_impl`, so a bad combination fails at build time, not
+three layers deep in a jit trace).
 
 Decode (single new token against a KV cache) uses a separate path; the
 sliding-window archs keep a **ring-buffer** cache of ``min(S, window)`` slots
@@ -26,6 +35,48 @@ import jax.numpy as jnp
 from .layers import apply_mrope, apply_rope, init_dense, init_rmsnorm, rmsnorm
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Capability table: which attn impl is legal for which execution mode
+# ---------------------------------------------------------------------------
+#
+# The single source of truth for impl × mode support.  Serving configs and
+# the batcher validate against this at construction, replacing the
+# NotImplementedErrors that used to fire three layers deep inside a traced
+# decode step.  Modes:
+#   train           — differentiable prefill (self_attention under grad)
+#   dense           — prefill + dense-cache decode
+#   paged           — paged-pool decode (block-granular KV virtualization)
+#   prefix          — suffix prefill against cached prefix K/V
+#   sliding_window  — any path on a sliding-window arch
+
+ATTN_CAPABILITIES = {
+    "train": ("xla", "flash", "pallas", "naive"),
+    "dense": ("xla", "pallas", "naive"),
+    "paged": ("xla", "pallas"),
+    "prefix": ("xla", "pallas", "naive"),
+    "sliding_window": ("xla", "pallas", "naive", "flash"),
+}
+
+
+def check_attn_impl(impl: str, mode: str) -> str:
+    """Validate ``impl`` against :data:`ATTN_CAPABILITIES` for ``mode``.
+
+    Returns ``impl`` unchanged on success so callers can validate inline;
+    raises ``ValueError`` naming the mode and the supported impls otherwise.
+    """
+    try:
+        supported = ATTN_CAPABILITIES[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown attention mode {mode!r}; "
+            f"expected one of {sorted(ATTN_CAPABILITIES)}") from None
+    if impl not in supported:
+        raise ValueError(
+            f"attn_impl={impl!r} is not supported for mode {mode!r}; "
+            f"supported: {supported}")
+    return impl
 
 
 # ---------------------------------------------------------------------------
@@ -340,24 +391,26 @@ def self_attention(
     if prefix_kv is not None:
         if cfg.sliding_window:
             raise ValueError("prefix_kv requires a non-sliding-window arch")
-        if impl == "pallas":
-            # no Pallas path: silently switching kernels would break the
-            # cached==cold token-identity contract (different accumulation
-            # order), so reject loudly like paged_decode_attention does
-            raise NotImplementedError(
-                "prefix-context prefill has no Pallas kernel yet; "
-                "use attn_impl='xla'")
         pk, pv = prefix_kv
         Lp = pk.shape[1]
-        k_att = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
-        v_att = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
-        if impl == "naive":
-            out = naive_attention(q, k_att, v_att, causal=causal,
-                                  q_offset=q_offset + Lp)
+        if impl == "pallas":
+            from repro.kernels.prefix_attention import ops as pfx_ops
+
+            # prefix and suffix K/V stay separate operands — the kernel
+            # streams both phases over one grid axis; no concat copy
+            out = pfx_ops.prefix_flash_attention(
+                q, pk.astype(k.dtype), pv.astype(v.dtype), k, v,
+                q_offset=q_offset)
         else:
-            out = chunked_flash_attention(q, k_att, v_att, causal=causal,
-                                          q_offset=q_offset + Lp,
-                                          block_k=block_k)
+            k_att = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+            v_att = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+            if impl == "naive":
+                out = naive_attention(q, k_att, v_att, causal=causal,
+                                      q_offset=q_offset + Lp)
+            else:
+                out = chunked_flash_attention(q, k_att, v_att, causal=causal,
+                                              q_offset=q_offset + Lp,
+                                              block_k=block_k)
         B, S, _, _ = q.shape
         y = out.reshape(B, S, cfg.q_dim) @ params["wo"]
         return y, (k, v)
@@ -564,18 +617,20 @@ def paged_decode_attention(params, x, cache: PagedKVView, cur_pos, page_table,
     page_table: (B, max_pages) int32 physical page per logical page.
 
     The new token's K/V is written at (page_table[b, cur_pos // ps],
-    cur_pos % ps); unmapped slots write to the trash page.  Attention
-    gathers the slot's pages into a (B, max_pages*ps, Hkv, dh) view —
-    the same bytes the dense path reads — masked to mapped pages and
-    positions <= cur_pos.
+    cur_pos % ps); unmapped slots write to the trash page.
 
-    Only the XLA path exists so far: the Pallas decode kernel and the
-    length-sharded ``kv_slot_update`` policy hook are dense-cache-only,
-    so both are rejected loudly instead of silently falling back.
+    ``impl="xla"`` gathers the slot's pages into a
+    (B, max_pages*ps, Hkv, dh) view before attending — the pool bytes
+    twice (gather copy + attention read).  ``impl="pallas"``
+    (``repro.kernels.paged_attention``) walks the page table inside the
+    kernel instead: the table rides in as a scalar-prefetch operand and
+    becomes the DMA schedule, so only the mapped pages' bytes move, once.
+    The XLA path stays as the numerical oracle.
+
+    The length-sharded ``kv_slot_update`` policy hook is
+    dense-cache-only and is rejected loudly instead of silently falling
+    back.
     """
-    if impl == "pallas":
-        raise NotImplementedError(
-            "paged decode has no Pallas kernel yet; use attn_impl='xla'")
     if policy is not None and getattr(policy, "kv_len_sharded", False):
         raise NotImplementedError(
             "paged decode does not support a length-sharded KV cache")
@@ -596,17 +651,23 @@ def paged_decode_attention(params, x, cache: PagedKVView, cur_pos, page_table,
     k = cache.k.at[dest, off].set(k_new[:, 0])
     v = cache.v.at[dest, off].set(v_new[:, 0])
 
-    gather = jnp.where(page_table >= 0, page_table, P)         # (B, maxp)
-    kg = k[gather]                                             # (B, maxp, ps, Hkv, dh)
-    vg = v[gather]
-    maxp = page_table.shape[1]
-    L = maxp * ps
-    kg = kg.reshape(B, L, cfg.n_kv_heads, cfg.d_head)
-    vg = vg.reshape(B, L, cfg.n_kv_heads, cfg.d_head)
-    pos_l = jnp.arange(L, dtype=jnp.int32)                     # flat == absolute
-    valid = (page_table >= 0)[:, pos_l // ps] & (pos_l[None, :] <= cur_pos[:, None])
+    if impl == "pallas":
+        from repro.kernels.paged_attention import ops as pa_ops
 
-    out = _paged_attn_xla(q, kg, vg, valid, cfg)
+        out = pa_ops.paged_decode_attention(
+            q[:, 0], k, v, page_table, cur_pos)[:, None]
+    else:
+        gather = jnp.where(page_table >= 0, page_table, P)     # (B, maxp)
+        kg = k[gather]                                         # (B, maxp, ps, Hkv, dh)
+        vg = v[gather]
+        maxp = page_table.shape[1]
+        L = maxp * ps
+        kg = kg.reshape(B, L, cfg.n_kv_heads, cfg.d_head)
+        vg = vg.reshape(B, L, cfg.n_kv_heads, cfg.d_head)
+        pos_l = jnp.arange(L, dtype=jnp.int32)                 # flat == absolute
+        valid = (page_table >= 0)[:, pos_l // ps] & (
+            pos_l[None, :] <= cur_pos[:, None])
+        out = _paged_attn_xla(q, kg, vg, valid, cfg)
     y = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
     return y, PagedKVView(k=k, v=v)
 

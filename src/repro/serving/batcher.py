@@ -87,6 +87,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import check_attn_impl
 from repro.models.transformer import (
     Caches, init_caches, init_paged_caches, period_structure,
 )
@@ -222,6 +223,14 @@ class ContinuousBatcher:
         scfg = ServeConfig(max_len=max_len, attn_impl=attn_impl,
                            chunk=self.chunk)
         self.scfg = scfg
+        # one shared capability table (models.attention.ATTN_CAPABILITIES)
+        # gates every mode this batcher will exercise, at construction
+        if paged:
+            check_attn_impl(attn_impl, "paged")
+        if prefix_cache:
+            check_attn_impl(attn_impl, "prefix")
+        if cfg.sliding_window:
+            check_attn_impl(attn_impl, "sliding_window")
         self._policy = policy
         self.paged = paged
         self._clock = clock if clock is not None else time.monotonic

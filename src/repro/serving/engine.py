@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import decode_step, encoder_forward, prefill, prefix_prefill
+from repro.models.attention import check_attn_impl
 from repro.models.transformer import Caches
 
 from .kv_cache import pages_for
@@ -63,10 +64,16 @@ def _logit_mask(vocab: int, vocab_padded: int):
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_len: int
-    attn_impl: str = "xla"       # xla | pallas
+    attn_impl: str = "xla"       # see models.attention.ATTN_CAPABILITIES
     greedy: bool = True
     temperature: float = 1.0
     chunk: int = 8               # max decode steps fused per device dispatch
+
+    def __post_init__(self):
+        # fail at config construction, not three layers into a jit trace;
+        # mode-specific checks (paged/prefix/sliding_window) happen where
+        # the mode is known — ContinuousBatcher.__init__
+        check_attn_impl(self.attn_impl, "dense")
 
     def logit_mask(self, cfg):
         return _logit_mask(cfg.vocab, cfg.vocab_padded)

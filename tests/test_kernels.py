@@ -144,3 +144,128 @@ class TestSSDScan:
                                    rtol=2e-3, atol=2e-3)
         np.testing.assert_allclose(np.asarray(got_y), np.asarray(ref_y),
                                    rtol=2e-3, atol=2e-3)
+
+
+class TestPagedDecodeAttention:
+    """In-kernel page-table walk vs the materialized-gather oracle.
+
+    The trash page is poisoned with large finite values (1e4) so any
+    unmapped-page or beyond-cur_pos leak shows up as a loud mismatch
+    instead of averaging away (NaN would poison the oracle too)."""
+
+    def _pools(self, key, P, ps, Hkv, dh):
+        kk, kv = jax.random.split(key)
+        kp = jax.random.normal(kk, (P + 1, ps, Hkv, dh), jnp.float32)
+        vp = jax.random.normal(kv, (P + 1, ps, Hkv, dh), jnp.float32)
+        # poisoned trash page: leaks are loud, not averaged away
+        return kp.at[P].set(1e4), vp.at[P].set(1e4)
+
+    @pytest.mark.parametrize("H,Hkv", [(4, 2), (8, 1), (8, 8)])
+    def test_matches_ref(self, H, Hkv):
+        from repro.kernels.paged_attention import ops, ref
+
+        B, dh, P, ps, maxp = 3, 32, 10, 8, 4
+        kq, kp_key = jax.random.split(KEY)
+        q = jax.random.normal(kq, (B, H, dh), jnp.float32)
+        kp, vp = self._pools(kp_key, P, ps, Hkv, dh)
+        # rows: unmapped holes mid-table; cur_pos mid-page (partial last
+        # page), at a page boundary - 1, and at full capacity
+        table = jnp.asarray([[0, 3, -1, -1], [5, -1, 7, -1], [2, 4, 6, 8]],
+                            jnp.int32)
+        cur = jnp.asarray([9, 23, 31], jnp.int32)
+        got = ops.paged_decode_attention(q, kp, vp, table, cur, interpret=True)
+        want = ref.paged_decode_attention_ref(q, kp, vp, table, cur)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_page_boundary_sweep(self):
+        """cur_pos crossing every position of a 2-page window: the fused
+        `pos <= cur_pos` mask must flip exactly one key per step."""
+        from repro.kernels.paged_attention import ops, ref
+
+        B, H, Hkv, dh, P, ps = 1, 4, 2, 32, 4, 8
+        kq, kp_key = jax.random.split(KEY)
+        kp, vp = self._pools(kp_key, P, ps, Hkv, dh)
+        table = jnp.asarray([[1, 2]], jnp.int32)
+        for cur in range(2 * ps):
+            q = jax.random.normal(jax.random.fold_in(kq, cur), (B, H, dh),
+                                  jnp.float32)
+            c = jnp.asarray([cur], jnp.int32)
+            got = ops.paged_decode_attention(q, kp, vp, table, c,
+                                             interpret=True)
+            want = ref.paged_decode_attention_ref(q, kp, vp, table, c)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-4, atol=2e-4, err_msg=f"cur={cur}")
+
+    def test_fully_unmapped_slot_is_finite(self):
+        """An inactive slot (all pages -1) must not produce NaN/inf — the
+        batcher keeps dead slots decoding with frozen positions."""
+        from repro.kernels.paged_attention import ops
+
+        B, H, Hkv, dh, P, ps = 2, 4, 2, 32, 4, 8
+        q = jax.random.normal(KEY, (B, H, dh), jnp.float32)
+        kp, vp = self._pools(jax.random.fold_in(KEY, 1), P, ps, Hkv, dh)
+        table = jnp.full((B, 2), -1, jnp.int32)
+        cur = jnp.zeros((B,), jnp.int32)
+        got = ops.paged_decode_attention(q, kp, vp, table, cur, interpret=True)
+        assert np.isfinite(np.asarray(got)).all()
+
+
+class TestPrefixAttention:
+    """Two-phase (cached prefix, fresh suffix) kernel vs the concat oracle."""
+
+    @pytest.mark.parametrize("H,Hkv", [(4, 2), (8, 1), (8, 8)])
+    @pytest.mark.parametrize("Lp,Sq,qo", [(28, 4, 0), (10, 7, 3), (33, 9, 0)])
+    def test_matches_ref(self, H, Hkv, Lp, Sq, qo):
+        from repro.kernels.prefix_attention import ops, ref
+
+        B, dh, Sk = 2, 32, Sq + qo
+        kq, kp, kv, kk2, kv2 = jax.random.split(KEY, 5)
+        q = jax.random.normal(kq, (B, Sq, H, dh), jnp.float32)
+        pk = jax.random.normal(kp, (B, Lp, Hkv, dh), jnp.float32)
+        pv = jax.random.normal(kv, (B, Lp, Hkv, dh), jnp.float32)
+        k = jax.random.normal(kk2, (B, Sk, Hkv, dh), jnp.float32)
+        v = jax.random.normal(kv2, (B, Sk, Hkv, dh), jnp.float32)
+        got = ops.prefix_flash_attention(q, pk, pv, k, v, q_offset=qo,
+                                         block_q=8, block_k=16, interpret=True)
+        want = ref.prefix_flash_attention_ref(q, pk, pv, k, v, q_offset=qo)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_multi_block_both_phases(self):
+        """Prefix and suffix each span several k blocks; q spans several
+        q blocks — exercises the clamped index maps on both operands."""
+        from repro.kernels.prefix_attention import ops, ref
+
+        B, H, Hkv, dh, Lp, Sq = 1, 4, 2, 32, 21, 18
+        kq, kp, kv, kk2, kv2 = jax.random.split(KEY, 5)
+        q = jax.random.normal(kq, (B, Sq, H, dh), jnp.float32)
+        pk = jax.random.normal(kp, (B, Lp, Hkv, dh), jnp.float32)
+        pv = jax.random.normal(kv, (B, Lp, Hkv, dh), jnp.float32)
+        k = jax.random.normal(kk2, (B, Sq, Hkv, dh), jnp.float32)
+        v = jax.random.normal(kv2, (B, Sq, Hkv, dh), jnp.float32)
+        got = ops.prefix_flash_attention(q, pk, pv, k, v, block_q=4,
+                                         block_k=4, interpret=True)
+        want = ref.prefix_flash_attention_ref(q, pk, pv, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_matches_self_attention_xla_path(self):
+        """Kernel == the model's concat XLA path on bf16-cast prefix pages
+        (the dtype round-trip cached admission actually performs)."""
+        from repro.kernels.prefix_attention import ops
+        from repro.models.attention import chunked_flash_attention
+
+        B, H, Hkv, dh, Lp, Sq = 2, 4, 2, 32, 16, 8
+        kq, kp, kv, kk2, kv2 = jax.random.split(KEY, 5)
+        q = jax.random.normal(kq, (B, Sq, H, dh), jnp.float32)
+        pk = jax.random.normal(kp, (B, Lp, Hkv, dh), jnp.float32)
+        pv = jax.random.normal(kv, (B, Lp, Hkv, dh), jnp.float32)
+        k = jax.random.normal(kk2, (B, Sq, Hkv, dh), jnp.float32)
+        v = jax.random.normal(kv2, (B, Sq, Hkv, dh), jnp.float32)
+        got = ops.prefix_flash_attention(q, pk, pv, k, v, interpret=True)
+        want = chunked_flash_attention(
+            q, jnp.concatenate([pk, k], axis=1),
+            jnp.concatenate([pv, v], axis=1), causal=True, q_offset=Lp)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -316,3 +316,75 @@ class TestMigration:
         assert all(r.done for r in reqs)
         assert b.stats.peak_pages_in_use <= hv.kv_allocation()["t"]
         _assert_pool_invariants(b)
+
+
+@pytest.fixture(scope="module")
+def qwen_f32():
+    """f32 variant: Pallas-vs-XLA token identity needs both paths to see
+    numerically equal inputs (bf16 would make argmax ties dtype-lottery)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_reduced("qwen3-0.6b"), dtype="float32",
+                              name="qwen3-0.6b-f32")
+    return cfg, init_params(cfg, KEY)
+
+
+class TestPallasPagedServing:
+    """attn_impl="pallas" on the paged path: the in-kernel page-table walk
+    (repro.kernels.paged_attention) must emit the same token streams as the
+    materialized-gather XLA oracle, end to end through the batcher."""
+
+    def test_pallas_matches_xla_tokens(self, qwen_f32):
+        cfg, params = qwen_f32
+        prompts = _prompts(cfg, 8)
+        _, xla = _run(params, cfg, prompts, paged=True, page_size=8)
+        bp, pal = _run(params, cfg, prompts, paged=True, page_size=8,
+                       attn_impl="pallas")
+        for a, g in zip(xla, pal):
+            assert a.done and g.done
+            assert a.out == g.out, (a.rid, a.out, g.out)
+        _assert_pool_invariants(bp)
+
+    def test_pallas_page_boundary_crossing(self, qwen_f32):
+        """page_size=4 forces in-kernel walks over several boundary
+        crossings and unmapped tail pages; streams stay identical."""
+        cfg, params = qwen_f32
+        prompts = _prompts(cfg, 6, seed=5)
+        _, xla = _run(params, cfg, prompts, max_new=14, paged=True,
+                      page_size=4)
+        _, pal = _run(params, cfg, prompts, max_new=14, paged=True,
+                      page_size=4, attn_impl="pallas")
+        for a, g in zip(xla, pal):
+            assert a.out == g.out, (a.rid, a.out, g.out)
+
+
+class TestAttnCapabilities:
+    """Bad impl × mode combinations fail at construction time with a
+    ValueError from the shared capability table — not three layers deep
+    inside a jit trace."""
+
+    def test_paged_rejects_naive_at_construction(self, qwen):
+        cfg, params = qwen
+        with pytest.raises(ValueError, match="paged"):
+            ContinuousBatcher(params, cfg, slots=2, prompt_len=8, max_len=32,
+                              paged=True, page_size=8, attn_impl="naive")
+
+    def test_paged_rejects_flash_at_construction(self, qwen):
+        # "flash" (the train-only custom-VJP path) already fails the dense
+        # check inside ServeConfig, before the batcher's paged check
+        cfg, params = qwen
+        with pytest.raises(ValueError, match="not supported"):
+            ContinuousBatcher(params, cfg, slots=2, prompt_len=8, max_len=32,
+                              paged=True, page_size=8, attn_impl="flash")
+
+    def test_serve_config_rejects_unknown_impl(self):
+        from repro.serving.engine import ServeConfig
+        with pytest.raises(ValueError, match="attn_impl"):
+            ServeConfig(max_len=32, attn_impl="cuda")
+
+    def test_table_covers_every_mode(self):
+        from repro.models.attention import ATTN_CAPABILITIES, check_attn_impl
+        for mode, impls in ATTN_CAPABILITIES.items():
+            for impl in impls:
+                assert check_attn_impl(impl, mode) == impl
+        with pytest.raises(ValueError, match="unknown attention mode"):
+            check_attn_impl("xla", "teleport")

@@ -277,6 +277,30 @@ class TestCachedIdentity:
             ContinuousBatcher(params, cfg, slots=2, prompt_len=8, max_len=32,
                               prefix_cache=True)     # paged=False
 
+    def test_pallas_warm_wave_matches_xla_cold(self, qwen_f32):
+        """attn_impl="pallas" end to end: cached admission runs the
+        prefix-context kernel (repro.kernels.prefix_attention) and decode
+        the paged kernel; streams must match a cache-off XLA batcher — the
+        cached==cold contract must survive the kernel swap."""
+        cfg, params = qwen_f32
+        prompts = _shared_prompts(cfg, 8, seed=1)
+
+        def reqs():
+            return [Request(rid=i, prompt=p, max_new=6 + i % 3, namespace="s")
+                    for i, p in enumerate(prompts)]
+
+        cold = reqs()
+        _run(_batcher(params, cfg), cold)            # XLA, no prefix cache
+        warm_b = _batcher(params, cfg, prefix_cache=True, attn_impl="pallas")
+        warm = reqs()
+        _run(warm_b, warm)
+        for a, g in zip(cold, warm):
+            assert a.done and g.done
+            assert a.out == g.out, (a.rid, a.out, g.out)
+        assert warm_b.stats.prefix_hits > 0          # kernel path actually ran
+        assert warm_b.stats.prefill_tokens_skipped > 0
+        _assert_conservation(warm_b)
+
 
 # ---------------------------------------------------------------------------
 # conservation with refcounted shares under churn
