@@ -23,12 +23,20 @@ build when
   (``"interpret": false`` in the row) fell below 1.0x the XLA leg's
   tokens/s.  Kernel-vs-XLA is same-host/same-run, so the floor is exact
   and host-independent; interpret-mode legs (CPU CI) record the ratio but
-  are never gated — they measure the Pallas emulator, not the kernel.
+  are never gated — they measure the Pallas emulator, not the kernel, or
+* the fresh ``BENCH_chaos.json`` no longer meets the fault-tolerance
+  acceptance: goodput retention under the seeded fault schedule below
+  0.7, a displaced tenant never re-placed, any token divergence outside
+  the fault domain, or a non-deterministic seeded replay.
 
 Absolute tokens/s moves with the host, so the tolerance is deliberately
 loose; the ``CHECK_TOLERANCE`` env var (or ``--tolerance``) can widen it for
 known-slow runners.  Structural metrics (dispatches per token, the SLO
 policy ordering) are host-independent and checked tightly.
+
+A missing, unparseable, or schema-drifted snapshot is itself a gate
+failure, reported as a one-line ``REGRESSION:`` message — never a
+traceback.
 
     python -m benchmarks.check_regression \
         --baseline experiments/bench --fresh "$BENCH_OUT"
@@ -42,9 +50,25 @@ import os
 import sys
 
 
+class SnapshotError(Exception):
+    """A BENCH_*.json that cannot be used: absent, unparseable, or not the
+    shape the checkers expect.  Reported as a clear gate failure, never a
+    traceback."""
+
+
 def _load(path: str) -> dict:
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except FileNotFoundError:
+        raise SnapshotError(f"{path} missing (did the bench run?)")
+    except json.JSONDecodeError as e:
+        raise SnapshotError(f"{path} is not valid JSON: {e}")
+    if not isinstance(snap, dict):
+        raise SnapshotError(
+            f"{path} holds a {type(snap).__name__}, expected a snapshot "
+            f"object — re-generate it with `python -m benchmarks.run`")
+    return snap
 
 
 def _serving_rows(snapshot: dict) -> dict:
@@ -105,6 +129,7 @@ PREFIX_ADMIT_RATIO_FLOOR = 1.3
 PREFIX_SKIPPED_FRAC_FLOOR = 0.8
 PREFIX_HIT_RATE_FLOOR = 0.8
 KERNEL_TOKENS_RATIO_FLOOR = 1.0
+CHAOS_GOODPUT_FLOOR = 0.7
 
 
 def _check_kernel_leg(bench: str, row: dict, xla_row: dict) -> list:
@@ -191,6 +216,50 @@ def check_prefix(fresh: dict) -> list:
     return errors
 
 
+def check_chaos(fresh: dict) -> list:
+    """Recorded acceptance bits AND the re-derived fault-tolerance floors:
+    goodput retention under the seeded fault schedule, full recovery of
+    every displaced tenant, zero token divergence outside the fault
+    domain, and a deterministic replay."""
+    errors = []
+    for bit in ("acceptance_goodput", "acceptance_recovery",
+                "acceptance_isolation", "acceptance_determinism"):
+        if not fresh.get(bit):
+            errors.append(f"chaos: snapshot does not record {bit}")
+    rows = {(row["leg"], row["mode"]): row for row in fresh.get("rows", [])}
+    pool = rows.get(("pool", "chaos"))
+    srv = rows.get(("serving", "chaos"))
+    if not (pool and srv):
+        errors.append(f"chaos: chaos-mode rows missing, have {sorted(rows)}")
+        return errors
+    if pool["goodput_retention"] < CHAOS_GOODPUT_FLOOR:
+        errors.append(
+            f"chaos: goodput retention {pool['goodput_retention']:.3f} "
+            f"< {CHAOS_GOODPUT_FLOOR} floor under the seeded faults")
+    if pool["unrecovered"]:
+        errors.append(
+            f"chaos: {pool['unrecovered']} displaced tenant(s) never "
+            f"re-placed by the horizon")
+    if not srv["tenant_b_token_identical"]:
+        errors.append(
+            "chaos: fault-free tenant's token streams diverged under "
+            "injected faults (cross-tenant blast radius)")
+    if not (pool["deterministic"] and srv["deterministic"]):
+        errors.append("chaos: seeded chaos replay was not deterministic")
+    return errors
+
+
+def _guard(name: str, fn, *snaps) -> list:
+    """Run one checker, translating schema drift into a clear gate failure
+    instead of a traceback: a malformed snapshot IS a regression."""
+    try:
+        return fn(*snaps)
+    except (KeyError, TypeError, AttributeError, IndexError) as e:
+        return [f"{name}: snapshot schema mismatch "
+                f"({type(e).__name__}: {e}) — re-generate it with "
+                f"`python -m benchmarks.run {name}`"]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="experiments/bench",
@@ -205,30 +274,22 @@ def main(argv=None) -> int:
 
     errors = []
     try:
-        errors = check_serving(
+        errors = _guard(
+            "serving", check_serving,
             _load(os.path.join(args.baseline, "BENCH_serving.json")),
             _load(os.path.join(args.fresh, "BENCH_serving.json")),
             args.tolerance,
         )
-    except FileNotFoundError as e:
-        errors.append(f"serving: missing snapshot: {e.filename}")
-    slo_path = os.path.join(args.fresh, "BENCH_slo.json")
-    if os.path.exists(slo_path):
-        errors.extend(check_slo(_load(slo_path)))
-    else:
-        errors.append(f"slo: {slo_path} missing (bench_slo did not run?)")
-    paging_path = os.path.join(args.fresh, "BENCH_paging.json")
-    if os.path.exists(paging_path):
-        errors.extend(check_paging(_load(paging_path)))
-    else:
-        errors.append(
-            f"paging: {paging_path} missing (bench_paging did not run?)")
-    prefix_path = os.path.join(args.fresh, "BENCH_prefix.json")
-    if os.path.exists(prefix_path):
-        errors.extend(check_prefix(_load(prefix_path)))
-    else:
-        errors.append(
-            f"prefix: {prefix_path} missing (bench_prefix did not run?)")
+    except SnapshotError as e:
+        errors.append(f"serving: {e}")
+    for name, checker in (("slo", check_slo), ("paging", check_paging),
+                          ("prefix", check_prefix), ("chaos", check_chaos)):
+        try:
+            snap = _load(os.path.join(args.fresh, f"BENCH_{name}.json"))
+        except SnapshotError as e:
+            errors.append(f"{name}: {e}")
+            continue
+        errors.extend(_guard(name, checker, snap))
 
     if errors:
         for e in errors:

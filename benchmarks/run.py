@@ -26,6 +26,7 @@ BENCHES = [
     ("slo", "bench_slo", "beyond-paper — SLO attainment under open-loop Poisson traffic"),
     ("paging", "bench_paging", "beyond-paper — paged KV pool capacity at equal HBM"),
     ("prefix", "bench_prefix", "beyond-paper — shared-prefix KV cache admission speedup"),
+    ("chaos", "bench_chaos", "beyond-paper — seeded fault injection, recovery, blast radius"),
 ]
 
 

@@ -1,0 +1,119 @@
+"""Fault-domain hypervisor: seeded chaos, detection, tenant recovery.
+
+    PYTHONPATH=src python examples/chaos_serving.py
+
+Two layers of the fault-tolerance story:
+
+1. **Pool chaos (sim)** — a seeded :class:`FaultInjector` drops core
+   deaths and slow cores onto a live three-tenant run.  The hypervisor
+   marks failed cores unplaceable, displaces the owner *inside the same
+   FAILURE event* (``check_health`` holds at every event boundary), parks
+   it with exponential-backoff retries when the shrunken pool can't seat
+   it, and stamps ``recovery_log`` when it is re-placed.  The same seed
+   replays the identical fault schedule — chaos runs are reproducible.
+
+2. **Serving guards (jax)** — a paged ``ContinuousBatcher`` with
+   ``audit=True`` and a watchdog survives injected KV-page-table
+   corruption and a wedged chunk: the audit quarantines the corrupt
+   page and requeues the suspect slot (tokens preserved when they still
+   fit the prompt bucket), the watchdog deactivates the stuck slot
+   instead of stalling the batch, and untouched requests finish with
+   byte-identical tokens — zero cross-tenant blast radius.
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.configs import get_reduced
+from repro.core import (
+    CNN_WORKLOADS, FaultInjector, Hypervisor, PoissonTraffic, ResourcePool,
+    StaticCompiler, TenantSpec, VirtualEngine, fpga_small_core,
+)
+from repro.models import init_params
+from repro.serving.batcher import ContinuousBatcher, Request
+
+
+def pool_chaos() -> None:
+    print("=== pool chaos: seeded faults over a 16-core hypervisor run ===")
+    hw = fpga_small_core()
+    artifact = StaticCompiler(hw, n_tiles=16).compile(
+        CNN_WORKLOADS["mobilenet"]())
+    pool = ResourcePool(16)
+    engine = VirtualEngine(pool, hw, straggler_threshold=1.3)
+    hv = Hypervisor(pool, policy="even_split", executor=engine,
+                    probe_interval=0.1)
+    for i, name in enumerate(("gold", "silver", "bronze")):
+        spec = TenantSpec(name, requested_cores=16, min_cores=1,
+                          artifact=artifact, open_loop=True)
+        hv.schedule_arrival(spec, at=0.0)
+        hv.open_traffic(name, PoissonTraffic(8.0, seed=11 * (i + 1)), 10.0)
+
+    inj = FaultInjector(16, seed=1337, death_rate=0.5, slow_rate=0.3,
+                        repair_after=1.5)
+    faults = inj.inject(hv.queue, 8.0)
+    print(f"schedule ({len(faults)} faults, seed 1337): " + ", ".join(
+        f"{f.kind.value}@{f.time:.2f}s core {f.core}" for f in faults[:5])
+        + " ...")
+    assert inj.schedule(8.0) == faults      # same seed, same schedule
+
+    hv.run(10.0)
+    print(f"failed cores at the end: {pool.failed_cores()} "
+          f"(healthy {pool.n_healthy}/{pool.n_cores})")
+    for rec in hv.recovery_log:
+        print(f"  {rec['tenant']}: displaced at {rec['failed_at']:.2f}s, "
+              f"re-placed at {rec['recovered_at']:.2f}s "
+              f"(latency {rec['recovery_latency'] * 1e3:.1f} ms)")
+    served = sum(1 for r in hv.completion_log if r.t_complete is not None)
+    print(f"{served} requests served through {len(faults)} faults; "
+          f"every displaced tenant recovered: {not hv._displaced_at}")
+    pool.check_health()
+
+
+def serving_chaos() -> None:
+    print("\n=== serving guards: corruption + stall in one tenant's slots ===")
+    cfg = get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab, size=2)
+                    .astype(np.int32), max_new=10)
+            for i in range(8)]            # rids 0-3 = tenant A, 4-7 = B
+
+    def run(inject: bool):
+        b = ContinuousBatcher(params, cfg, slots=4, prompt_len=8, max_len=64,
+                              chunk=2, paged=True, page_size=8,
+                              clock=lambda: 0.0, watchdog_s=0.5, audit=True)
+        for r in reqs:
+            r.out.clear()
+            b.submit(r)
+        steps = 0
+        while (any(b.slot_req) or b.queue) and steps < 2000:
+            b.step()
+            steps += 1
+            if inject and steps == 1:     # faults hit tenant-A slots only
+                victims = [i for i, r in enumerate(b.slot_req)
+                           if r is not None and r.rid < 4]
+                b.inject_kv_corruption(victims[0])
+                if len(victims) > 1:
+                    b.inject_stall(victims[1], 1.0)
+        return {r.rid: list(r.out) for r in reqs}, b.stats
+
+    clean, _ = run(inject=False)
+    chaos, stats = run(inject=True)
+    print(f"audit repairs {stats.audit_repairs}, watchdog trips "
+          f"{stats.watchdog_trips}, quarantined pages "
+          f"{stats.quarantined_pages}, tokens kept across requeues "
+          f"{stats.resumed_tokens_kept}")
+    b_identical = all(chaos[i] == clean[i] for i in range(4, 8))
+    a_done = all(len(chaos[i]) == 10 for i in range(4))
+    print(f"tenant B token-identical to the fault-free run: {b_identical}")
+    print(f"tenant A recovered to full completion: {a_done}")
+    assert b_identical and a_done
+
+
+if __name__ == "__main__":
+    pool_chaos()
+    serving_chaos()

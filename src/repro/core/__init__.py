@@ -38,6 +38,7 @@ from .events import (
     TraceTraffic,
     emit_requests,
 )
+from .faults import FaultInjector, FaultKind, FaultSpec
 from .hrp import HRPError, Lease, ResourcePool
 from .hwmodel import (
     HardwareModel,
@@ -70,7 +71,8 @@ __all__ = [
     "ContextSwitchController", "InstructionRouter", "MultiCoreSyncController",
     "SwitchMode", "DynamicCompiler", "Schedule", "Event", "EventKind",
     "EventQueue", "PoissonTraffic", "RequestRecord", "TraceTraffic",
-    "emit_requests", "HRPError", "Lease",
+    "emit_requests", "FaultInjector", "FaultKind", "FaultSpec",
+    "HRPError", "Lease",
     "ResourcePool", "HardwareModel", "fpga_core", "fpga_large_core",
     "fpga_small_core", "tpu_v5e_chip", "POLICIES", "Hypervisor",
     "PolicyContext", "PoolExecutor", "TenantSpec", "kv_pages_proportional",

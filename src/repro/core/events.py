@@ -10,10 +10,15 @@ reconfiguration signals, and straggler probes — consumed by
 Determinism rules (they make event-driven runs reproducible and testable):
 
 * events pop in non-decreasing ``time`` order;
-* at equal time, departures are handled before arrivals (so a simultaneous
-  arrival sees the cores a departing tenant frees), completions and explicit
-  reconfiguration signals in between, request arrivals after the tenant
-  arrival that may carry them, probes last;
+* at equal time, kinds pop in a **documented fixed priority** (the
+  ``_KIND_RANK`` table): failures first (every other same-instant event
+  must already see the shrunk pool — a chaos replay is only byte-stable if
+  a failure and a completion at the same timestamp always order the same
+  way), then departures (a simultaneous arrival sees the cores a departing
+  tenant frees), completions, explicit reconfiguration signals, recoveries
+  (repaired cores become placeable before same-instant arrivals ask),
+  tenant arrivals, request arrivals after the tenant arrival that may
+  carry them, probes last;
 * remaining ties break by insertion order (``seq``), never by dict/hash order.
 
 **Open-loop traffic.**  The seed engine re-issued each tenant's next
@@ -40,9 +45,11 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence
 class EventKind(enum.Enum):
     """What happened at ``Event.time`` (ordered by handling priority)."""
 
+    FAILURE = "failure"          # a fault fires (core death/slowdown/corruption)
     DEPARTURE = "departure"      # tenant leaves; its lease is released
     COMPLETION = "completion"    # a tenant request finished (accounting hook)
     RECONFIG = "reconfig"        # explicit resize signal for one tenant
+    RECOVERY = "recovery"        # a fault repairs / a displaced tenant retries
     ARRIVAL = "arrival"          # tenant asks for admission
     REQUEST = "request"          # one inference request arrives for a tenant
     PROBE = "probe"              # pool-wide straggler probe
@@ -52,13 +59,20 @@ class EventKind(enum.Enum):
         return _KIND_RANK[self]
 
 
+#: Same-timestamp handling priority (see the module docstring).  FAILURE
+#: outranks everything — a same-instant completion/reconfig/arrival must see
+#: the post-fault pool; RECOVERY sits after bookkeeping kinds but before
+#: ARRIVAL so repaired cores are placeable for simultaneous admissions.
+#: Remaining ties break by ``Event.seq`` (insertion order).
 _KIND_RANK = {
-    EventKind.DEPARTURE: 0,
-    EventKind.COMPLETION: 1,
-    EventKind.RECONFIG: 2,
-    EventKind.ARRIVAL: 3,
-    EventKind.REQUEST: 4,
-    EventKind.PROBE: 5,
+    EventKind.FAILURE: 0,
+    EventKind.DEPARTURE: 1,
+    EventKind.COMPLETION: 2,
+    EventKind.RECONFIG: 3,
+    EventKind.RECOVERY: 4,
+    EventKind.ARRIVAL: 5,
+    EventKind.REQUEST: 6,
+    EventKind.PROBE: 7,
 }
 
 

@@ -16,6 +16,13 @@ here (they are *the* public-cloud requirement of the paper):
   fungible — placement is device state).  Like the DDR port budget, the sum
   of kv leases must never exceed the pool, and only tenants holding a core
   lease may hold pages (memory without compute is a leak).
+* **Failure isolation** — each core belongs to a *fault domain* (its DDR
+  group: shared bank, shared blast radius).  A failed core
+  (``mark_failed``) is unplaceable — excluded from ``free_cores`` and every
+  placement path — until ``mark_recovered``.  ``check_health`` asserts no
+  live lease contains a failed core; the hypervisor displaces the owning
+  tenant *in the same event* that delivers the failure, so the invariant
+  holds at every event boundary.
 
 The pool is pure bookkeeping — deliberately no JAX here; the serving glue
 (`repro.serving.tenancy`) turns leases into `jax.sharding.Mesh` slices.
@@ -67,6 +74,7 @@ class ResourcePool:
         self._owner: List[Optional[str]] = [None] * n_cores
         self._kv_leases: Dict[str, int] = {}
         self._shared_kv: Dict[str, int] = {}
+        self._failed: set = set()   # core indices marked unplaceable
 
     # -- queries ------------------------------------------------------------
     @property
@@ -78,7 +86,29 @@ class ResourcePool:
         return dict(self._kv_leases)
 
     def free_cores(self) -> List[int]:
-        return [i for i, o in enumerate(self._owner) if o is None]
+        """Unleased AND healthy: failed cores are never placeable."""
+        return [i for i, o in enumerate(self._owner)
+                if o is None and i not in self._failed]
+
+    def owner_of(self, core: int) -> Optional[str]:
+        return self._owner[core]
+
+    @property
+    def n_healthy(self) -> int:
+        """Cores the pool can actually place (total minus failed)."""
+        return self.n_cores - len(self._failed)
+
+    def failed_cores(self) -> List[int]:
+        return sorted(self._failed)
+
+    def fault_domain(self, core: int) -> int:
+        """The core's fault domain id — its DDR group (shared bank, shared
+        blast radius)."""
+        return core // self.cores_per_ddr
+
+    def domain_cores(self, domain: int) -> List[int]:
+        lo = domain * self.cores_per_ddr
+        return list(range(lo, min(lo + self.cores_per_ddr, self.n_cores)))
 
     def free_kv_pages(self) -> int:
         return self.n_kv_pages - sum(self._kv_leases.values())
@@ -199,6 +229,34 @@ class ResourcePool:
                 f"shared kv exceeds the pool: {shared_total} > "
                 f"{self.n_kv_pages}")
 
+    # -- failure isolation ----------------------------------------------------
+    def mark_failed(self, core: int) -> Optional[str]:
+        """Mark ``core`` unplaceable and return its current owner (the
+        tenant the hypervisor must displace), or ``None`` if it was free.
+        Idempotent; does NOT touch the lease — releasing/re-placing the
+        owner is the hypervisor's job, in the same event."""
+        if not 0 <= core < self.n_cores:
+            raise HRPError(f"core {core} out of range [0, {self.n_cores})")
+        self._failed.add(core)
+        return self._owner[core]
+
+    def mark_recovered(self, core: int) -> None:
+        """Return a repaired core to the placeable set (idempotent)."""
+        if not 0 <= core < self.n_cores:
+            raise HRPError(f"core {core} out of range [0, {self.n_cores})")
+        self._failed.discard(core)
+
+    def check_health(self) -> None:
+        """No live lease may contain a failed core — a tenant scheduled onto
+        dead hardware is a silent outage.  The hypervisor displaces the
+        owner inside the FAILURE event, so this holds at event boundaries."""
+        for t, lease in self._leases.items():
+            bad = sorted(set(lease.cores) & self._failed)
+            if bad:
+                raise HRPError(
+                    f"tenant {t} leases failed core(s) {bad} "
+                    f"(fault domain(s) {sorted({self.fault_domain(c) for c in bad})})")
+
     # -- placement ------------------------------------------------------------
     def _groups(self) -> List[range]:
         g = self.cores_per_ddr
@@ -211,7 +269,8 @@ class ResourcePool:
         keeps remaining whole groups intact), and only then break a fresh
         group.  Caller has verified ``n`` cores are free."""
         groups = self._groups()
-        free = {gi: [c for c in grp if self._owner[c] is None]
+        free = {gi: [c for c in grp
+                     if self._owner[c] is None and c not in self._failed]
                 for gi, grp in enumerate(groups)}
         chosen: List[int] = []
         need = n

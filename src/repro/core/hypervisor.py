@@ -89,15 +89,36 @@ trio when the corresponding event is used):
     exec_evict(name, at)              -> None   # preemption (falls back to
                                                 # exec_remove when absent)
     exec_request(name, record, at)    -> None   # open-loop request delivery
+    exec_fault(fault, at)             -> None   # a FaultSpec fires
+    exec_recover(fault, at)           -> None   # its repair lands
     estimate_latency(spec, n_cores)   -> float  # latency_slo demand model
     completion_sink                   -> attr   # set by the hypervisor to
                                                 # receive finished records
     probe(at)                         -> int    # straggler sweep, #rebalances
     metrics()                         -> dict   # returned by run()
 
-The HRP isolation invariants (`check_isolation`, `check_bandwidth`) are
-re-verified after *every* handled event — a violated invariant raises
-immediately at the event that caused it.
+**Fault domain handling.**  ``FAILURE`` events (from
+:class:`repro.core.faults.FaultInjector`, or :meth:`fail_core` in tests)
+deliver :class:`~repro.core.faults.FaultSpec` payloads.  ``CORE_DEATH``
+marks the core unplaceable (``ResourcePool.mark_failed``) and **displaces**
+the owning tenant in the same event: its lease is released through
+``exec_evict`` (generated work survives — the engine parks in-flight
+requests, the serving adapter keeps live state) and re-placement on the
+healthy remainder is attempted immediately.  When that fails the tenant
+parks at the *head* of the wait queue and retries on an
+exponential-backoff ``RECOVERY`` timer (``fault_retry_backoff`` seconds,
+doubling) until capacity returns.  ``CORE_SLOW``/``KV_CORRUPT`` are
+forwarded to the executor (``exec_fault``) — detection is the straggler
+probe / serving-guard path, not a placement change.  Repair ``RECOVERY``
+events undo the fault (``mark_recovered`` + ``exec_recover``) and re-drain
+the wait queue.  ``recovery_log`` records each displaced tenant's
+failure→re-placement latency; blast radius is bounded by construction —
+only tenants leasing the failed core are ever displaced.
+
+The HRP isolation invariants (`check_isolation`, `check_bandwidth`,
+`check_kv_quota`, `check_health`) are re-verified after *every* handled
+event — a violated invariant raises immediately at the event that caused
+it.
 """
 
 from __future__ import annotations
@@ -108,7 +129,8 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 from .dispatch import SwitchMode
 from .events import Event, EventKind, EventQueue, RequestRecord, emit_requests
-from .hrp import ResourcePool
+from .faults import FaultKind, FaultSpec
+from .hrp import HRPError, ResourcePool
 
 
 @dataclasses.dataclass
@@ -537,6 +559,7 @@ class Hypervisor:
         preemptive: bool = False,
         kv_policy: Optional[Callable[[PolicyContext, Dict[str, int]],
                                      Dict[str, int]]] = None,
+        fault_retry_backoff: float = 0.05,
         on_event: Optional[Callable[["Hypervisor", Event], None]] = None,
     ) -> None:
         if pool is None:
@@ -570,6 +593,13 @@ class Hypervisor:
         self.preemptions: List[str] = []
         self._request_backlog: Dict[str, List[RequestRecord]] = {}
         self._rid = itertools.count()
+        # fault-domain bookkeeping: delivered faults, per-displaced-tenant
+        # failure timestamps, recovery records, and retry backoff state
+        self.fault_log: List[FaultSpec] = []
+        self.recovery_log: List[Dict[str, Any]] = []
+        self.fault_retry_backoff = fault_retry_backoff
+        self._displaced_at: Dict[str, float] = {}
+        self._retry_backoff: Dict[str, float] = {}
         if hasattr(self.executor, "completion_sink"):
             self.executor.completion_sink = self._request_completed
 
@@ -600,6 +630,17 @@ class Hypervisor:
 
     def schedule_probe(self, *, at: float) -> Event:
         return self.queue.schedule(EventKind.PROBE, at)
+
+    def schedule_fault(self, fault: FaultSpec, *,
+                       recovery: bool = True) -> Event:
+        """Schedule one fault on the timeline (plus its repair ``RECOVERY``
+        when the fault carries a ``duration``).  Bulk injection goes through
+        :meth:`repro.core.faults.FaultInjector.inject` on ``self.queue``."""
+        ev = self.queue.schedule(EventKind.FAILURE, fault.time, fault=fault)
+        if recovery and fault.duration is not None:
+            self.queue.schedule(EventKind.RECOVERY,
+                                fault.time + fault.duration, fault=fault)
+        return ev
 
     def schedule_request(self, name: str, *, at: float,
                          record: Optional[RequestRecord] = None,
@@ -657,6 +698,28 @@ class Hypervisor:
         self._handle(ev, t)
         self._post_event(ev)
 
+    def fail_core(self, core: int, *, at: Optional[float] = None,
+                  duration: Optional[float] = None) -> FaultSpec:
+        """Immediate-mode core death (tests / live serving): handle the
+        FAILURE now; schedule the repair only if ``duration`` is given."""
+        t = self.clock if at is None else at
+        fault = FaultSpec(time=t, kind=FaultKind.CORE_DEATH, fid=-1,
+                          core=core, duration=duration)
+        ev = Event(time=t, kind=EventKind.FAILURE, payload={"fault": fault})
+        self._handle(ev, t)
+        self._post_event(ev)
+        if duration is not None:
+            self.queue.schedule(EventKind.RECOVERY, t + duration, fault=fault)
+        return fault
+
+    def recover_core(self, core: int, *, at: Optional[float] = None) -> None:
+        """Immediate-mode repair of a core failed via :meth:`fail_core`."""
+        t = self.clock if at is None else at
+        fault = FaultSpec(time=t, kind=FaultKind.CORE_DEATH, fid=-1, core=core)
+        ev = Event(time=t, kind=EventKind.RECOVERY, payload={"fault": fault})
+        self._handle(ev, t)
+        self._post_event(ev)
+
     # -- queries ------------------------------------------------------------
     def allocation(self) -> Dict[str, int]:
         return {t: lease.n_cores for t, lease in self.pool.leases.items()}
@@ -706,6 +769,7 @@ class Hypervisor:
         self.pool.check_isolation()
         self.pool.check_bandwidth()
         self.pool.check_kv_quota()
+        self.pool.check_health()
         self.trace.append(ev)
         if self.on_event is not None:
             self.on_event(self, ev)
@@ -752,6 +816,8 @@ class Hypervisor:
                     self._rebalance(t)
             else:
                 self.waiting = [w for w in self.waiting if w.name != name]
+                self._displaced_at.pop(name, None)
+                self._retry_backoff.pop(name, None)
         elif ev.kind is EventKind.RECONFIG:
             name = ev.tenant
             if name in self.specs:
@@ -775,6 +841,73 @@ class Hypervisor:
             rec = ev.payload.get("record")
             if rec is not None:
                 self.completion_log.append(rec)
+        elif ev.kind is EventKind.FAILURE:
+            self._handle_failure(ev.payload["fault"], t)
+        elif ev.kind is EventKind.RECOVERY:
+            self._handle_recovery(ev, t)
+
+    # -- fault handling -----------------------------------------------------
+    def _handle_failure(self, fault: FaultSpec, t: float) -> None:
+        """Deliver one fault.  ``CORE_DEATH`` shrinks the placeable pool and
+        displaces the owning tenant inside this very event, so the
+        ``check_health`` invariant holds at the event boundary; the blast
+        radius is exactly the tenants leasing the failed core — nobody else
+        is resized or touched here."""
+        self.fault_log.append(fault)
+        if fault.kind is FaultKind.CORE_DEATH:
+            owner = self.pool.mark_failed(fault.core)
+            if hasattr(self.executor, "exec_fault"):
+                self.executor.exec_fault(fault, t)
+            if owner is not None and owner in self.specs:
+                self._displace(owner, t)
+        else:
+            # CORE_SLOW / KV_CORRUPT: no placement change — detection is the
+            # straggler-probe / serving-guard path inside the executor
+            if hasattr(self.executor, "exec_fault"):
+                self.executor.exec_fault(fault, t)
+
+    def _displace(self, name: str, t: float) -> None:
+        """Pull a tenant off failed hardware: release its lease through the
+        eviction path (generated work survives — parked requests / kept
+        live state) and re-place it on the healthy remainder.  Unlike a
+        preemption this is not charged to ``preemptions`` — the tenant did
+        nothing wrong.  On failure it parks at the *head* of the wait queue
+        with an exponential-backoff retry timer."""
+        spec = self.specs.pop(name)
+        if hasattr(self.executor, "exec_evict"):
+            self.executor.exec_evict(name, t)
+        else:
+            self.executor.exec_remove(name, t)
+        self._displaced_at.setdefault(name, t)
+        if not self._try_admit(spec, t):
+            self.waiting.insert(0, spec)
+            self._schedule_retry(name, t)
+
+    def _schedule_retry(self, name: str, t: float) -> None:
+        backoff = self._retry_backoff.get(name, self.fault_retry_backoff)
+        self.queue.schedule(EventKind.RECOVERY, t + backoff,
+                            tenant=name, retry=True)
+        self._retry_backoff[name] = backoff * 2.0
+
+    def _handle_recovery(self, ev: Event, t: float) -> None:
+        if ev.payload.get("retry"):
+            # backoff retry for a displaced tenant still waiting
+            name = ev.tenant
+            if name in self.specs or name not in self._displaced_at:
+                return                      # already re-placed (or departed)
+            self._drain_waiting(t)
+            if name not in self.specs and \
+                    any(w.name == name for w in self.waiting):
+                self._schedule_retry(name, t)
+            return
+        fault: FaultSpec = ev.payload["fault"]
+        if hasattr(self.executor, "exec_recover"):
+            self.executor.exec_recover(fault, t)
+        if fault.kind is FaultKind.CORE_DEATH and fault.core is not None:
+            self.pool.mark_recovered(fault.core)
+            # repaired capacity goes straight back to work
+            if not self._drain_waiting(t):
+                self._rebalance(t)
 
     def _current(self) -> Dict[str, int]:
         return {
@@ -784,8 +917,11 @@ class Hypervisor:
         }
 
     def _policy_ctx(self, tenants: List[TenantSpec], t: float) -> PolicyContext:
+        # policies plan over the HEALTHY pool: a decision that targets a
+        # failed core would bounce off placement anyway — better to degrade
+        # the split than to fail the apply
         return PolicyContext(
-            self.pool.n_cores, tenants, self._current(), t,
+            self.pool.n_healthy, tenants, self._current(), t,
             latency=getattr(self.executor, "estimate_latency", None),
             n_kv_pages=self.pool.n_kv_pages,
             current_kv={n: p for n, p in self.pool.kv_leases.items()
@@ -831,6 +967,14 @@ class Hypervisor:
                     kv_targets=kv_targets)
         self.specs[spec.name] = spec
         self._flush_backlog(spec.name, t)
+        if spec.name in self._displaced_at:
+            # a fault-displaced tenant is back on cores: stamp its recovery
+            t0 = self._displaced_at.pop(spec.name)
+            self._retry_backoff.pop(spec.name, None)
+            self.recovery_log.append({
+                "tenant": spec.name, "failed_at": t0, "recovered_at": t,
+                "recovery_latency": t - t0,
+            })
         return True
 
     def _evict(self, victim: TenantSpec, t: float) -> None:
@@ -873,9 +1017,9 @@ class Hypervisor:
         pre-eviction core and kv-page lease (the resources it held are
         still free, so the restore cannot fail) — though it has paid the
         context switch."""
-        if max(spec.min_cores, 1) > self.pool.n_cores:
-            return False    # could never fit even on an empty pool: don't
-                            # charge residents for a doomed attempt
+        if max(spec.min_cores, 1) > self.pool.n_healthy:
+            return False    # could never fit even on an empty (healthy)
+                            # pool: don't charge residents for a doomed try
         victims = sorted(
             (s for s in self.specs.values() if s.priority < spec.priority),
             key=lambda s: (s.priority, -self._slo_slack(s),
@@ -904,8 +1048,25 @@ class Hypervisor:
                 break
         by_arrival = sorted(evicted, key=lambda s: (s.arrived_at, s.name))
         if not admitted:
-            for v in by_arrival:                    # exact rollback
-                self.executor.exec_admit(v, sizes[v.name], t)
+            for i, v in enumerate(by_arrival):      # exact rollback
+                try:
+                    self.executor.exec_admit(v, sizes[v.name], t)
+                except HRPError as e:
+                    # the pool shrank under us mid-rollback (e.g. a core
+                    # failed between eviction and restore): exact
+                    # restoration is impossible.  Abort LOUDLY but leave the
+                    # invariants clean — every not-yet-restored victim parks
+                    # at the head of the wait queue (its requests stay in
+                    # the backlog / parked by the executor), nothing holds a
+                    # partial lease.
+                    for w in reversed(by_arrival[i:]):
+                        self.waiting.insert(0, w)
+                        self._displaced_at.setdefault(w.name, t)
+                    raise HRPError(
+                        f"preemption rollback could not restore "
+                        f"{v.name} at {sizes[v.name]} cores (pool shrank "
+                        f"mid-rollback); {len(by_arrival) - i} victim(s) "
+                        f"parked at the wait-queue head") from e
                 self.specs[v.name] = v
                 if kv_sizes[v.name]:
                     self.pool.set_kv_lease(v.name, kv_sizes[v.name])

@@ -283,6 +283,26 @@ class VirtualEngine:
             self._parked_requests[name] = tenant.inbox
         self.remove(name)
 
+    def exec_fault(self, fault, at: float) -> None:
+        """A :class:`~repro.core.faults.FaultSpec` fires.  ``CORE_SLOW``
+        degrades the core by its factor — *visible to straggler probes*
+        (the detection path: a probed tenant rebalances its remaining
+        layers off the sick core).  ``CORE_DEATH`` needs no engine-side
+        state: the hypervisor displaces the owner through ``exec_evict`` in
+        the same event, and a failed free core is simply unplaceable."""
+        from .faults import FaultKind
+        if fault.kind is FaultKind.CORE_SLOW and fault.core is not None:
+            self.core_slowdown[fault.core] = max(
+                self.core_slowdown.get(fault.core, 1.0), fault.factor)
+
+    def exec_recover(self, fault, at: float) -> None:
+        """The fault's repair lands: clear the slowdown so the next probe
+        sees a healthy core again (probe_speeds memo invalidates naturally
+        — speeds change, so the weighted schedule recompiles)."""
+        from .faults import FaultKind
+        if fault.kind is FaultKind.CORE_SLOW and fault.core is not None:
+            self.core_slowdown.pop(fault.core, None)
+
     def estimate_latency(self, spec: TenantSpec, n_cores: int) -> float:
         """Estimated single-inference latency of ``spec`` on ``n_cores``
         cores — the ``latency_slo`` policy's demand model.  Crosstalk-free

@@ -74,6 +74,25 @@ fault) via ``page_push_program``.
 **Deadlines**: a ``Request.deadline`` (in the ``clock`` timebase) already
 past at admission time sheds the request (``dropped`` /
 ``stats.deadline_drops``) instead of starting it hopelessly late.
+
+**Fault guards** (the serving half of the fault-domain story —
+``repro.core.faults`` is the hypervisor half): every chunk carries a
+non-finite **logit sentinel** — a slot whose logits go NaN/inf is
+deactivated on device before a poisoned token can be selected or emitted,
+and its request is requeued with its pre-fault tokens intact
+(``stats.poisoned_slots``).  An optional **watchdog** (``watchdog_s``)
+bounds the wall time of one chunk dispatch+sync and retires the most
+suspect slot instead of stalling every other request
+(``stats.watchdog_trips``).  An opt-in **page-table audit** (``audit=True``,
+paged mode) rides the existing post-chunk sync, cross-checks the fetched
+tables against the no-double-mapping invariant (shared prefix pages are
+exempt — they are read-only and multi-mapped by design), clears violating
+entries, quarantines double-mapped physical pages out of circulation
+forever, and requeues the slots whose KV integrity is suspect
+(``stats.audit_repairs`` / ``stats.quarantined_pages``).  All three keep
+the blast radius at the slot: untouched slots decode the same tokens they
+would have without the fault.  ``inject_stall`` / ``inject_kv_corruption``
+are seeded-chaos hooks for tests and ``benchmarks/bench_chaos.py``.
 """
 
 from __future__ import annotations
@@ -91,7 +110,7 @@ from repro.models.attention import check_attn_impl
 from repro.models.transformer import (
     Caches, init_caches, init_paged_caches, period_structure,
 )
-from .kv_cache import PagedKVPool, pages_for, tree_bytes
+from .kv_cache import PagedKVPool, PageQuotaError, pages_for, tree_bytes
 from .prefix_cache import PrefixCache, PrefixNode
 from .engine import (
     PageState,
@@ -157,8 +176,8 @@ class BatcherStats:
     # paged mode
     oom_requeues: int = 0        # requests requeued after a denied page fault
     oom_discarded_tokens: int = 0  # emitted tokens thrown away by requeues
-    oom_resumed: int = 0         # requeues that kept their generated tokens
-    resumed_tokens_kept: int = 0  # tokens those requeues did NOT discard
+    oom_resumed: int = 0         # OOM requeues that kept their tokens
+    resumed_tokens_kept: int = 0  # tokens kept across requeues (any cause)
     pages_in_use: int = 0        # device-allocated pages after the last sync
     peak_pages_in_use: int = 0
     peak_resident: int = 0       # most simultaneously-resident requests
@@ -170,6 +189,11 @@ class BatcherStats:
     shared_pages: int = 0        # cache-owned pages right now (gauge)
     # deadlines
     deadline_drops: int = 0      # requests shed before start (past deadline)
+    # fault guards (NaN sentinel / watchdog / page-table audit)
+    poisoned_slots: int = 0      # slots retired by the non-finite sentinel
+    watchdog_trips: int = 0      # chunks that exceeded watchdog_s
+    audit_repairs: int = 0       # page-table entries the audit cleared
+    quarantined_pages: int = 0   # pool pages permanently out of circulation
 
     @property
     def prefix_tokens_saved(self) -> int:
@@ -214,7 +238,9 @@ class ContinuousBatcher:
                  page_quota: Optional[int] = None,
                  reserve_pages: bool = True,
                  prefix_cache: Union[bool, PrefixCache, None] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 watchdog_s: Optional[float] = None,
+                 audit: bool = False):
         self.params = params
         self.cfg = cfg
         self.B = slots
@@ -276,6 +302,13 @@ class ContinuousBatcher:
             self.pages = None
             self._admit_fn = admit_program(cfg, scfg, policy=policy)
         self.stats = BatcherStats(cache_bytes=tree_bytes(self.caches))
+        # fault guards: watchdog_s bounds the wall time of one chunk
+        # dispatch+sync (None = off); audit=True cross-checks the fetched
+        # page tables against the no-double-mapping invariant every chunk
+        self._watchdog_s = watchdog_s
+        self._audit = bool(audit) and paged
+        self._stall: Optional[tuple] = None      # inject_stall chaos hook
+        self._quarantined: set = set()           # page ids out of circulation
         self._key = jax.random.PRNGKey(0)
         self._stalled = 0           # consecutive zero-emission paged chunks
         self._admitted_pages_since_sync = 0
@@ -410,6 +443,181 @@ class ContinuousBatcher:
         self.state = state["slots"]
         if self.paged:
             self.pages = state["pages"]
+
+    # -- fault guards: requeue, watchdog, page-table audit ----------------
+    def inject_stall(self, slot: int, seconds: float) -> None:
+        """Chaos hook: add ``seconds`` to the next chunk's measured wall
+        time and blame ``slot``, so tests and the chaos bench can trip the
+        watchdog deterministically without a real hang."""
+        self._stall = (int(slot), float(seconds))
+
+    def inject_kv_corruption(self, slot: int, *,
+                             pid: Optional[int] = None) -> None:
+        """Chaos hook: overwrite one of ``slot``'s mapped page-table
+        entries with ``pid`` (default: an out-of-range id), simulating a
+        flipped bit in the table.  Passing another slot's physical id
+        forges a double mapping.  ``audit=True`` detects and self-heals
+        either on the next chunk sync."""
+        assert self.paged, "page corruption applies to paged batchers"
+        row = np.asarray(jax.device_get(self.pages.table[slot]))
+        mapped = np.nonzero(row >= 0)[0]
+        j = int(mapped[0]) if mapped.size else 0
+        bad = int(pid) if pid is not None else self.n_pages + 7
+        self.pages = self.pages._replace(
+            table=self.pages.table.at[slot, j].set(bad))
+
+    def _requeue_slot(self, slot: int, req: Request) -> bool:
+        """Retire ``slot``'s request to the queue head.  Generated tokens
+        are KEPT when prompt+output still fit the prompt bucket
+        (re-admission prefills the concatenation and decoding resumes —
+        the resume-on-OOM discipline); otherwise the request restarts from
+        its prompt and the discarded emissions stay out of
+        ``stats.tokens``.  Returns True when the tokens were kept."""
+        self.slot_req[slot] = None
+        if self.paged:
+            if self.prefix is not None:
+                self._release_prefix(req)
+            self.kv_pool.free(req.rid)
+        kept = bool(req.out) and \
+            len(req.prompt) + len(req.out) <= self.prompt_len
+        if kept:
+            self.stats.resumed_tokens_kept += len(req.out)
+        else:
+            self.stats.oom_discarded_tokens += len(req.out)
+            req.out.clear()
+        self.queue.appendleft(req)
+        return kept
+
+    def _host_release_slot(self, slot: int) -> None:
+        """Host-side analogue of the in-chunk finish path: deactivate
+        ``slot`` on device and (paged) push its private pages back to the
+        free stack, clearing its table row.  Cache-owned (pinned) pages
+        are left to the refcount ledger; quarantined and out-of-range ids
+        are never pushed."""
+        self.state = self.state._replace(
+            active=self.state.active.at[slot].set(False))
+        if not self.paged:
+            return
+        row, pin = jax.device_get(
+            (self.pages.table[slot], self.pages.pinned[slot]))
+        self.stats.host_syncs += 1
+        private = np.asarray(row)[int(pin):]
+        pids = [int(p) for p in private
+                if 0 <= p < self.n_pages and int(p) not in self._quarantined]
+        self.pages = self.pages._replace(
+            table=self.pages.table.at[slot].set(-1),
+            pinned=self.pages.pinned.at[slot].set(0))
+        if pids:
+            width = 1 << (len(pids) - 1).bit_length() if len(pids) > 1 else 1
+            vec = np.full((width,), -1, dtype=np.int32)
+            vec[: len(pids)] = pids
+            self.pages = page_push_program()(self.pages, jnp.asarray(vec))
+            self.stats.dispatches += 1
+            self.stats.pages_in_use = max(
+                0, self.stats.pages_in_use - len(pids))
+
+    def _watchdog_trip(self, stall_slot: Optional[int]) -> None:
+        """A chunk exceeded ``watchdog_s``: retire the most suspect slot
+        (the injected one when the stall was synthetic, else the slot with
+        the most generated tokens — the longest-running lane) and requeue
+        its request, instead of letting one wedged lane stall every
+        request multiplexed on this batcher.  Tokens emitted before the
+        trip are kept whenever they still fit the prompt bucket."""
+        self.stats.watchdog_trips += 1
+        candidates = [i for i, r in enumerate(self.slot_req)
+                      if r is not None]
+        if stall_slot is not None and self.slot_req[stall_slot] is not None:
+            victim = stall_slot
+        elif candidates:
+            victim = max(candidates,
+                         key=lambda i: (len(self.slot_req[i].out), -i))
+        else:
+            return
+        req = self.slot_req[victim]
+        self._host_release_slot(victim)
+        self._requeue_slot(victim, req)
+
+    def _run_audit(self, table_np: np.ndarray) -> None:
+        """Cross-check the fetched page tables against the
+        no-double-mapping invariant: every physical id maps at most one
+        (slot, logical) entry unless it is cache-owned (shared prefix
+        pages are read-only and legitimately multi-mapped).  Violations
+        self-heal — out-of-range entries are cleared, a double-mapped
+        private page is unmapped everywhere and **quarantined** (never
+        returned to the free stack; billed to a ``"__quarantine__"``
+        ledger owner so admission control sees the shrunken pool) — and
+        every slot that lost a mapping is requeued: its KV integrity is
+        suspect, but its already-emitted tokens are host-side and kept."""
+        shared = self.kv_pool.shared_ids()
+        owner: Dict[int, tuple] = {}
+        clear: set = set()               # (slot, logical) entries to wipe
+        corrupt: set = set()             # pool pids leaving circulation
+        suspects: set = set()            # slots whose KV integrity is gone
+        B, maxp = table_np.shape
+        for i in range(B):
+            for j in range(maxp):
+                pid = int(table_np[i, j])
+                if pid < 0:
+                    continue
+                if pid >= self.n_pages or pid in self._quarantined:
+                    clear.add((i, j))
+                    suspects.add(i)
+                    continue
+                if pid in shared:
+                    continue
+                prev = owner.get(pid)
+                if prev is None:
+                    owner[pid] = (i, j)
+                else:
+                    clear.add(prev)
+                    clear.add((i, j))
+                    corrupt.add(pid)
+                    suspects.add(prev[0])
+                    suspects.add(i)
+        if not clear:
+            return
+        entries = sorted(clear)
+        rows = jnp.asarray([e[0] for e in entries], dtype=jnp.int32)
+        cols = jnp.asarray([e[1] for e in entries], dtype=jnp.int32)
+        self.pages = self.pages._replace(
+            table=self.pages.table.at[rows, cols].set(-1))
+        self.stats.audit_repairs += len(entries)
+        new_q = corrupt - self._quarantined
+        self._quarantined |= corrupt
+        self.stats.quarantined_pages = len(self._quarantined)
+        if new_q:
+            try:
+                self.kv_pool.alloc("__quarantine__", len(new_q))
+            except PageQuotaError:
+                pass        # ledger over-subscribed; device truth governs
+        for i in sorted(suspects):
+            req = self.slot_req[i]
+            if req is None:
+                continue
+            self._host_release_slot(i)
+            self._requeue_slot(i, req)
+        # leak reconciliation: the corrupt entry overwrote some page's only
+        # mapping, orphaning it — neither mapped, free, shared, nor
+        # quarantined.  Its owner was just requeued, so the contents are
+        # dead; the page hardware itself is fine (the *table* was corrupt).
+        # Reclaim orphans to the free stack so corruption never shrinks the
+        # pool beyond the quarantined pages.
+        tab, free_arr, top = jax.device_get(
+            (self.pages.table, self.pages.free, self.pages.free_top))
+        self.stats.host_syncs += 1
+        tab = np.asarray(tab)
+        known = set(tab[tab >= 0].tolist())
+        known |= set(np.asarray(free_arr)[: int(top)].tolist())
+        known |= shared | self._quarantined
+        leaked = [p for p in range(self.n_pages) if p not in known]
+        if leaked:
+            width = 1 << (len(leaked) - 1).bit_length() \
+                if len(leaked) > 1 else 1
+            vec = np.full((width,), -1, dtype=np.int32)
+            vec[: len(leaked)] = leaked
+            self.pages = page_push_program()(self.pages, jnp.asarray(vec))
+            self.stats.dispatches += 1
+            self.stats.audit_repairs += len(leaked)
 
     # -- admission: right-sized prefill + per-slot scatter ---------------
     def _padded_row(self, req: Request) -> np.ndarray:
@@ -724,22 +932,31 @@ class ContinuousBatcher:
             return
         T = self._pick_chunk(active)
         self._key, sub = jax.random.split(self._key)
+        t0 = self._clock()
         if self.paged:
-            (self.caches, self.state, self.pages, toks,
-             emitted) = self._chunk_fn(T)(
+            (self.caches, self.state, self.pages, toks, emitted,
+             poisoned) = self._chunk_fn(T)(
                 self.params, self.caches, self.state, self.pages, sub
             )
-            fetch = (toks, emitted, self.state.active, self.pages.free_top)
+            fetch = (toks, emitted, poisoned, self.state.active,
+                     self.pages.free_top)
+            if self._audit:
+                fetch += (self.pages.table,)
         else:
-            self.caches, self.state, toks, emitted = self._chunk_fn(T)(
-                self.params, self.caches, self.state, sub
-            )
-            fetch = (toks, emitted)
+            self.caches, self.state, toks, emitted, poisoned = \
+                self._chunk_fn(T)(self.params, self.caches, self.state, sub)
+            fetch = (toks, emitted, poisoned)
         self.stats.chunks += 1
         self.stats.dispatches += 1
         self.stats.steps += T
         fetched = jax.device_get(fetch)                      # ONE host sync
-        toks_np, emit_np = fetched[0], fetched[1]
+        elapsed = self._clock() - t0
+        stall_slot: Optional[int] = None
+        if self._stall is not None:
+            stall_slot, extra = self._stall
+            self._stall = None
+            elapsed += extra
+        toks_np, emit_np, poison_np = fetched[0], fetched[1], fetched[2]
         self.stats.host_syncs += 1
         self.stats.slot_total_steps += self.B * T
         self.stats.slot_busy_steps += int(emit_np.sum())
@@ -760,8 +977,18 @@ class ContinuousBatcher:
                     if self.prefix is not None:
                         self._release_prefix(req)
                     self.kv_pool.free(req.rid)
+        # non-finite sentinel: the device deactivated the flagged slots
+        # before selecting or emitting a token (and, paged, recycled their
+        # pages in the same step), so no poisoned value reached any output
+        # stream; requeue the victims — pre-fault tokens are host-side
+        # and survive
+        for i in active:
+            req = self.slot_req[i]
+            if req is not None and bool(poison_np[i]):
+                self.stats.poisoned_slots += 1
+                self._requeue_slot(i, req)
         if self.paged:
-            active_np = fetched[2]
+            active_np = fetched[3]
             self._stalled = self._stalled + 1 \
                 if int(emit_np.sum()) == 0 else 0
             # a slot that deactivated without finishing was denied a page
@@ -778,18 +1005,8 @@ class ContinuousBatcher:
             for i in active:
                 req = self.slot_req[i]
                 if req is not None and not bool(active_np[i]):
-                    self.slot_req[i] = None
-                    if self.prefix is not None:
-                        self._release_prefix(req)
-                    self.kv_pool.free(req.rid)
-                    if req.out and \
-                            len(req.prompt) + len(req.out) <= self.prompt_len:
+                    if self._requeue_slot(i, req):
                         self.stats.oom_resumed += 1
-                        self.stats.resumed_tokens_kept += len(req.out)
-                    else:
-                        self.stats.oom_discarded_tokens += len(req.out)
-                        req.out.clear()
-                    self.queue.appendleft(req)
                     self.stats.oom_requeues += 1
                     oomed += 1
             if oomed:
@@ -797,10 +1014,14 @@ class ContinuousBatcher:
                     1, sum(r is not None for r in self.slot_req))
             elif self._resident_cap < self.B:
                 self._resident_cap += 1
-            self.stats.pages_in_use = self.n_pages - int(fetched[3])
+            self.stats.pages_in_use = self.n_pages - int(fetched[4])
             self.stats.peak_pages_in_use = max(
                 self.stats.peak_pages_in_use, self.stats.pages_in_use)
             self._admitted_pages_since_sync = 0
+            if self._audit:
+                self._run_audit(np.asarray(fetched[5]))
+        if self._watchdog_s is not None and elapsed > self._watchdog_s:
+            self._watchdog_trip(stall_slot)
 
     def run(self, *, max_steps: int = 10_000) -> BatcherStats:
         while (self.queue or any(r is not None for r in self.slot_req)) and \

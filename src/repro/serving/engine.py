@@ -173,42 +173,54 @@ def init_slot_state(batch: int) -> SlotState:
 
 def make_decode_chunk(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
     """decode_chunk(params, caches, state, key) ->
-    (caches, state, tokens (T, B), emitted (T, B)).
+    (caches, state, tokens (T, B), emitted (T, B), poisoned (B,)).
 
     One ``lax.scan`` over ``n_steps`` decode iterations.  EOS and
     token-budget detection happen inside the scan: a slot that finishes
     deactivates immediately, its position freezes, and later iterations
-    emit nothing for it (``emitted`` is the validity mask).  Jit this with
-    ``donate_argnums=(1, 2)`` so the cache tree is updated in place.
+    emit nothing for it (``emitted`` is the validity mask).
+
+    ``poisoned`` is the fault sentinel: a slot whose logits come back
+    non-finite (NaN/inf — a corrupted cache page, a bad reduction) is
+    deactivated *before* its token is selected or emitted, so a poisoned
+    value never enters any output stream — the blast radius is the slot.
+    The host requeues the flagged request (see ``ContinuousBatcher``).
+    Jit this with ``donate_argnums=(1, 2)`` so the cache tree is updated
+    in place.
     """
     mask = scfg.logit_mask(cfg)
 
     def decode_chunk(params, caches: Caches, state: SlotState, key):
+        B = state.tokens.shape[0]
+
         def body(carry, _):
-            caches, st, key = carry
+            caches, st, key, poisoned = carry
             key, sub = jax.random.split(key)
             logits, caches = decode_step(
                 params, st.tokens, caches, st.cur_pos, cfg,
                 impl=scfg.attn_impl, policy=policy,
             )
+            bad = st.active & ~jnp.isfinite(logits).all(axis=-1)
+            active = st.active & ~bad
             nxt = select_token(logits, mask, scfg, sub)
-            nxt = jnp.where(st.active, nxt, st.tokens)
-            emitted = st.active
-            remaining = st.remaining - st.active.astype(jnp.int32)
-            done = st.active & ((nxt == st.eos) | (remaining <= 0))
+            nxt = jnp.where(active, nxt, st.tokens)
+            emitted = active
+            remaining = st.remaining - active.astype(jnp.int32)
+            done = active & ((nxt == st.eos) | (remaining <= 0))
             st = SlotState(
                 tokens=nxt,
-                cur_pos=st.cur_pos + st.active.astype(jnp.int32),
-                active=st.active & ~done,
+                cur_pos=st.cur_pos + active.astype(jnp.int32),
+                active=active & ~done,
                 remaining=remaining,
                 eos=st.eos,
             )
-            return (caches, st, key), (nxt, emitted)
+            return (caches, st, key, poisoned | bad), (nxt, emitted)
 
-        (caches, state, _), (toks, emitted) = jax.lax.scan(
-            body, (caches, state, key), None, length=n_steps
+        poisoned0 = jnp.zeros((B,), bool)
+        (caches, state, _, poisoned), (toks, emitted) = jax.lax.scan(
+            body, (caches, state, key, poisoned0), None, length=n_steps
         )
-        return caches, state, toks, emitted
+        return caches, state, toks, emitted, poisoned
 
     return decode_chunk
 
@@ -381,7 +393,7 @@ def _free_finished_pages(pages_table, free, free_top, finished, pinned):
 def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
                             page_size: int, *, policy=None):
     """decode_chunk(params, caches, state, pages, key) ->
-    (caches, state, pages, tokens (T, B), emitted (T, B)).
+    (caches, state, pages, tokens (T, B), emitted (T, B), poisoned (B,)).
 
     The paged twin of :func:`make_decode_chunk`: same ``lax.scan`` with the
     same EOS/budget bookkeeping, plus **page faults handled inside the
@@ -394,9 +406,10 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
     contiguous at the top of the stack).  A denied slot (pool dry or
     quota hit) deactivates immediately without emitting — the host sees
     ``active`` drop without EOS/budget and requeues the request.  Pages
-    of slots that finish (EOS, budget, or denial) are pushed back onto
-    the stack in the same step, so capacity frees mid-chunk.  Jit with
-    ``donate_argnums=(1, 2, 3)``.
+    of slots that finish (EOS, budget, denial, or the ``poisoned``
+    NaN/inf sentinel — see :func:`make_decode_chunk`) are pushed back
+    onto the stack in the same step, so capacity frees mid-chunk.  Jit
+    with ``donate_argnums=(1, 2, 3)``.
     """
     mask = scfg.logit_mask(cfg)
     ps = int(page_size)
@@ -408,7 +421,7 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
         bidx = jnp.arange(B)
 
         def body(carry, _):
-            caches, st, pg, key = carry
+            caches, st, pg, key, poisoned = carry
             key, sub = jax.random.split(key)
             # -- page fault: map the write position's logical page --------
             logical = (st.cur_pos // ps).astype(jnp.int32)
@@ -428,6 +441,8 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
                 params, st.tokens, caches, st.cur_pos, cfg,
                 impl=scfg.attn_impl, policy=policy, page_table=table,
             )
+            bad = active & ~jnp.isfinite(logits).all(axis=-1)
+            active = active & ~bad
             nxt = select_token(logits, mask, scfg, sub)
             nxt = jnp.where(active, nxt, st.tokens)
             emitted = active
@@ -435,7 +450,7 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
             done = active & ((nxt == st.eos) | (remaining <= 0))
             # -- recycle pages of finished slots --------------------------
             table, free, free_top, pinned = _free_finished_pages(
-                table, pg.free, free_top, done | oom, pg.pinned)
+                table, pg.free, free_top, done | oom | bad, pg.pinned)
             st = SlotState(
                 tokens=nxt,
                 cur_pos=st.cur_pos + active.astype(jnp.int32),
@@ -445,12 +460,14 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
             )
             pg = PageState(table=table, free=free, free_top=free_top,
                            quota=pg.quota, pinned=pinned)
-            return (caches, st, pg, key), (nxt, emitted)
+            return (caches, st, pg, key, poisoned | bad), (nxt, emitted)
 
-        (caches, state, pages, _), (toks, emitted) = jax.lax.scan(
-            body, (caches, state, pages, key), None, length=n_steps
+        poisoned0 = jnp.zeros((B,), bool)
+        (caches, state, pages, _, poisoned), (toks, emitted) = jax.lax.scan(
+            body, (caches, state, pages, key, poisoned0), None,
+            length=n_steps
         )
-        return caches, state, pages, toks, emitted
+        return caches, state, pages, toks, emitted, poisoned
 
     return decode_chunk
 
@@ -793,7 +810,7 @@ def generate(
         T = chunk_bucket(min(left, max(scfg.chunk, 1)))
         fn = decode_chunk_program(cfg, scfg, T, policy=policy)
         key, sub = jax.random.split(key)
-        caches, state, toks, _ = fn(params, caches, state, sub)
+        caches, state, toks, _, _ = fn(params, caches, state, sub)
         out.append(jnp.moveaxis(toks, 0, 1))
         left -= T
     return jnp.concatenate(out, axis=1)

@@ -182,6 +182,12 @@ class PagedKVPool:
     def shared_by(self, namespace: Hashable) -> int:
         return sum(1 for ns in self._shared.values() if ns == namespace)
 
+    def shared_ids(self) -> set:
+        """Ids of all cache-owned pages — legitimately multi-mapped
+        (read-only), so the batcher's page-table audit exempts them from
+        double-mapping detection."""
+        return set(self._shared)
+
     def pinned_shared(self) -> int:
         """Shared pages with at least one active user — the set a lease
         shrink cannot reclaim without faulting a live request."""

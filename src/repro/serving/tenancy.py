@@ -260,6 +260,9 @@ class ServingExecutor:
         self._keys: Dict[str, Optional[str]] = {}
         self._on_migrate: Dict[str, Callable[[Any], None]] = {}
         self._kv_limit_cbs: Dict[str, Callable[[int], None]] = {}
+        # fault-domain plumbing
+        self._fault_sinks: Dict[str, Callable[[Any], None]] = {}
+        self.fault_log: List[Dict[str, Any]] = []
         # SLO plumbing
         self.completion_sink = None
         self.pending_requests: Dict[str, List[RequestRecord]] = {}
@@ -304,6 +307,15 @@ class ServingExecutor:
         ``batcher.set_page_limit``, so a hypervisor trading memory between
         tenants throttles the live page pool mid-run."""
         self._kv_limit_cbs[tenant] = fn
+
+    def register_fault_sink(self, tenant: str,
+                            fn: Callable[[Any], None]) -> None:
+        """Where the tenant's ``FAILURE`` events land — e.g. a chaos driver
+        forwarding a ``KV_CORRUPT`` fault to the live batcher's
+        ``inject_kv_corruption`` so the audit pass has something real to
+        heal.  Core faults are delivered to the failing core's lease owner;
+        pool-level faults (no core) go to every sink."""
+        self._fault_sinks[tenant] = fn
 
     def register_request_sink(self, tenant: str,
                               fn: Callable[[RequestRecord], None]) -> None:
@@ -462,7 +474,7 @@ class ServingExecutor:
         for table in (self.programs, self.live_state, self.state_specs,
                       self._keys, self._on_migrate, self._request_sinks,
                       self.pending_requests, self._latency_models,
-                      self._kv_limit_cbs):
+                      self._kv_limit_cbs, self._fault_sinks):
             table.pop(name, None)
 
     def exec_request(self, name: str, record: RequestRecord, at: float) -> None:
@@ -478,6 +490,25 @@ class ServingExecutor:
             sink(record)
         else:
             self.pending_requests.setdefault(name, []).append(record)
+
+    def exec_fault(self, fault: Any, at: float) -> None:
+        """A ``FAILURE`` event fired: log it and deliver it to the affected
+        tenant's fault sink.  Core death itself needs no serving-side work —
+        the hypervisor displaces the owner through the normal
+        ``exec_evict`` → re-admit path, and physical isolation means no
+        other tenant's programs ever touched the failed core."""
+        self.fault_log.append({"at": at, "fault": fault, "recovered": False})
+        if fault.core is not None:
+            owner = self.pool.owner_of(fault.core)
+            sinks = ([self._fault_sinks[owner]]
+                     if owner in self._fault_sinks else [])
+        else:
+            sinks = list(self._fault_sinks.values())
+        for sink in sinks:
+            sink(fault)
+
+    def exec_recover(self, fault: Any, at: float) -> None:
+        self.fault_log.append({"at": at, "fault": fault, "recovered": True})
 
     def exec_evict(self, name: str, at: float) -> None:
         """Preemptive eviction: release the lease and current program but —

@@ -1,0 +1,563 @@
+"""Fault-domain hypervisor: seeded injection, detection, displacement and
+recovery — with zero cross-tenant blast radius.
+
+Covers the chaos contract end to end at the core layer:
+
+* :class:`FaultInjector` determinism (same seed ⇒ byte-identical schedule),
+* event-queue tie-breaking (FAILURE drains before anything else at the
+  same timestamp; RECOVERY lands before same-time ARRIVALs),
+* :class:`ResourcePool` health bookkeeping (``mark_failed`` /
+  ``check_health`` / ``n_healthy``),
+* hypervisor displacement, backoff retry and the ``recovery_log``,
+* ``CORE_SLOW`` visibility through the engine's straggler probes,
+* preemption rollback when the pool shrinks mid-rollback (exact
+  restoration where possible, loud invariant-clean abort otherwise).
+
+Serving-side guards (NaN sentinel, watchdog, page-table audit) live in
+``TestServingGuards`` at the bottom — they ride the real jax batcher.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import (
+    EventKind, FaultInjector, FaultKind, FaultSpec, Hypervisor, ResourcePool,
+    TenantSpec, VirtualEngine, fpga_small_core,
+)
+from repro.core.events import EventQueue
+from repro.core.hrp import HRPError
+from repro.models import init_params
+from repro.serving.batcher import ContinuousBatcher, Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+class ChaosExecutor:
+    """RecordingExecutor variant for fault tests: pool-backed, records
+    exec_fault/exec_recover deliveries, and can kill a core *inside*
+    ``exec_evict`` — modelling hardware that dies mid-context-switch (the
+    shrank-mid-rollback scenario)."""
+
+    def __init__(self, pool, fail_on_evict=None):
+        self.pool = pool
+        self.fail_on_evict = fail_on_evict      # core id to kill, one-shot
+        self.calls = []
+        self.faults = []
+
+    def advance(self, t):
+        pass
+
+    def exec_admit(self, spec, n_cores, at):
+        self.calls.append(("admit", spec.name, n_cores))
+        self.pool.alloc(spec.name, n_cores)
+
+    def exec_resize(self, name, n_cores, at, mode):
+        self.calls.append(("resize", name, n_cores))
+        self.pool.resize(name, n_cores)
+
+    def exec_remove(self, name, at):
+        self.calls.append(("remove", name))
+        self.pool.release(name)
+
+    def exec_evict(self, name, at):
+        self.calls.append(("evict", name))
+        self.pool.release(name)
+        if self.fail_on_evict is not None:
+            self.pool.mark_failed(self.fail_on_evict)
+            self.fail_on_evict = None
+
+    def exec_kv_resize(self, name, pages, at):
+        self.calls.append(("kv", name, pages))
+
+    def exec_fault(self, fault, at):
+        self.faults.append(("fault", fault.kind, fault.core, at))
+
+    def exec_recover(self, fault, at):
+        self.faults.append(("recover", fault.kind, fault.core, at))
+
+
+# ---------------------------------------------------------------------------
+# injector determinism
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def _inj(self, seed=7):
+        return FaultInjector(16, seed=seed, death_rate=0.5, slow_rate=0.3,
+                             corrupt_rate=0.2, n_kv_pages=64)
+
+    def test_same_seed_identical_schedule(self):
+        a, b = self._inj().schedule(50.0), self._inj().schedule(50.0)
+        assert a == b                     # FaultSpec is frozen -> field eq
+        assert len(a) > 0
+
+    def test_schedule_is_pure(self):
+        inj = self._inj()
+        assert inj.schedule(50.0) == inj.schedule(50.0)
+
+    def test_different_seed_differs(self):
+        assert self._inj(seed=7).schedule(50.0) != \
+            self._inj(seed=8).schedule(50.0)
+
+    def test_time_order_and_fids(self):
+        sched = self._inj().schedule(50.0)
+        times = [f.time for f in sched]
+        assert times == sorted(times)
+        assert [f.fid for f in sched] == list(range(len(sched)))
+        for f in sched:
+            if f.kind is FaultKind.KV_CORRUPT:
+                assert f.core is None and 0 <= f.page < 64
+            else:
+                assert f.page is None and 0 <= f.core < 16
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultInjector(0, seed=1)
+        with pytest.raises(ValueError):
+            FaultInjector(4, death_rate=-0.1)
+        with pytest.raises(ValueError):
+            FaultInjector(4, corrupt_rate=0.5)     # no n_kv_pages
+
+    def test_inject_schedules_failures_and_recoveries(self):
+        inj = FaultInjector(8, seed=3, death_rate=0.4, slow_rate=0.4,
+                            repair_after=1.0)
+        q = EventQueue()
+        sched = inj.inject(q, 20.0)
+        events = []
+        while q:
+            events.append(q.pop())
+        fails = [e for e in events if e.kind is EventKind.FAILURE]
+        recs = [e for e in events if e.kind is EventKind.RECOVERY]
+        assert [e.payload["fault"] for e in fails] == sched
+        expected_recs = sum(1 for f in sched
+                            if f.duration is not None
+                            and f.time + f.duration <= 20.0)
+        assert len(recs) == expected_recs
+        times = [e.time for e in events]
+        assert times == sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# event-queue tie-breaking
+# ---------------------------------------------------------------------------
+
+class TestFailureEventOrdering:
+    def test_same_timestamp_kind_rank(self):
+        """At one timestamp the queue drains in the documented order:
+        FAILURE first (capacity shrinks before anyone plans over it),
+        RECOVERY after RECONFIG but before ARRIVAL (repaired cores are
+        placeable for same-instant arrivals)."""
+        q = EventQueue()
+        kinds = [EventKind.ARRIVAL, EventKind.PROBE, EventKind.RECOVERY,
+                 EventKind.REQUEST, EventKind.FAILURE, EventKind.COMPLETION,
+                 EventKind.RECONFIG, EventKind.DEPARTURE]
+        for k in kinds:                    # deliberately shuffled insert
+            q.schedule(k, 1.0)
+        got = [q.pop().kind for _ in range(len(kinds))]
+        assert got == [EventKind.FAILURE, EventKind.DEPARTURE,
+                       EventKind.COMPLETION, EventKind.RECONFIG,
+                       EventKind.RECOVERY, EventKind.ARRIVAL,
+                       EventKind.REQUEST, EventKind.PROBE]
+
+    def test_failure_beats_simultaneous_arrival_in_run(self):
+        """A FAILURE and an ARRIVAL at the same instant: the arrival must
+        be planned over the already-shrunk pool (it cannot land on the
+        dying core)."""
+        pool = ResourcePool(4)
+        hv = Hypervisor(pool, executor=ChaosExecutor(pool))
+        hv.schedule_arrival(TenantSpec("a", 4, min_cores=4), at=1.0)
+        hv.schedule_fault(FaultSpec(time=1.0, kind=FaultKind.CORE_DEATH,
+                                    fid=0, core=0), recovery=False)
+        hv.run(2.0)
+        assert hv.allocation() == {}           # 3 healthy < min_cores=4
+        assert hv.waiting_tenants() == ["a"]
+        pool.check_health()
+
+
+# ---------------------------------------------------------------------------
+# pool health bookkeeping
+# ---------------------------------------------------------------------------
+
+class TestPoolHealth:
+    def test_mark_failed_excludes_from_placement(self):
+        pool = ResourcePool(4)
+        assert pool.mark_failed(0) is None        # free core: no owner
+        assert pool.n_healthy == 3
+        assert pool.failed_cores() == [0]
+        with pytest.raises(HRPError):
+            pool.alloc("b", 4)                    # only 3 placeable
+        pool.alloc("b", 3)
+        assert 0 not in pool.lease_of("b").cores
+        pool.release("b")
+        pool.mark_recovered(0)
+        assert pool.n_healthy == 4
+        pool.alloc("c", 4)                        # back to full capacity
+
+    def test_mark_failed_returns_owner(self):
+        pool = ResourcePool(4)
+        pool.alloc("a", 2)
+        core = pool.lease_of("a").cores[0]
+        assert pool.mark_failed(core) == "a"
+        with pytest.raises(HRPError, match="a"):
+            pool.check_health()                   # lease on dead hardware
+        pool.mark_recovered(core)
+        pool.check_health()
+
+    def test_out_of_range_core_raises(self):
+        pool = ResourcePool(4)
+        with pytest.raises(HRPError):
+            pool.mark_failed(4)
+        with pytest.raises(HRPError):
+            pool.mark_recovered(-1)
+
+    def test_fault_domains_follow_ddr_groups(self):
+        pool = ResourcePool(16)
+        g = pool.cores_per_ddr
+        for c in range(16):
+            assert pool.fault_domain(c) == c // g
+        assert pool.domain_cores(1) == list(range(g, 2 * g))
+
+
+# ---------------------------------------------------------------------------
+# hypervisor displacement + recovery
+# ---------------------------------------------------------------------------
+
+class TestHypervisorFaults:
+    def test_core_death_displaces_owner_only(self):
+        """Blast radius: the failed core's owner is re-placed on healthy
+        cores inside the FAILURE event; the neighbour keeps its lease."""
+        pool = ResourcePool(8)
+        hv = Hypervisor(pool, executor=ChaosExecutor(pool))
+        hv.admit(TenantSpec("a", 4), at=0.0)
+        hv.admit(TenantSpec("b", 4, arrived_at=0.1), at=0.1)
+        dead = pool.lease_of("a").cores[0]
+        hv.fail_core(dead, at=1.0)
+        assert "a" in hv.specs                     # re-placed immediately
+        assert dead not in pool.lease_of("a").cores
+        assert "b" in hv.specs
+        assert hv.recovery_log[-1]["tenant"] == "a"
+        assert hv.recovery_log[-1]["recovery_latency"] == 0.0
+        assert hv.fault_log[-1].core == dead
+        pool.check_health()
+
+    def test_free_core_death_touches_nobody(self):
+        pool = ResourcePool(8)
+        hv = Hypervisor(pool, executor=ChaosExecutor(pool))
+        hv.admit(TenantSpec("a", 4), at=0.0)
+        before = hv.allocation()
+        free = pool.free_cores()[0]
+        hv.fail_core(free, at=1.0)
+        assert hv.allocation() == before
+        assert hv.recovery_log == []
+
+    def test_displaced_tenant_parks_with_backoff(self):
+        pool = ResourcePool(4)
+        hv = Hypervisor(pool, executor=ChaosExecutor(pool))
+        hv.admit(TenantSpec("a", 4, min_cores=4), at=0.0)
+        dead = pool.lease_of("a").cores[0]
+        hv.fail_core(dead, at=1.0)
+        assert hv.allocation() == {}               # 3 healthy < floor 4
+        assert hv.waiting_tenants() == ["a"]       # head of the queue
+        assert hv._retry_backoff["a"] == pytest.approx(
+            2 * hv.fault_retry_backoff)            # doubled at schedule
+        hv.run(1.5)                                # retries fire, keep failing
+        assert hv._retry_backoff["a"] > 2 * hv.fault_retry_backoff
+        hv.recover_core(dead, at=2.0)
+        assert hv.allocation() == {"a": 4}
+        rec = hv.recovery_log[-1]
+        assert rec["failed_at"] == 1.0 and rec["recovered_at"] == 2.0
+        assert rec["recovery_latency"] == pytest.approx(1.0)
+
+    def test_timed_fault_auto_recovers(self):
+        pool = ResourcePool(4)
+        hv = Hypervisor(pool, executor=ChaosExecutor(pool))
+        hv.admit(TenantSpec("a", 4, min_cores=4), at=0.0)
+        dead = pool.lease_of("a").cores[0]
+        hv.fail_core(dead, at=1.0, duration=0.5)
+        hv.run(3.0)                                # RECOVERY event at 1.5
+        assert hv.allocation() == {"a": 4}
+        assert hv.recovery_log[-1]["recovery_latency"] == pytest.approx(0.5)
+
+    def test_kv_corrupt_delivered_to_executor(self):
+        pool = ResourcePool(4, n_kv_pages=32)
+        ex = ChaosExecutor(pool)
+        hv = Hypervisor(pool, executor=ex)
+        hv.admit(TenantSpec("a", 2), at=0.0)
+        before = hv.allocation()
+        hv.schedule_fault(FaultSpec(time=1.0, kind=FaultKind.KV_CORRUPT,
+                                    fid=0, page=3), recovery=False)
+        hv.run(2.0)
+        assert ("fault", FaultKind.KV_CORRUPT, None, 1.0) in ex.faults
+        assert hv.allocation() == before           # no placement change
+
+    def test_injected_run_is_deterministic(self):
+        def run_once():
+            pool = ResourcePool(8)
+            ex = ChaosExecutor(pool)
+            hv = Hypervisor(pool, executor=ex)
+            hv.admit(TenantSpec("a", 8, min_cores=1), at=0.0)
+            inj = FaultInjector(8, seed=5, death_rate=0.6, slow_rate=0.4,
+                                repair_after=0.8)
+            inj.inject(hv.queue, 6.0)
+            hv.run(6.0)
+            return (
+                [(f.fid, f.kind, f.time, f.core) for f in hv.fault_log],
+                [tuple(sorted(r.items())) for r in hv.recovery_log],
+                hv.allocation(),
+                ex.faults,
+            )
+
+        assert run_once() == run_once()
+        assert len(run_once()[0]) > 0              # faults actually fired
+
+
+# ---------------------------------------------------------------------------
+# CORE_SLOW -> straggler probes
+# ---------------------------------------------------------------------------
+
+class TestSlowCoreFaults:
+    def test_exec_fault_sets_and_clears_slowdown(self):
+        eng = VirtualEngine(ResourcePool(8), fpga_small_core())
+        f = FaultSpec(time=1.0, kind=FaultKind.CORE_SLOW, fid=0, core=3,
+                      factor=3.0, duration=2.0)
+        eng.exec_fault(f, 1.0)
+        assert eng.core_slowdown[3] == 3.0
+        eng.exec_fault(dataclasses.replace(f, factor=2.0), 1.5)
+        assert eng.core_slowdown[3] == 3.0         # escalation keeps the max
+        eng.exec_recover(f, 3.0)
+        assert 3 not in eng.core_slowdown
+
+    def test_injected_slowdown_trips_straggler_probe(self, resnet_artifact):
+        """The detection path for CORE_SLOW is the paper's straggler probe:
+        the injected fault shows up in core_slowdown, the next probe
+        rebalances the tenant's tiles, and the repair clears the state."""
+        pool = ResourcePool(16)
+        eng = VirtualEngine(pool, fpga_small_core(), straggler_threshold=1.3)
+        hv = Hypervisor(pool, policy="no_realloc", executor=eng,
+                        probe_interval=0.05)
+        hv.schedule_arrival(TenantSpec("t", 8, artifact=resnet_artifact),
+                            at=0.0)
+        hv.schedule_fault(FaultSpec(time=0.1, kind=FaultKind.CORE_SLOW,
+                                    fid=0, core=0, factor=3.0, duration=0.3))
+        metrics = hv.run(0.6)
+        assert metrics["t"].rebalances >= 1
+        assert eng.core_slowdown == {}             # RECOVERY cleared it
+
+
+# ---------------------------------------------------------------------------
+# preemption rollback under a shrinking pool (satellite: kv-lease rollback)
+# ---------------------------------------------------------------------------
+
+class TestRollbackUnderShrink:
+    def test_rollback_aborts_loudly_when_pool_shrank(self):
+        """A core dies during the eviction context-switch, so the evicted
+        victim's exact lease no longer fits.  The rollback must abort
+        LOUDLY (chained HRPError) while leaving every invariant clean: the
+        victim parks at the wait-queue head, nothing holds a partial core
+        or kv lease."""
+        pool = ResourcePool(n_cores=4, n_kv_pages=100)
+        ex = ChaosExecutor(pool, fail_on_evict=0)
+        hv = Hypervisor(pool, executor=ex, preemptive=True)
+        assert hv.admit(TenantSpec("low", 4, min_cores=4, priority=1.0,
+                                   requested_kv_pages=40, min_kv_pages=40),
+                        at=0.0)
+        assert pool.kv_lease_of("low") == 40
+        with pytest.raises(HRPError, match="rollback could not restore"):
+            hv.admit(TenantSpec("hi", 4, min_cores=4, priority=2.0,
+                                arrived_at=1.0), at=1.0)
+        # loud, but clean: victim parked, zero partial state
+        assert hv.waiting_tenants()[0] == "low"
+        assert "low" in hv._displaced_at           # recovery clock running
+        assert hv.allocation() == {}
+        assert pool.kv_leases == {}
+        pool.check_isolation()
+        pool.check_kv_quota()
+        pool.check_health()
+
+    def test_rollback_restores_exactly_on_healthy_remainder(self):
+        """If the shrunk pool still fits the victim's exact pre-eviction
+        lease (cores AND kv pages), the rollback restores it precisely —
+        the victim pays the context switch but keeps its resources."""
+        pool = ResourcePool(n_cores=4, n_kv_pages=100)
+        ex = ChaosExecutor(pool, fail_on_evict=3)  # kill a FREE core
+        hv = Hypervisor(pool, executor=ex, preemptive=True)
+        assert hv.admit(TenantSpec("low", 2, min_cores=2, priority=1.0,
+                                   requested_kv_pages=30, min_kv_pages=30),
+                        at=0.0)
+        kv_before = pool.kv_lease_of("low")
+        assert kv_before == 30
+        assert not hv.admit(TenantSpec("hi", 4, min_cores=4, priority=2.0,
+                                       arrived_at=1.0), at=1.0)
+        assert hv.allocation() == {"low": 2}       # exact core restoration
+        assert pool.kv_lease_of("low") == kv_before
+        assert 3 not in pool.lease_of("low").cores
+        assert hv.waiting_tenants() == ["hi"]
+        pool.check_isolation()
+        pool.check_kv_quota()
+        pool.check_health()
+
+    def test_recovered_core_readmits_rollback_casualty(self):
+        """After a loud rollback abort, repairing the core lets the parked
+        victim re-place through the normal recovery path, stamping the
+        recovery_log."""
+        pool = ResourcePool(n_cores=4, n_kv_pages=100)
+        ex = ChaosExecutor(pool, fail_on_evict=0)
+        hv = Hypervisor(pool, executor=ex, preemptive=True)
+        hv.admit(TenantSpec("low", 4, min_cores=4, priority=1.0), at=0.0)
+        with pytest.raises(HRPError):
+            hv.admit(TenantSpec("hi", 4, min_cores=4, priority=2.0,
+                                arrived_at=1.0), at=1.0)
+        hv.recover_core(0, at=2.0)
+        assert hv.allocation() == {"low": 4}
+        assert hv.recovery_log[-1]["tenant"] == "low"
+        assert hv.recovery_log[-1]["recovery_latency"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving-side guards: NaN sentinel, watchdog, page-table audit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    return cfg, init_params(cfg, KEY)
+
+
+def _prompts(cfg, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab, size=1 + i % 6).astype(np.int32)
+            for i in range(n)]
+
+
+def _batcher(params, cfg, **kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("prompt_len", 8)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk", 4)
+    return ContinuousBatcher(params, cfg, **kw)
+
+
+def _submit(b, cfg, n, max_new=8, seed=3):
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(_prompts(cfg, n, seed=seed))]
+    for r in reqs:
+        b.submit(r)
+    return reqs
+
+
+def _poison_caches(b):
+    """Flip every float cache value to NaN — the bit-flip fault model.  The
+    sentinel must catch the poisoned logits before any token is emitted."""
+    b.caches = jax.tree_util.tree_map(
+        lambda x: jnp.full_like(x, jnp.nan)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, b.caches)
+
+
+def _quarantine_partition(b):
+    """Mapped + free + cache-shared + quarantined partitions the pool, and
+    a quarantined page is neither free nor mapped."""
+    tab = np.asarray(b.pages.table)
+    free = set(np.asarray(b.pages.free)[: int(b.pages.free_top)].tolist())
+    mapped = set(tab[tab >= 0].tolist())
+    shared = b.kv_pool.shared_ids()
+    quarantined = b._quarantined
+    assert not (quarantined & free), "quarantined page back on free stack"
+    assert not (quarantined & mapped), "quarantined page still mapped"
+    assert sorted(mapped | free | shared | quarantined) == \
+        list(range(b.n_pages)), "pool partition violated"
+
+
+class TestServingGuards:
+    def test_nan_sentinel_requeues_dense(self, qwen):
+        cfg, params = qwen
+        b = _batcher(params, cfg)
+        reqs = _submit(b, cfg, 4)
+        for _ in range(2):
+            b.step()
+        _poison_caches(b)                      # every active slot goes bad
+        b.run(max_steps=4000)
+        assert b.stats.poisoned_slots >= 1
+        assert all(len(r.out) > 0 for r in reqs)   # self-healed to completion
+        assert not any(b.slot_req)
+
+    def test_nan_sentinel_requeues_paged(self, qwen):
+        cfg, params = qwen
+        b = _batcher(params, cfg, paged=True, page_size=8)
+        reqs = _submit(b, cfg, 4)
+        for _ in range(2):
+            b.step()
+        _poison_caches(b)
+        b.run(max_steps=4000)
+        assert b.stats.poisoned_slots >= 1
+        assert all(len(r.out) > 0 for r in reqs)
+        # poisoned slots were recycled on-device: no page leaked
+        assert int(b.pages.free_top) == b.n_pages
+        b.kv_pool.check()
+
+    def test_watchdog_trips_on_stalled_chunk(self, qwen):
+        cfg, params = qwen
+        b = _batcher(params, cfg, clock=lambda: 0.0, watchdog_s=0.5)
+        reqs = _submit(b, cfg, 2)
+        b.step()                               # healthy step: no trip
+        assert b.stats.watchdog_trips == 0
+        b.inject_stall(0, 1.0)                 # next dispatch wedges 1s
+        b.step()
+        assert b.stats.watchdog_trips == 1
+        assert b.slot_req[0] is None           # stuck slot deactivated
+        b.run(max_steps=4000)                  # requeued work still finishes
+        assert all(len(r.out) > 0 for r in reqs)
+
+    def test_audit_quarantines_out_of_range_pid(self, qwen):
+        cfg, params = qwen
+        b = _batcher(params, cfg, paged=True, page_size=8, audit=True)
+        reqs = _submit(b, cfg, 4, max_new=32)  # long enough to outlive inject
+        for _ in range(2):
+            b.step()
+        assert any(b.slot_req)                 # corruption hits a live slot
+        b.inject_kv_corruption(0)              # out-of-range pid in slot 0
+        b.step()                               # audit rides the next sync
+        assert b.stats.audit_repairs >= 1
+        b.run(max_steps=4000)
+        assert all(len(r.out) > 0 for r in reqs)
+        _quarantine_partition(b)
+
+    def test_audit_quarantines_double_mapped_page(self, qwen):
+        cfg, params = qwen
+        b = _batcher(params, cfg, paged=True, page_size=8, audit=True)
+        reqs = _submit(b, cfg, 4, max_new=32)
+        for _ in range(2):
+            b.step()
+        assert b.slot_req[0] is not None and b.slot_req[1] is not None
+        row1 = np.asarray(b.pages.table)[1]
+        stolen = int(row1[row1 >= 0][0])       # a page slot 1 really owns
+        b.inject_kv_corruption(0, pid=stolen)  # slot 0 claims it too
+        b.step()
+        assert b.stats.audit_repairs >= 2      # both mappings cleared
+        assert stolen in b._quarantined
+        assert b.stats.quarantined_pages >= 1
+        b.run(max_steps=4000)
+        assert all(len(r.out) > 0 for r in reqs)
+        _quarantine_partition(b)
+
+    def test_audit_exempts_shared_prefix_pages(self, qwen):
+        """Cache-owned prefix pages are legitimately multi-mapped; the
+        audit must not mistake them for corruption."""
+        cfg, params = qwen
+        b = _batcher(params, cfg, prompt_len=32, paged=True, page_size=8,
+                     prefix_cache=True, audit=True)
+        rng = np.random.default_rng(0)
+        head = rng.integers(1, cfg.vocab, size=28).astype(np.int32)
+        reqs = [Request(rid=i, prompt=np.concatenate(
+                    [head, rng.integers(1, cfg.vocab, size=4)
+                     .astype(np.int32)]), max_new=6)
+                for i in range(6)]
+        for r in reqs:
+            b.submit(r)
+        b.run(max_steps=4000)
+        assert all(len(r.out) > 0 for r in reqs)
+        assert b.stats.audit_repairs == 0      # shared pages left alone
+        assert b.stats.quarantined_pages == 0

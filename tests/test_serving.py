@@ -134,9 +134,11 @@ class TestChunkedDecode:
             remaining=jnp.full((B,), T + 1, jnp.int32),
             eos=jnp.full((B,), -1, jnp.int32),
         )
-        _, state, toks, emitted = chunk(params, caches, state, jax.random.PRNGKey(7))
+        _, state, toks, emitted, poisoned = chunk(
+            params, caches, state, jax.random.PRNGKey(7))
         np.testing.assert_array_equal(np.asarray(toks), np.stack(ref))
         assert bool(np.asarray(emitted).all())
+        assert not np.asarray(poisoned).any()
 
     def test_eos_mid_chunk_freezes_slot(self, qwen):
         """A slot hitting EOS inside the chunk stops emitting and freezes its
@@ -158,12 +160,12 @@ class TestChunkedDecode:
             )
             return chunk(params, caches0, state, jax.random.PRNGKey(7))
 
-        _, _, free_toks, _ = run(jnp.full((B,), -1, jnp.int32))
+        _, _, free_toks, _, _ = run(jnp.full((B,), -1, jnp.int32))
         free = np.asarray(free_toks)                      # (T, B)
         # force slot 0 to hit EOS at step 2
         eos0 = int(free[2, 0])
         eos = jnp.array([eos0, -1], dtype=jnp.int32)
-        _, state, toks, emitted = run(eos)
+        _, state, toks, emitted, _ = run(eos)
         toks, emitted = np.asarray(toks), np.asarray(emitted)
         assert emitted[: 3, 0].all() and not emitted[3:, 0].any()
         assert emitted[:, 1].all()
@@ -222,7 +224,7 @@ class TestChunkedDecode:
             eos=jnp.full((B,), -1, jnp.int32),
         )
         kv0 = caches.kv["0"].k
-        new_caches, state, _, _ = chunk(params, caches, state, KEY)
+        new_caches, state, _, _, _ = chunk(params, caches, state, KEY)
         jax.block_until_ready(new_caches.kv["0"].k)
         assert kv0.is_deleted(), "input KV buffer survived: cache was copied"
         assert not new_caches.kv["0"].k.is_deleted()
