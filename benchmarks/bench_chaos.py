@@ -170,11 +170,14 @@ def _requests(cfg):
 
 
 def _run_serving(qwen, inject: bool) -> Dict:
+    from repro.serving import ServingConfig
     from repro.serving.batcher import ContinuousBatcher
     cfg, params = qwen
-    b = ContinuousBatcher(params, cfg, slots=4, prompt_len=8, max_len=64,
-                          chunk=2, paged=True, page_size=8,
-                          clock=lambda: 0.0, watchdog_s=0.5, audit=True)
+    b = ContinuousBatcher(
+        params, cfg,
+        ServingConfig(slots=4, prompt_len=8, max_len=64, chunk=2,
+                      paged=True, page_size=8, watchdog_s=0.5, audit=True),
+        clock=lambda: 0.0)
     for r in _requests(cfg):
         b.submit(r)
     outs: Dict[int, List[int]] = {}

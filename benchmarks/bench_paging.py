@@ -85,6 +85,7 @@ def _bench(params, cfg, *, paged: bool, slots: int, n_pages=None,
            attn_impl: str = "xla") -> Dict:
     import jax
 
+    from repro.serving import ServingConfig
     from repro.serving.batcher import ContinuousBatcher
     from repro.serving.kv_cache import tree_bytes
 
@@ -93,7 +94,7 @@ def _bench(params, cfg, *, paged: bool, slots: int, n_pages=None,
                   chunk=CHUNK, attn_impl=attn_impl)
         if paged:
             kw.update(paged=True, page_size=PAGE_SIZE, n_pages=n_pages)
-        return ContinuousBatcher(params, cfg, **kw)
+        return ContinuousBatcher(params, cfg, ServingConfig(**kw))
 
     warm = batcher()                       # compile outside the timed region
     for r in _requests(cfg, slots + 1):

@@ -78,13 +78,16 @@ def _bench(params, cfg, *, overlap: float, cached: bool,
            attn_impl: str = "xla") -> Dict:
     import jax
 
+    from repro.serving import ServingConfig
     from repro.serving.batcher import ContinuousBatcher
 
     def batcher():
         return ContinuousBatcher(
-            params, cfg, slots=SLOTS, prompt_len=PROMPT_LEN, max_len=MAX_LEN,
-            chunk=4, paged=True, page_size=PAGE_SIZE, prefix_cache=cached,
-            attn_impl=attn_impl)
+            params, cfg,
+            ServingConfig(slots=SLOTS, prompt_len=PROMPT_LEN,
+                          max_len=MAX_LEN, chunk=4, paged=True,
+                          page_size=PAGE_SIZE, prefix_cache=cached,
+                          attn_impl=attn_impl))
 
     warm = batcher()                     # compile outside the timed region
     for r in _requests(cfg, 2 * SLOTS, overlap, seed=99):

@@ -7,7 +7,9 @@ build when
 
 * any serving mode's decode ``tokens_per_s`` dropped more than
   ``--tolerance`` (default 25%) below the committed ``BENCH_serving.json``
-  baseline, or
+  baseline, or the fresh mixed-trace leg no longer shows speculative
+  decode + admission/decode overlap at >= 1.3x the serial batcher's decode
+  tokens/s (same host, same run — gated exactly), or
 * the fresh ``BENCH_slo.json`` no longer records the ``latency_slo`` policy
   strictly beating ``even_split`` and ``no_realloc`` on SLO attainment, or
 * the fresh ``BENCH_paging.json`` no longer meets the paged-KV acceptance:
@@ -86,8 +88,8 @@ def check_serving(baseline: dict, fresh: dict, tolerance: float) -> list:
         errors.append(f"serving: fresh run lacks modes {sorted(missing)}")
     for mode, base in base_rows.items():
         row = fresh_rows.get(mode)
-        if row is None:
-            continue
+        if row is None or mode.startswith("mixed_"):
+            continue                       # mixed legs gate same-run below
         floor = base["tokens_per_s"] * (1.0 - tolerance)
         if row["tokens_per_s"] < floor:
             errors.append(
@@ -101,6 +103,28 @@ def check_serving(baseline: dict, fresh: dict, tolerance: float) -> list:
                 f"serving[{mode}]: decode dispatches/token "
                 f"{row['decode_dispatches_per_token']} > 1/8"
             )
+    # mixed-trace speculative+overlap leg: recorded acceptance bit AND the
+    # re-derived ratio itself.  Both legs ran on the same host in the same
+    # fresh run, so the floor gates exactly (host speed cancels).
+    if not fresh.get("acceptance_spec_overlap"):
+        errors.append(
+            "serving: snapshot does not record the spec+overlap acceptance")
+    serial = fresh_rows.get("mixed_serial")
+    both = fresh_rows.get("mixed_spec_overlap")
+    if not (serial and both):
+        errors.append(
+            f"serving: mixed-trace rows missing, have {sorted(fresh_rows)}")
+    else:
+        ratio = both["decode_tokens_per_s"] / max(
+            serial["decode_tokens_per_s"], 1e-9)
+        if ratio < SPEC_OVERLAP_RATIO_FLOOR:
+            errors.append(
+                f"serving: mixed-trace spec+overlap decode tokens/s at "
+                f"{ratio:.3f}x serial < {SPEC_OVERLAP_RATIO_FLOOR} floor")
+        if both["acceptance_rate"] <= 0:
+            errors.append(
+                "serving: spec+overlap leg recorded zero draft acceptance "
+                "(drafter not engaged?)")
     return errors
 
 
@@ -123,6 +147,7 @@ def check_slo(fresh: dict) -> list:
 # snapshot — a fresh run cannot relax its own gate (bench_paging.py /
 # bench_prefix.py assert the same bars at generation time; keep them in
 # sync deliberately).
+SPEC_OVERLAP_RATIO_FLOOR = 1.3
 PAGING_CAPACITY_FLOOR = 1.5
 PAGING_TOKENS_RATIO_FLOOR = 0.85
 PREFIX_ADMIT_RATIO_FLOOR = 1.3

@@ -34,6 +34,7 @@ from repro.core import (
     StaticCompiler, TenantSpec, VirtualEngine, fpga_small_core,
 )
 from repro.models import init_params
+from repro.serving import ServingConfig
 from repro.serving.batcher import ContinuousBatcher, Request
 
 
@@ -83,9 +84,12 @@ def serving_chaos() -> None:
             for i in range(8)]            # rids 0-3 = tenant A, 4-7 = B
 
     def run(inject: bool):
-        b = ContinuousBatcher(params, cfg, slots=4, prompt_len=8, max_len=64,
-                              chunk=2, paged=True, page_size=8,
-                              clock=lambda: 0.0, watchdog_s=0.5, audit=True)
+        b = ContinuousBatcher(
+            params, cfg,
+            ServingConfig(slots=4, prompt_len=8, max_len=64, chunk=2,
+                          paged=True, page_size=8, watchdog_s=0.5,
+                          audit=True),
+            clock=lambda: 0.0)
         for r in reqs:
             r.out.clear()
             b.submit(r)

@@ -29,6 +29,7 @@ import jax
 from repro.configs import get_reduced
 from repro.core import TenantSpec
 from repro.models import init_params
+from repro.serving import ServingConfig
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.kv_cache import pages_for
 from repro.serving.tenancy import VirtualAcceleratorPool, make_serving_hypervisor
@@ -58,10 +59,11 @@ def main() -> None:
     # the whole page budget
     assert hv.admit(TenantSpec("alice", 4, requested_kv_pages=32,
                                min_kv_pages=4))
-    alice = ContinuousBatcher(params, cfg, slots=8, prompt_len=PROMPT_LEN,
-                              max_len=MAX_LEN, chunk=8, paged=True,
-                              page_size=PAGE_SIZE,
-                              n_pages=hv.kv_allocation()["alice"])
+    alice = ContinuousBatcher(
+        params, cfg,
+        ServingConfig(slots=8, prompt_len=PROMPT_LEN, max_len=MAX_LEN,
+                      chunk=8, paged=True, page_size=PAGE_SIZE,
+                      n_pages=hv.kv_allocation()["alice"]))
     ex.register_kv_limit("alice", alice.set_page_limit)
     per_req = pages_for(PROMPT_LEN + MAX_NEW, PAGE_SIZE)
     print(f"alice: {hv.kv_allocation()['alice']} pages "

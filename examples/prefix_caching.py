@@ -29,6 +29,7 @@ import jax  # noqa: E402
 from repro.configs import get_reduced  # noqa: E402
 from repro.core import ResourcePool, TenantSpec, Hypervisor  # noqa: E402
 from repro.models import init_params  # noqa: E402
+from repro.serving import ServingConfig  # noqa: E402
 from repro.serving.batcher import ContinuousBatcher, Request  # noqa: E402
 
 PROMPT_LEN = 64
@@ -49,9 +50,10 @@ def main():
         return Request(rid=rid, prompt=np.concatenate([system_prompt, tail]),
                        max_new=4, namespace=SHARED_NS)
 
-    b = ContinuousBatcher(params, cfg, slots=4, prompt_len=PROMPT_LEN,
-                          max_len=96, chunk=4, paged=True,
-                          page_size=PAGE_SIZE, prefix_cache=True)
+    b = ContinuousBatcher(
+        params, cfg,
+        ServingConfig(slots=4, prompt_len=PROMPT_LEN, max_len=96, chunk=4,
+                      paged=True, page_size=PAGE_SIZE, prefix_cache=True))
     # even rids are ada's traffic, odd rids bob's — same namespace, so the
     # shared preamble's pages are physically one copy across both tenants
     reqs = [request(i) for i in range(16)]

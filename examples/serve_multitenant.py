@@ -28,6 +28,7 @@ import jax
 from repro.configs import get_reduced
 from repro.core import TenantSpec
 from repro.models import init_params
+from repro.serving import ServingConfig
 from repro.serving.batcher import ContinuousBatcher, Request
 from repro.serving.tenancy import VirtualAcceleratorPool, make_serving_hypervisor
 
@@ -64,8 +65,9 @@ def main() -> None:
                                    artifact=artifact)):
             raise RuntimeError(f"{tenant} was not admitted (waiting: {hv.waiting_tenants()})")
         lease = pool.pool.lease_of(tenant)
-        batcher = ContinuousBatcher(params, cfg, slots=4, prompt_len=12,
-                                    max_len=40, chunk=8)
+        batcher = ContinuousBatcher(
+            params, cfg,
+            ServingConfig(slots=4, prompt_len=12, max_len=40, chunk=8))
         # pull-model state registration: a resize landing between chunks
         # migrates the donated caches and hands them back via adopt_state
         ex.register_state(tenant, batcher.live_state,

@@ -1,0 +1,96 @@
+"""Speculative decode + prefill/decode overlap on the chunked hot path.
+
+    PYTHONPATH=src python examples/speculative_serving.py
+
+``ServingConfig(speculative=True)`` turns each decode chunk into a
+draft-and-verify window: an on-device n-gram drafter proposes up to
+``draft_window - 1`` tokens per slot from the slot's own committed
+history, one batched multi-query pass verifies the whole window, and the
+accepted prefix commits while rejected tokens roll back (cursor
+non-advance + overwrite discipline).  The output is token-identical to
+plain greedy decode by construction — speculation only changes *when*
+tokens are produced, never *which*.
+
+``overlap=True`` additionally dispatches admission prefills behind the
+in-flight decode chunk (one merge point per round), so prefill-heavy
+traffic overlaps host planning with device decode instead of serializing.
+
+Acceptance rate is trace-dependent: the n-gram drafter pays on
+repetitive/loopy streams (greedy decode settles into such loops as
+generations run deep) and approaches zero on high-entropy prefixes.  The
+demo runs the same decode-deep trace serial and spec+overlap and prints
+both clocks plus the drafter's scoreboard.
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serving import ServingConfig
+from repro.serving.batcher import ContinuousBatcher, Request
+
+SLOTS, PROMPT_LEN, MAX_NEW = 4, 8, 256
+N_REQUESTS = 12
+
+
+def requests(cfg):
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab,
+                                        size=2 + i % 6).astype(np.int32),
+                    max_new=MAX_NEW)
+            for i in range(N_REQUESTS)]
+
+
+def serve(params, cfg, *, speculative: bool, overlap: bool):
+    sc = ServingConfig(slots=SLOTS, prompt_len=PROMPT_LEN,
+                       max_len=PROMPT_LEN + MAX_NEW + 8, chunk=8,
+                       paged=True, page_size=16, n_pages=256,
+                       speculative=speculative, draft_window=6,
+                       overlap=overlap)
+    b = ContinuousBatcher(params, cfg, sc)
+    reqs = requests(cfg)
+    for r in reqs:
+        b.submit(r)
+    t0 = time.perf_counter()
+    stats = b.run(max_steps=1_000_000)
+    jax.block_until_ready(b.caches)
+    dt = time.perf_counter() - t0
+    return reqs, stats, dt
+
+
+def main() -> None:
+    cfg = get_reduced("qwen3-0.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    serve(params, cfg, speculative=False, overlap=False)   # compile warmup
+    base, base_stats, base_dt = serve(params, cfg,
+                                      speculative=False, overlap=False)
+    serve(params, cfg, speculative=True, overlap=True)     # compile warmup
+    spec, spec_stats, spec_dt = serve(params, cfg,
+                                      speculative=True, overlap=True)
+
+    assert all(b.out == s.out for b, s in zip(base, spec)), \
+        "speculative greedy must be token-identical to plain greedy"
+    print(f"serial greedy:  {base_stats.decode_tokens} decode tokens in "
+          f"{base_dt:.2f}s ({base_stats.decode_tokens / base_dt:,.0f} tok/s)")
+    print(f"spec + overlap: {spec_stats.decode_tokens} decode tokens in "
+          f"{spec_dt:.2f}s ({spec_stats.decode_tokens / spec_dt:,.0f} tok/s) "
+          f"-> {base_dt / spec_dt:.2f}x")
+    print(f"  outputs identical across all {len(base)} requests")
+    print(f"  drafter: {spec_stats.drafted_tokens} drafted, "
+          f"{spec_stats.accepted_tokens} accepted "
+          f"(acceptance {spec_stats.acceptance_rate:.2f}) over "
+          f"{spec_stats.spec_windows} verify windows")
+    print(f"  overlap: {spec_stats.overlap_rounds} rounds dispatched an "
+          f"admission prefill behind the in-flight decode chunk")
+
+
+if __name__ == "__main__":
+    main()

@@ -131,3 +131,106 @@ def paged_decode_attention_kernel(
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group, dh), q.dtype),
         interpret=interpret,
     )(gather, cur_pos, q, k_pool, v_pool)
+
+
+def _paged_verify_kernel(
+    gather_ref, cur_ref,                      # scalar prefetch (SMEM)
+    q_ref, k_ref, v_ref, o_ref,               # blocks (VMEM)
+    m_ref, l_ref, acc_ref,                     # scratch (VMEM)
+    *, page_size: int, n_pages: int, max_pages: int, group: int,
+):
+    """Multi-query (draft-verify) twin of :func:`_paged_dec_kernel`.
+
+    The q block carries all ``W * group`` query rows of one (slot, kv-head)
+    cell — window position ``w = row // group``, q-head ``row % group`` —
+    so one streamed page is reused ``W * group`` times.  The only change
+    from the single-query kernel is that validity is **per query row**:
+    query ``w`` sits at absolute position ``cur_pos[b] + w`` and may attend
+    keys at positions ``<= cur_pos[b] + w`` — which includes the window's
+    own K/V written by the caller before the kernel runs (within-window
+    causality falls out of the same position check, no extra mask).
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (W*group, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (ps, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(q.shape[-1]))             # (W*group, ps)
+
+    rows = q.shape[0]
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 1)
+    qpos = cur_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 0) // group
+    mapped = gather_ref[b, j] < n_pages
+    valid = jnp.logical_and(mapped, pos <= qpos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (W*group, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    scale = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * scale + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * scale + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_verify_attention_kernel(
+    q, k_pool, v_pool, gather, cur_pos, *, group: int,
+    interpret: bool = False,
+):
+    """q: (B, Hkv, W*group, dh) — window-major query rows per kv head;
+    k_pool/v_pool, gather, cur_pos as in
+    :func:`paged_decode_attention_kernel`.  Returns (B, Hkv, W*group, dh)."""
+    B, Hkv, wg, dh = q.shape
+    n_pages = k_pool.shape[0] - 1
+    page_size = k_pool.shape[1]
+    max_pages = gather.shape[1]
+
+    grid = (B, Hkv, max_pages)
+    kern = functools.partial(
+        _paged_verify_kernel, page_size=page_size, n_pages=n_pages,
+        max_pages=max_pages, group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, wg, dh),
+                         lambda b, h, j, g_ref, c_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, j, g_ref, c_ref: (g_ref[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, dh),
+                         lambda b, h, j, g_ref, c_ref: (g_ref[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, wg, dh),
+                               lambda b, h, j, g_ref, c_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((wg, 1), jnp.float32),          # m
+            pltpu.VMEM((wg, 1), jnp.float32),          # l
+            pltpu.VMEM((wg, dh), jnp.float32),         # acc
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, wg, dh), q.dtype),
+        interpret=interpret,
+    )(gather, cur_pos, q, k_pool, v_pool)

@@ -16,7 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from ..common import default_interpret
-from .kernel import paged_decode_attention_kernel
+from .kernel import (
+    paged_decode_attention_kernel,
+    paged_verify_attention_kernel,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -38,3 +41,30 @@ def paged_decode_attention(
         cur_pos.astype(jnp.int32), interpret=interpret,
     )
     return out.reshape(B, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(
+    q, k_pool, v_pool, page_table, cur_pos, *,
+    interpret: Optional[bool] = None,
+):
+    """Multi-query verify leg (draft-and-verify window).  q: (B, W, H, dh)
+    — W query tokens per slot at absolute positions ``cur_pos + [0, W)``,
+    K/V (including the window's own) already written into the pool by the
+    caller; pools/page_table/cur_pos as in :func:`paged_decode_attention`.
+    Returns (B, W, H, dh)."""
+    interpret = default_interpret() if interpret is None else interpret
+    B, W, H, dh = q.shape
+    Hkv = k_pool.shape[2]
+    group = H // Hkv
+    n_pages = k_pool.shape[0] - 1
+    gather = jnp.where(page_table >= 0, page_table, n_pages).astype(jnp.int32)
+    # window-major rows per kv head: row = w * group + q-head-in-group, so
+    # the kernel recovers the query position as cur_pos + row // group
+    qr = q.reshape(B, W, Hkv, group, dh).transpose(0, 2, 1, 3, 4)
+    out = paged_verify_attention_kernel(
+        qr.reshape(B, Hkv, W * group, dh), k_pool, v_pool, gather,
+        cur_pos.astype(jnp.int32), group=group, interpret=interpret,
+    )
+    out = out.reshape(B, Hkv, W, group, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, W, H, dh)

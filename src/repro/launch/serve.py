@@ -38,6 +38,7 @@ def main(argv=None) -> int:
 
     from repro.configs import get_config, get_reduced
     from repro.models import init_params
+    from repro.serving import ServingConfig
     from repro.serving.batcher import ContinuousBatcher, Request
     from repro.serving.tenancy import VirtualAcceleratorPool
 
@@ -54,8 +55,10 @@ def main(argv=None) -> int:
     for t in range(args.tenants):
         lease = pool.lease(f"tenant{t}", pool.n_cores // args.tenants)
         batcher = ContinuousBatcher(
-            params, cfg, slots=args.slots, prompt_len=args.prompt_len,
-            max_len=args.prompt_len + args.max_new + 2, chunk=args.chunk,
+            params, cfg,
+            ServingConfig(slots=args.slots, prompt_len=args.prompt_len,
+                          max_len=args.prompt_len + args.max_new + 2,
+                          chunk=args.chunk),
         )
         for r in range(args.requests):
             plen = int(rng.integers(2, args.prompt_len))

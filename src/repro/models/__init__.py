@@ -16,6 +16,7 @@ from .transformer import (
     period_structure,
     prefill,
     prefix_prefill,
+    verify_step,
 )
 
 __all__ = [
@@ -23,4 +24,5 @@ __all__ = [
     "init_caches", "init_paged_caches", "init_params", "lm_loss",
     "logits_fn", "n_blocks",
     "period_len", "period_structure", "prefill", "prefix_prefill",
+    "verify_step",
 ]

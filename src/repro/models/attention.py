@@ -50,6 +50,10 @@ NEG_INF = -1e30
 #   paged           — paged-pool decode (block-granular KV virtualization)
 #   prefix          — suffix prefill against cached prefix K/V
 #   sliding_window  — any path on a sliding-window arch
+#   verify          — multi-query draft verification (speculative decode);
+#                     "pallas" rides the paged multi-query kernel in paged
+#                     mode and falls back to the XLA multi-query path on
+#                     dense caches
 
 ATTN_CAPABILITIES = {
     "train": ("xla", "flash", "pallas", "naive"),
@@ -57,6 +61,7 @@ ATTN_CAPABILITIES = {
     "paged": ("xla", "pallas"),
     "prefix": ("xla", "pallas", "naive"),
     "sliding_window": ("xla", "pallas", "naive", "flash"),
+    "verify": ("xla", "pallas"),
 }
 
 
@@ -687,3 +692,165 @@ def _paged_attn_xla(q, k, v, valid, cfg):
     out = jnp.einsum("bgik,bkgd->bgid", w.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Verify path (speculative decode: W candidate tokens against the cache)
+# ---------------------------------------------------------------------------
+#
+# Draft-and-verify scores a whole window of W candidate tokens in one pass:
+# the window's K/V is written into the cache FIRST (positions cur_pos +
+# [0, W)), then every query attends with per-query validity ``key position
+# <= query position`` — which realizes within-window causality for free.
+# Rollback of rejected drafts is overwrite-before-attend: the accepted
+# count is always >= 1 for a surviving slot, so the next window's write
+# range covers every stale position, and the position-validity mask keeps
+# stale entries unattendable in the meantime.  No data is ever un-written.
+
+
+def verify_decode_attention(
+    params, x, cache: KVCacheView, cur_pos, cfg, *, impl: str = "xla",
+    policy=None, write_limit=None,
+):
+    """Multi-query decode attention for draft verification (dense cache).
+
+    x: (B, W, D) hidden states of the W window tokens; cur_pos: (B,)
+    absolute position of the window's first token.  Returns
+    (out (B, W, D), updated cache): query j attends every cached position
+    ``<= cur_pos + j``, including the window's own writes at positions
+    ``< j`` (within-window causality via the position-validity mask).
+
+    ``write_limit`` (B,) bounds how many of the window's K/V writes stick
+    (entries ``w >= write_limit[b]`` keep the old cache contents).  The
+    ring buffer wraps at C: without the bound, a window overrunning a
+    slot's token budget near capacity would wrap and clobber the oldest
+    *live* context.  Positions ``>= write_limit`` can never be committed,
+    so their garbage attention output is never observed.
+
+    ``impl="pallas"`` has no dense multi-query kernel — the XLA multi-query
+    path is the documented fallback (the paged pool is where the kernel
+    leg lives; see :func:`paged_verify_attention`).
+    """
+    if policy is not None and getattr(policy, "kv_len_sharded", False):
+        raise NotImplementedError(
+            "verify decode does not support a length-sharded KV cache")
+    if cfg.sliding_window:
+        raise ValueError(
+            "verify decode does not support sliding-window archs")
+    B, W, _ = x.shape
+    wi = jnp.arange(W, dtype=jnp.int32)
+    pos_w = cur_pos.astype(jnp.int32)[:, None] + wi[None, :]       # (B, W)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions=pos_w, rope=True)
+    C = cache.k.shape[1]
+    assert W <= C, (W, C)       # window slots stay distinct mod C
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+
+    slot = (pos_w % C).astype(jnp.int32)                           # (B, W)
+    bidx = jnp.arange(B)[:, None]
+    if write_limit is not None:
+        ok = wi[None, :] < write_limit[:, None]                    # (B, W)
+        k_new = jnp.where(ok[..., None, None], k_new, cache.k[bidx, slot])
+        v_new = jnp.where(ok[..., None, None], v_new, cache.v[bidx, slot])
+        pos_vals = jnp.where(ok, pos_w, cache.pos[bidx, slot])
+    else:
+        pos_vals = pos_w
+    k = cache.k.at[bidx, slot].set(k_new)
+    v = cache.v.at[bidx, slot].set(v_new)
+    pos = cache.pos.at[bidx, slot].set(pos_vals)
+
+    # no dense multi-query kernel: "pallas" falls back to the XLA oracle
+    out = _verify_attn_xla(q, k, v, pos, pos_w, cfg)
+    y = out.reshape(B, W, cfg.q_dim) @ params["wo"]
+    return y, KVCacheView(k=k, v=v, pos=pos)
+
+
+def _verify_attn_xla(q, k, v, pos, q_pos, cfg):
+    """q: (B,W,H,dh); k/v: (B,C,Hkv,dh); pos: (B,C); q_pos: (B,W).
+
+    :func:`_decode_attn_xla` with a query-window axis: same contractions,
+    same f32 accumulation, per-query validity ``pos <= q_pos[:, j]``."""
+    B, W, H, dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = (q.reshape(B, W, Hkv, group, dh)
+          / jnp.sqrt(jnp.float32(dh))).astype(q.dtype)
+    s = jnp.einsum("bwgid,bkgd->bwgik", qg, k,
+                   preferred_element_type=jnp.float32)         # (B,W,Hkv,g,C)
+    valid = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_pos[:, :, None])
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bwgik,bkgd->bwgid", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, W, H, dh).astype(q.dtype)
+
+
+def paged_verify_attention(params, x, cache: PagedKVView, cur_pos,
+                           page_table, cfg, *, impl: str = "xla",
+                           policy=None):
+    """Multi-query decode attention for draft verification (paged pool).
+
+    x: (B, W, D); cur_pos: (B,) first window position; page_table as in
+    :func:`paged_decode_attention`.  The window's K/V is scattered at
+    ``(page_table[b, pos // ps], pos % ps)`` per token; positions whose
+    logical page is unmapped or out of table range land on the trash page
+    (allocation is the caller's job — the spec chunk scan faults every
+    spanned page before the verify, all-or-nothing per slot).
+
+    ``impl="pallas"`` walks the page table inside the multi-query kernel
+    (``repro.kernels.paged_attention.paged_verify_attention_kernel``);
+    ``impl="xla"`` is the gather oracle.
+    """
+    if policy is not None and getattr(policy, "kv_len_sharded", False):
+        raise NotImplementedError(
+            "paged decode does not support a length-sharded KV cache")
+    B, W, _ = x.shape
+    wi = jnp.arange(W, dtype=jnp.int32)
+    pos_w = cur_pos.astype(jnp.int32)[:, None] + wi[None, :]       # (B, W)
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions=pos_w, rope=True)
+    P = cache.n_pages
+    ps = cache.page_size
+    maxp = page_table.shape[1]
+    k_new = k_new.astype(cache.k.dtype)
+    v_new = v_new.astype(cache.v.dtype)
+
+    logical = pos_w // ps                                          # (B, W)
+    pid = jnp.take_along_axis(page_table,
+                              jnp.clip(logical, 0, maxp - 1), axis=1)
+    dest = jnp.where((pid >= 0) & (logical < maxp), pid, P)        # trash
+    off = pos_w % ps
+    k = cache.k.at[dest, off].set(k_new)
+    v = cache.v.at[dest, off].set(v_new)
+
+    if impl == "pallas":
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        out = pa_ops.paged_verify_attention(q, k, v, page_table, cur_pos)
+    else:
+        gather = jnp.where(page_table >= 0, page_table, P)         # (B, maxp)
+        kg = k[gather].reshape(B, maxp * ps, cfg.n_kv_heads, cfg.d_head)
+        vg = v[gather].reshape(B, maxp * ps, cfg.n_kv_heads, cfg.d_head)
+        pos_l = jnp.arange(maxp * ps, dtype=jnp.int32)             # absolute
+        valid = (page_table >= 0)[:, pos_l // ps][:, None, :] & (
+            pos_l[None, None, :] <= pos_w[:, :, None])             # (B, W, L)
+        out = _paged_verify_attn_xla(q, kg, vg, valid, cfg)
+    y = out.reshape(B, W, cfg.q_dim) @ params["wo"]
+    return y, PagedKVView(k=k, v=v)
+
+
+def _paged_verify_attn_xla(q, k, v, valid, cfg):
+    """q: (B,W,H,dh); k/v: (B,L,Hkv,dh); valid: (B,W,L).  The multi-query
+    twin of :func:`_paged_attn_xla` — the numerical oracle for the paged
+    multi-query verify kernel."""
+    B, W, H, dh = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = (q.reshape(B, W, Hkv, group, dh)
+          / jnp.sqrt(jnp.float32(dh))).astype(q.dtype)
+    s = jnp.einsum("bwgid,bkgd->bwgik", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bwgik,bkgd->bwgid", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, W, H, dh).astype(q.dtype)

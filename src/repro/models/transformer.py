@@ -623,3 +623,78 @@ def decode_step(
     x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
     logits = logits_fn(params, x, cfg)[:, 0]
     return logits, Caches(kv=kv_new, ssm=ssm_new, cross=caches.cross)
+
+
+def verify_step(
+    params, tokens, caches: Caches, cur_pos, cfg, *, impl: str = "xla",
+    policy=None, page_table=None, write_limit=None,
+):
+    """Score a window of W candidate tokens in one pass (draft-and-verify).
+
+    tokens: (B, W) int32 — the slot's last committed token followed by
+    W-1 drafted candidates, at absolute positions ``cur_pos + [0, W)``.
+    Returns (logits (B, W, Vp), updated Caches): ``logits[:, j]`` is the
+    model's next-token distribution *after* ``tokens[:, j]``, exactly what
+    ``decode_step`` would produce having decoded the window prefix — the
+    accepted-prefix outputs are identical to sequential greedy decode
+    because causal attention makes each query row depend only on positions
+    ``<= cur_pos + j`` (the verify attention writes the window's K/V
+    before attending, so within-window causality falls out of the
+    position-validity mask).
+
+    With ``page_table`` the caches are paged pools and every window
+    position must have its logical page mapped by the caller (unmapped
+    positions write to the trash page); without it, ``write_limit`` (B,)
+    caps how many window writes stick in the dense ring (see
+    :func:`repro.models.attention.verify_decode_attention`).
+
+    Pure-attention, non-sliding-window archs only: SSM state advances
+    sequentially and cannot be rolled back for free, and audio/vlm prompts
+    carry non-token context.  MoE layers are fine — decode routing is
+    per-token.
+    """
+    specs = period_structure(cfg)
+    if any(s.mixer != "attn" for s in specs):
+        raise ValueError(
+            "verify_step requires a pure-attention arch (SSM state cannot "
+            "be rolled back to the accepted prefix)")
+    if cfg.family in ("audio", "vlm"):
+        raise ValueError(
+            f"verify_step does not support the {cfg.family} family")
+    if cfg.sliding_window:
+        raise ValueError("verify_step does not support sliding-window archs")
+    x = _embed(params, tokens, policy)                  # (B, W, d)
+    x = _shard(x, policy, "hidden_decode")
+
+    def body(x, xs_in):
+        block_params, kv_in = xs_in
+        kv_out = {}
+        for p, spec in enumerate(specs):
+            lp = block_params[p]
+            h = rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+            if page_table is not None:
+                y, nkv = attn_mod.paged_verify_attention(
+                    lp["attn"], h, kv_in[str(p)], cur_pos, page_table, cfg,
+                    impl=impl, policy=policy,
+                )
+            else:
+                y, nkv = attn_mod.verify_decode_attention(
+                    lp["attn"], h, kv_in[str(p)], cur_pos, cfg, impl=impl,
+                    policy=policy, write_limit=write_limit,
+                )
+            kv_out[str(p)] = nkv
+            x = x + y
+            if spec.mlp is not None:
+                h2 = rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+                if spec.mlp == "moe":
+                    y2, _ = moe_mod.moe_apply(lp["moe"], h2, cfg, decode=True,
+                                              policy=policy)
+                else:
+                    y2 = mlp(lp["mlp"], h2, kind=cfg.mlp_kind)
+                x = x + y2
+        return x, kv_out
+
+    x, kv_new = jax.lax.scan(body, x, (params["blocks"], caches.kv))
+    x = rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)                  # (B, W, Vp)
+    return logits, Caches(kv=kv_new, ssm=caches.ssm, cross=caches.cross)

@@ -99,8 +99,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Union
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,9 +111,11 @@ from repro.models.attention import check_attn_impl
 from repro.models.transformer import (
     Caches, init_caches, init_paged_caches, period_structure,
 )
+from .config import ServingConfig, config_from_legacy_kwargs
 from .kv_cache import PagedKVPool, PageQuotaError, pages_for, tree_bytes
 from .prefix_cache import PrefixCache, PrefixNode
 from .engine import (
+    DraftState,
     PageState,
     ServeConfig,
     SlotState,
@@ -120,11 +123,14 @@ from .engine import (
     cached_admit_program,
     chunk_bucket,
     decode_chunk_program,
+    init_draft_state,
     init_page_state,
     init_slot_state,
     page_push_program,
     paged_admit_program,
     paged_decode_chunk_program,
+    paged_spec_decode_chunk_program,
+    spec_decode_chunk_program,
 )
 
 
@@ -154,6 +160,10 @@ class Request:
     namespace: Optional[str] = None
     deadline: Optional[float] = None
     dropped: bool = False
+    # set when the request was requeued mid-flight (OOM / poison / watchdog)
+    # and re-admitted: its row is left-padded differently than the original
+    # prompt, which shifts page alignment for the prefix cache
+    resumed: bool = False
     # prefix-cache nodes this request currently pins (internal)
     _prefix_nodes: List[PrefixNode] = dataclasses.field(
         default_factory=list, repr=False)
@@ -194,12 +204,26 @@ class BatcherStats:
     watchdog_trips: int = 0      # chunks that exceeded watchdog_s
     audit_repairs: int = 0       # page-table entries the audit cleared
     quarantined_pages: int = 0   # pool pages permanently out of circulation
+    # speculative decode
+    spec_windows: int = 0        # draft-and-verify windows with >= 1 commit
+    drafted_tokens: int = 0      # draft tokens proposed in those windows
+    accepted_tokens: int = 0     # draft tokens the verify pass accepted
+    # prefill/decode overlap
+    overlap_rounds: int = 0      # rounds with chunk + admission both in flight
+    # prefix cache: resumed rows whose shifted padding missed the cache
+    resume_prefix_misses: int = 0
 
     @property
     def prefix_tokens_saved(self) -> int:
         """Alias of ``prefill_tokens_skipped``: every prompt token served
         from a shared page is exactly one prefill token not re-run."""
         return self.prefill_tokens_skipped
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verify pass accepted — the
+        speculative win factor: tokens per window = 1 + rate·(W-1)."""
+        return self.accepted_tokens / max(self.drafted_tokens, 1)
 
     @property
     def occupancy(self) -> float:
@@ -229,34 +253,61 @@ class BatcherStats:
 
 
 class ContinuousBatcher:
-    """Fixed-slot continuous batcher for one tenant's model."""
+    """Fixed-slot continuous batcher for one tenant's model.
 
-    def __init__(self, params, cfg, *, slots: int, prompt_len: int,
-                 max_len: int, policy=None, attn_impl: str = "xla",
-                 chunk: int = 8, paged: bool = False, page_size: int = 16,
-                 n_pages: Optional[int] = None,
-                 page_quota: Optional[int] = None,
-                 reserve_pages: bool = True,
-                 prefix_cache: Union[bool, PrefixCache, None] = None,
-                 clock: Optional[Callable[[], float]] = None,
-                 watchdog_s: Optional[float] = None,
-                 audit: bool = False):
+    Construct with a validated :class:`~repro.serving.config.ServingConfig`::
+
+        ContinuousBatcher(params, cfg, ServingConfig(slots=4, prompt_len=8,
+                                                     max_len=32))
+
+    The pre-config keyword constructor
+    (``ContinuousBatcher(params, cfg, slots=4, ...)``) still works as a thin
+    deprecation shim — every legacy kwarg maps 1:1 onto a config field —
+    but emits a ``DeprecationWarning``.
+    """
+
+    def __init__(self, params, cfg, config: Optional[ServingConfig] = None,
+                 *, policy=None,
+                 clock: Optional[Callable[[], float]] = None, **legacy):
+        if config is None:
+            warnings.warn(
+                "ContinuousBatcher(**kwargs) is deprecated; pass a "
+                "ServingConfig: ContinuousBatcher(params, cfg, "
+                "ServingConfig(...))", DeprecationWarning, stacklevel=2)
+            config = config_from_legacy_kwargs(**legacy)
+        elif legacy:
+            raise TypeError(
+                f"pass either a ServingConfig or legacy kwargs, not both "
+                f"(got config and {sorted(legacy)})")
         self.params = params
         self.cfg = cfg
+        self.config = config
+        slots, prompt_len = config.slots, config.prompt_len
+        paged, page_size = config.paged, config.page_size
+        prefix_cache = config.prefix_cache
         self.B = slots
         self.prompt_len = prompt_len
-        self.chunk = max(1, chunk)
-        scfg = ServeConfig(max_len=max_len, attn_impl=attn_impl,
+        self.chunk = max(1, config.chunk)
+        scfg = ServeConfig(max_len=config.max_len, attn_impl=config.attn_impl,
                            chunk=self.chunk)
         self.scfg = scfg
-        # one shared capability table (models.attention.ATTN_CAPABILITIES)
-        # gates every mode this batcher will exercise, at construction
-        if paged:
-            check_attn_impl(attn_impl, "paged")
-        if prefix_cache:
-            check_attn_impl(attn_impl, "prefix")
+        # structural / capability rules were validated by ServingConfig;
+        # the model-dependent rules live here, where cfg is known
         if cfg.sliding_window:
-            check_attn_impl(attn_impl, "sliding_window")
+            check_attn_impl(config.attn_impl, "sliding_window")
+        if prefix_cache and (
+                any(s.mixer != "attn" for s in period_structure(cfg))
+                or cfg.family in ("audio", "vlm")):
+            raise ValueError(
+                "prefix caching requires a pure-attention arch (SSM state "
+                "is not positional; audio/vlm prompts shift positions)")
+        if config.speculative and (
+                any(s.mixer != "attn" for s in period_structure(cfg))
+                or cfg.family in ("audio", "vlm") or cfg.sliding_window):
+            raise ValueError(
+                "speculative decode requires a pure-attention, "
+                "non-sliding-window text arch (SSM state cannot be rolled "
+                "back to the accepted prefix)")
         self._policy = policy
         self.paged = paged
         self._clock = clock if clock is not None else time.monotonic
@@ -264,15 +315,6 @@ class ContinuousBatcher:
         self.queue: Deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * slots
         self.state: SlotState = init_slot_state(slots)
-        if prefix_cache and not paged:
-            raise ValueError("the prefix cache rides on the paged pool; "
-                             "pass paged=True")
-        if prefix_cache and (
-                any(s.mixer != "attn" for s in period_structure(cfg))
-                or cfg.family in ("audio", "vlm")):
-            raise ValueError(
-                "prefix caching requires a pure-attention arch (SSM state "
-                "is not positional; audio/vlm prompts shift positions)")
         self.prefix: Optional[PrefixCache] = None
         if isinstance(prefix_cache, PrefixCache):
             assert prefix_cache.page_size == page_size
@@ -281,14 +323,14 @@ class ContinuousBatcher:
             self.prefix = PrefixCache(page_size)
         if paged:
             self.page_size = max(1, page_size)
-            self.max_pages = pages_for(max_len, self.page_size)
+            self.max_pages = pages_for(config.max_len, self.page_size)
             # default pool == dense capacity; pass a smaller n_pages to
             # over-subscribe (the bench's equal-HBM capacity argument)
-            self.n_pages = n_pages if n_pages is not None \
+            self.n_pages = config.n_pages if config.n_pages is not None \
                 else slots * self.max_pages
-            self.reserve_pages = reserve_pages
-            self._page_limit = min(page_quota, self.n_pages) \
-                if page_quota is not None else self.n_pages
+            self.reserve_pages = config.reserve_pages
+            self._page_limit = min(config.page_quota, self.n_pages) \
+                if config.page_quota is not None else self.n_pages
             self.kv_pool = PagedKVPool(self.n_pages, self.page_size)
             self.caches: Caches = init_paged_caches(
                 cfg, slots, self.n_pages, self.page_size)
@@ -298,15 +340,25 @@ class ContinuousBatcher:
                 slots, self.n_pages, self.max_pages, quota=self._page_limit)
             self._admit_fn = paged_admit_program(cfg, scfg, policy=policy)
         else:
-            self.caches = init_caches(cfg, slots, max_len)
+            self.caches = init_caches(cfg, slots, config.max_len)
             self.pages = None
             self._admit_fn = admit_program(cfg, scfg, policy=policy)
+        # speculative decode: the chunk unit becomes a draft-and-verify
+        # window; the drafter history is device state donated like the rest
+        self._spec = bool(config.speculative)
+        self._draft_window = config.draft_window
+        self._draft_ngram = config.draft_ngram
+        self._draft_hist = config.draft_hist
+        self.draft: Optional[DraftState] = (
+            init_draft_state(slots, config.draft_hist) if self._spec
+            else None)
+        self._overlap = bool(config.overlap)
         self.stats = BatcherStats(cache_bytes=tree_bytes(self.caches))
         # fault guards: watchdog_s bounds the wall time of one chunk
         # dispatch+sync (None = off); audit=True cross-checks the fetched
         # page tables against the no-double-mapping invariant every chunk
-        self._watchdog_s = watchdog_s
-        self._audit = bool(audit) and paged
+        self._watchdog_s = config.watchdog_s
+        self._audit = bool(config.audit) and paged
         self._stall: Optional[tuple] = None      # inject_stall chaos hook
         self._quarantined: set = set()           # page ids out of circulation
         self._key = jax.random.PRNGKey(0)
@@ -435,6 +487,11 @@ class ContinuousBatcher:
         out = {"caches": self.caches, "slots": self.state}
         if self.paged:
             out["pages"] = self.pages
+        if self._spec:
+            # the drafter history migrates with the caches so re-admitted
+            # tenants keep speculating mid-request (tenancy live-state
+            # migration moves the whole dict with one device_put)
+            out["draft"] = self.draft
         return out
 
     def adopt_state(self, state: Dict[str, Any]) -> None:
@@ -443,6 +500,8 @@ class ContinuousBatcher:
         self.state = state["slots"]
         if self.paged:
             self.pages = state["pages"]
+        if self._spec:
+            self.draft = state["draft"]
 
     # -- fault guards: requeue, watchdog, page-table audit ----------------
     def inject_stall(self, slot: int, seconds: float) -> None:
@@ -482,6 +541,7 @@ class ContinuousBatcher:
             len(req.prompt) + len(req.out) <= self.prompt_len
         if kept:
             self.stats.resumed_tokens_kept += len(req.out)
+            req.resumed = True
         else:
             self.stats.oom_discarded_tokens += len(req.out)
             req.out.clear()
@@ -683,6 +743,16 @@ class ContinuousBatcher:
         row = self._padded_row(req)
         max_share = self.prefix.max_shareable(self.prompt_len)
         nodes = self.prefix.lookup(req.namespace, row, max_pages=max_share)
+        if req.resumed and not nodes:
+            # the resume-on-OOM row (prompt + kept tokens) is left-padded
+            # differently than the original prompt, so it cannot hit the
+            # pages the original inserted.  The lookup above IS the
+            # re-attempt — it aligns with other requests resumed at the
+            # same output length (and the note_seen below indexes this
+            # shifted row so recurring resumes converge to sharing) — but a
+            # miss here is a distinct phenomenon from a cold prompt:
+            # count it so capacity planning can see resume-induced misses.
+            self.stats.resume_prefix_misses += 1
         seen_depth = self.prefix.note_seen(req.namespace, row,
                                            max_pages=max_share)
         ps = self.page_size
@@ -702,14 +772,20 @@ class ContinuousBatcher:
             inserts += 1
         return nodes, inserts
 
-    def _admit(self) -> None:
+    def _admit(self, *, defer: bool = False) -> List[Dict[str, Any]]:
+        """Admission planning + prefill dispatch.  With ``defer=False`` the
+        post-dispatch host work (reading first tokens, completing
+        done-at-admission requests, prefix inserts, draft seeding) happens
+        inline and ``[]`` is returned; with ``defer=True`` each dispatch is
+        returned as a pending record for :meth:`_finish_admit` — the overlap
+        path dispatches admission behind the in-flight decode chunk and
+        merges both at one point per round."""
         self._shed_expired()
         free = self._free_slots()
         if not free or not self.queue:
-            return
+            return []
         if not self.paged:
-            self._admit_dense(free)
-            return
+            return self._admit_dense(free, defer=defer)
         joins: List[Dict[str, Any]] = []
         planned_paths: set = set()
         witness = self._queue_path_counts()
@@ -750,31 +826,35 @@ class ContinuousBatcher:
                           "k": k, "pin": k + inserts, "pop": pop,
                           "nodes": nodes})
         if not joins:
-            return
+            return []
         # one dispatch per cached-prefix depth: the suffix length is a
         # static program shape (bounded by prompt_len / page_size programs)
         by_depth: Dict[int, List[Dict[str, Any]]] = {}
         for join in joins:
             by_depth.setdefault(join["k"], []).append(join)
-        for k in sorted(by_depth):
-            self._dispatch_paged(by_depth[k], k)
-        self.stats.peak_resident = max(
-            self.stats.peak_resident,
-            sum(r is not None for r in self.slot_req))
+        pending = [self._dispatch_paged(by_depth[k], k)
+                   for k in sorted(by_depth)]
         self.stats.shared_pages = self.kv_pool.shared
+        if defer:
+            return pending
+        for rec in pending:
+            self._finish_admit(rec)
+        return []
 
-    def _admit_dense(self, free: List[int]) -> None:
+    def _admit_dense(self, free: List[int],
+                     *, defer: bool = False) -> List[Dict[str, Any]]:
         """The original dense-ring admission path (no paging)."""
         joins = []
         while free and self.queue:
-            joins.append((free.pop(0), self.queue.popleft()))
+            joins.append({"slot": free.pop(0), "req": self.queue.popleft()})
         n = len(joins)
         nb = min(1 << (n - 1).bit_length() if n > 1 else 1, self.B)
         toks = np.zeros((nb, self.prompt_len), dtype=np.int32)
         slots = np.zeros((nb,), dtype=np.int32)
         budget = np.zeros((nb,), dtype=np.int32)
         eos = np.full((nb,), -1, dtype=np.int32)
-        for j, (slot, req) in enumerate(joins):
+        for j, join in enumerate(joins):
+            slot, req = join["slot"], join["req"]
             toks[j] = self._padded_row(req)
             slots[j] = slot
             budget[j] = req.max_new - len(req.out)
@@ -798,24 +878,19 @@ class ContinuousBatcher:
         self.stats.admit_scatter_bytes += int(
             self.stats.cache_bytes * nb / max(self.B, 1)
         )
-        nxt_np = np.asarray(nxt)
-        self.stats.host_syncs += 1
-        for j, (slot, req) in enumerate(joins):
-            tok = int(nxt_np[j])
-            req.out.append(tok)
-            self.stats.admit_tokens += 1
-            hit_eos = req.eos is not None and tok == req.eos
-            if len(req.out) >= req.max_new or hit_eos:
-                req.done = True
-                self.stats.completed += 1
-            else:
-                self.slot_req[slot] = req
+        rec = {"kind": "dense", "joins": joins, "nxt": nxt}
+        if defer:
+            return [rec]
+        self._finish_admit(rec)
+        return []
 
-    def _dispatch_paged(self, group: List[Dict[str, Any]], k: int) -> None:
+    def _dispatch_paged(self, group: List[Dict[str, Any]],
+                        k: int) -> Dict[str, Any]:
         """One paged admission dispatch for joins sharing ``k`` cached
         prefix pages: cold program at k == 0, cached-suffix program
         otherwise.  Both return the written page-table rows, from which the
-        planned full-page inserts learn their physical ids."""
+        planned full-page inserts learn their physical ids.  Returns the
+        pending record for :meth:`_finish_admit` (no host sync here)."""
         n = len(group)
         nb = min(1 << (n - 1).bit_length() if n > 1 else 1, self.B)
         ps = self.page_size
@@ -870,9 +945,22 @@ class ContinuousBatcher:
             self.stats.cache_bytes * nb * S
             / max(self.B * self.prompt_len, 1)
         )
-        nxt_np, rows_np = jax.device_get((nxt, out_rows))    # ONE host sync
+        return {"kind": "paged", "joins": group, "k": k, "nxt": nxt,
+                "out_rows": out_rows, "rows": rows}
+
+    def _finish_admit(self, rec: Dict[str, Any]) -> None:
+        """Post-dispatch half of one admission: read the first tokens (one
+        host sync per record), append them, complete done-at-admission
+        requests, run the planned prefix inserts, and seed the drafter
+        history for the slots that stay resident."""
+        k = rec.get("k", 0)
+        if rec["kind"] == "paged":
+            nxt_np, rows_np = jax.device_get((rec["nxt"], rec["out_rows"]))
+        else:
+            nxt_np, rows_np = np.asarray(jax.device_get(rec["nxt"])), None
         self.stats.host_syncs += 1
-        for j, join in enumerate(group):
+        seeds: List[Tuple[int, Request]] = []
+        for j, join in enumerate(rec["joins"]):
             slot, req = join["slot"], join["req"]
             tok = int(nxt_np[j])
             req.out.append(tok)
@@ -881,23 +969,26 @@ class ContinuousBatcher:
             if len(req.out) >= req.max_new or hit_eos:
                 req.done = True
                 self.stats.completed += 1
-                if self.prefix is not None:
-                    self._release_prefix(req)
-                self.kv_pool.free(req.rid)
-                # done at admission: the device never popped its prompt
-                # pages (a non-activating row allocates nothing), so take
-                # it back out of the since-sync estimate — else admit-only
-                # rounds leak the counter and starve over-subscribed
-                # admission with the pool entirely free
-                self._admitted_pages_since_sync -= join["pop"]
+                if rec["kind"] == "paged":
+                    if self.prefix is not None:
+                        self._release_prefix(req)
+                    self.kv_pool.free(req.rid)
+                    # done at admission: the device never popped its prompt
+                    # pages (a non-activating row allocates nothing), so
+                    # take it back out of the since-sync estimate — else
+                    # admit-only rounds leak the counter and starve
+                    # over-subscribed admission with the pool entirely free
+                    self._admitted_pages_since_sync -= join["pop"]
                 continue
             self.slot_req[slot] = req
-            inserts = join["pin"] - k
+            seeds.append((slot, req))
+            inserts = join.get("pin", 0) - k
             if inserts > 0:
                 new_pids = rows_np[j, k:join["pin"]]
                 if (new_pids >= 0).all():
                     created = self.prefix.insert(
-                        req.namespace, rows[j], new_pids, start_page=k)
+                        req.namespace, rec["rows"][j], new_pids,
+                        start_page=k)
                     assert len(created) == inserts, (created, inserts)
                     cpids = [node.page_id for node in created]
                     self.kv_pool.share(req.rid, req.namespace, cpids)
@@ -905,6 +996,35 @@ class ContinuousBatcher:
                     self.prefix.acquire(created)
                     req._prefix_nodes.extend(created)
                     self.stats.prefix_inserts += len(created)
+        if self._spec and seeds:
+            self._seed_draft(seeds)
+        self.stats.peak_resident = max(
+            self.stats.peak_resident,
+            sum(r is not None for r in self.slot_req))
+
+    def _seed_draft(self, seeds: List[Tuple[int, Request]]) -> None:
+        """Seed the drafter history for freshly admitted slots from the
+        host-known token stream (prompt + emitted tokens, newest last) —
+        one fused scatter per admission round, no sync.  Resumed requests
+        re-seed with their kept output, so the n-gram index warms back up
+        immediately after a migration or requeue."""
+        N = self._draft_hist
+        rows = np.full((len(seeds), N), -1, dtype=np.int32)
+        ns = np.zeros((len(seeds),), dtype=np.int32)
+        slots = np.array([s for s, _ in seeds], dtype=np.int32)
+        for j, (_, req) in enumerate(seeds):
+            toks = np.asarray(req.prompt, dtype=np.int32)
+            if req.out:
+                toks = np.concatenate(
+                    [toks, np.asarray(req.out, dtype=np.int32)])
+            tail = toks[-N:]
+            rows[j, N - len(tail):] = tail
+            ns[j] = len(tail)
+        idx = jnp.asarray(slots)
+        self.draft = DraftState(
+            hist=self.draft.hist.at[idx].set(jnp.asarray(rows)),
+            n=self.draft.n.at[idx].set(jnp.asarray(ns)),
+        )
 
     # -- chunk sizing: adaptive to queue pressure ------------------------
     def _pick_chunk(self, active: List[int]) -> int:
@@ -917,6 +1037,14 @@ class ContinuousBatcher:
         return chunk_bucket(max(1, min(horizon, self.chunk)))
 
     def _chunk_fn(self, n_steps: int) -> Callable:
+        if self._spec:
+            if self.paged:
+                return paged_spec_decode_chunk_program(
+                    self.cfg, self.scfg, n_steps, self._draft_window,
+                    self._draft_ngram, self.page_size, policy=self._policy)
+            return spec_decode_chunk_program(
+                self.cfg, self.scfg, n_steps, self._draft_window,
+                self._draft_ngram, policy=self._policy)
         if self.paged:
             return paged_decode_chunk_program(
                 self.cfg, self.scfg, n_steps, self.page_size,
@@ -924,33 +1052,68 @@ class ContinuousBatcher:
         return decode_chunk_program(self.cfg, self.scfg, n_steps,
                                     policy=self._policy)
 
-    # -- one scheduling round: admit, then decode one chunk ---------------
-    def step(self) -> None:
-        self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return
+    def _dispatch_chunk(self, active: List[int]) -> Dict[str, Any]:
+        """Dispatch one decode chunk (speculative: T draft-and-verify
+        windows; otherwise T decode steps) without syncing; returns the
+        pending record for :meth:`_finish_chunk`.  When admission will be
+        dispatched behind this chunk (overlap), the fetch handles that the
+        admit program would donate are snapshotted with cheap device-side
+        copies first."""
         T = self._pick_chunk(active)
         self._key, sub = jax.random.split(self._key)
         t0 = self._clock()
-        if self.paged:
+        if self._spec:
+            if self.paged:
+                (self.caches, self.state, self.pages, self.draft, toks,
+                 emitted, poisoned) = self._chunk_fn(T)(
+                    self.params, self.caches, self.state, self.pages,
+                    self.draft, sub)
+            else:
+                (self.caches, self.state, self.draft, toks, emitted,
+                 poisoned) = self._chunk_fn(T)(
+                    self.params, self.caches, self.state, self.draft, sub)
+            self.stats.steps += T * self._draft_window
+        elif self.paged:
             (self.caches, self.state, self.pages, toks, emitted,
              poisoned) = self._chunk_fn(T)(
                 self.params, self.caches, self.state, self.pages, sub
             )
-            fetch = (toks, emitted, poisoned, self.state.active,
-                     self.pages.free_top)
-            if self._audit:
-                fetch += (self.pages.table,)
+            self.stats.steps += T
         else:
             self.caches, self.state, toks, emitted, poisoned = \
                 self._chunk_fn(T)(self.params, self.caches, self.state, sub)
-            fetch = (toks, emitted, poisoned)
+            self.stats.steps += T
+        fetch = (toks, emitted, poisoned)
+        if self.paged:
+            act, top = self.state.active, self.pages.free_top
+            tab = self.pages.table if self._audit else None
+            if self._overlap and self.queue and \
+                    any(r is None for r in self.slot_req):
+                # an admission CAN dispatch behind this chunk this round
+                # (queued work + a free slot), and the admit program donates
+                # state/pages: copy the few arrays this round's sync still
+                # needs so the fetch survives the donation (B bools + a
+                # scalar + the table).  Rounds with nothing to admit skip
+                # the copies — the donation never happens.
+                act, top = jnp.copy(act), jnp.copy(top)
+                tab = jnp.copy(tab) if tab is not None else None
+            fetch += (act, top)
+            if tab is not None:
+                fetch += (tab,)
         self.stats.chunks += 1
         self.stats.dispatches += 1
-        self.stats.steps += T
-        fetched = jax.device_get(fetch)                      # ONE host sync
-        elapsed = self._clock() - t0
+        return {"fetch": fetch, "t0": t0, "T": T, "active": active}
+
+    def _finish_chunk(self, pending: Dict[str, Any],
+                      *, keep_admitted_pages: int = 0) -> None:
+        """Sync one dispatched chunk and run all host bookkeeping: token
+        emission, completion, poison/OOM requeues, page accounting, audit,
+        watchdog.  ``keep_admitted_pages`` is the number of pages admission
+        dispatched *behind* this chunk has popped — the fetched ``free_top``
+        predates those pops, so they survive the counter reset."""
+        T, active = pending["T"], pending["active"]
+        fetched = jax.device_get(pending["fetch"])           # ONE host sync
+        elapsed = self._clock() - pending["t0"]
         stall_slot: Optional[int] = None
         if self._stall is not None:
             stall_slot, extra = self._stall
@@ -958,25 +1121,37 @@ class ContinuousBatcher:
             elapsed += extra
         toks_np, emit_np, poison_np = fetched[0], fetched[1], fetched[2]
         self.stats.host_syncs += 1
-        self.stats.slot_total_steps += self.B * T
-        self.stats.slot_busy_steps += int(emit_np.sum())
-        for i in active:
-            req = self.slot_req[i]
-            for t in range(T):
-                if not emit_np[t, i]:
-                    break
-                req.out.append(int(toks_np[t, i]))
-                self.stats.decode_tokens += 1
-            hit_eos = req.eos is not None and req.out and \
-                req.out[-1] == req.eos
-            if len(req.out) >= req.max_new or hit_eos:
-                req.done = True
-                self.slot_req[i] = None
-                self.stats.completed += 1
-                if self.paged:
-                    if self.prefix is not None:
-                        self._release_prefix(req)
-                    self.kv_pool.free(req.rid)
+        if self._spec:
+            # toks/emitted are (T, B, W); emitted is a per-window prefix
+            # mask over the committed tokens.  Busy/total measure *query
+            # positions*, so occupancy now reflects speculative efficiency
+            # (rejected drafts are idle device work).
+            W = self._draft_window
+            self.stats.slot_total_steps += self.B * T * W
+            self.stats.slot_busy_steps += int(emit_np.sum())
+            for i in active:
+                req = self.slot_req[i]
+                for t in range(T):
+                    c = int(emit_np[t, i].sum())
+                    if c == 0:
+                        break       # deactivated (EOS/budget/OOM/poison)
+                    req.out.extend(int(x) for x in toks_np[t, i, :c])
+                    self.stats.decode_tokens += c
+                    self.stats.spec_windows += 1
+                    self.stats.drafted_tokens += W - 1
+                    self.stats.accepted_tokens += c - 1
+                self._maybe_complete(i, req)
+        else:
+            self.stats.slot_total_steps += self.B * T
+            self.stats.slot_busy_steps += int(emit_np.sum())
+            for i in active:
+                req = self.slot_req[i]
+                for t in range(T):
+                    if not emit_np[t, i]:
+                        break
+                    req.out.append(int(toks_np[t, i]))
+                    self.stats.decode_tokens += 1
+                self._maybe_complete(i, req)
         # non-finite sentinel: the device deactivated the flagged slots
         # before selecting or emitting a token (and, paged, recycled their
         # pages in the same step), so no poisoned value reached any output
@@ -1000,7 +1175,8 @@ class ContinuousBatcher:
             # emissions stay out of ``stats.tokens``).  Note the resumed
             # row is left-padded differently than the original prompt, so
             # it does NOT hit the original's cached prefix pages — only
-            # other requests resumed at the same output length would align
+            # other requests resumed at the same output length align
+            # (counted as ``resume_prefix_misses`` at re-admission)
             oomed = 0
             for i in active:
                 req = self.slot_req[i]
@@ -1017,11 +1193,59 @@ class ContinuousBatcher:
             self.stats.pages_in_use = self.n_pages - int(fetched[4])
             self.stats.peak_pages_in_use = max(
                 self.stats.peak_pages_in_use, self.stats.pages_in_use)
-            self._admitted_pages_since_sync = 0
+            self._admitted_pages_since_sync = keep_admitted_pages
             if self._audit:
                 self._run_audit(np.asarray(fetched[5]))
         if self._watchdog_s is not None and elapsed > self._watchdog_s:
             self._watchdog_trip(stall_slot)
+
+    def _maybe_complete(self, slot: int, req: Request) -> None:
+        """Retire ``slot`` if its request just hit EOS or its budget."""
+        hit_eos = req.eos is not None and req.out and req.out[-1] == req.eos
+        if len(req.out) >= req.max_new or hit_eos:
+            req.done = True
+            self.slot_req[slot] = None
+            self.stats.completed += 1
+            if self.paged:
+                if self.prefix is not None:
+                    self._release_prefix(req)
+                self.kv_pool.free(req.rid)
+
+    # -- one scheduling round ---------------------------------------------
+    def step(self) -> None:
+        """One scheduling round.
+
+        Serial (default): admit, then decode one chunk — two dispatches,
+        two syncs, strictly ordered.
+
+        Overlap (``overlap=True``): dispatch the decode chunk first
+        (no sync), then run admission **behind it** — all of admission's
+        host-side planning (queue scan, prefix lookups, row packing) plus
+        its prefill dispatch happen while the chunk is still computing, and
+        the device serializes the two programs through the donated cache
+        tree.  One merge point per round: the chunk's sync, then each
+        admission's.  The chunk ran against pre-admission state, so its
+        fetched ``active``/``free_top`` never see the new slots; this
+        round's admission pops are carried across the counter reset."""
+        if not self._overlap:
+            self._admit()
+            active = [i for i, r in enumerate(self.slot_req)
+                      if r is not None]
+            if not active:
+                return
+            self._finish_chunk(self._dispatch_chunk(active))
+            return
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        pending = self._dispatch_chunk(active) if active else None
+        pops_before = self._admitted_pages_since_sync
+        admits = self._admit(defer=True)
+        round_pops = self._admitted_pages_since_sync - pops_before
+        if pending is not None and admits:
+            self.stats.overlap_rounds += 1
+        if pending is not None:
+            self._finish_chunk(pending, keep_admitted_pages=round_pops)
+        for rec in admits:
+            self._finish_admit(rec)
 
     def run(self, *, max_steps: int = 10_000) -> BatcherStats:
         while (self.queue or any(r is not None for r in self.slot_req)) and \

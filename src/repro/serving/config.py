@@ -1,0 +1,143 @@
+"""Unified serving configuration: one validated dataclass for the batcher.
+
+``ContinuousBatcher`` grew one boolean/kwarg per feature as the serving
+stack accreted modes — ``paged=``, ``prefix_cache=``, ``reserve_pages=``,
+``audit=``, ``watchdog_s=``, and now ``speculative=``/``overlap=``.  Twelve
+orthogonal-looking knobs are not orthogonal: the prefix cache rides on the
+paged pool, speculation needs a verify-capable attention impl, the audit
+reads paged tables.  :class:`ServingConfig` is the single place those
+cross-field rules live, checked **at construction** against
+:data:`~repro.models.attention.ATTN_CAPABILITIES` — the same fail-at-build
+discipline as the paper's static compilation stage: invalid combinations
+die before any program is traced, not three layers into a jit.
+
+Model-dependent rules (pure-attention archs for prefix/speculative,
+sliding-window gating) still live in ``ContinuousBatcher.__init__`` where
+the model config is known.
+
+The legacy kwargs constructor is kept as a thin deprecation shim::
+
+    ContinuousBatcher(params, cfg, ServingConfig(slots=4, ...))   # new
+    ContinuousBatcher(params, cfg, slots=4, ...)                  # shim,
+                                                  # DeprecationWarning
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.models.attention import check_attn_impl
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Everything a :class:`~repro.serving.batcher.ContinuousBatcher` needs
+    beyond (params, model cfg, policy, clock).
+
+    Core shape:
+      slots        — fixed decode batch (XLA shape requirement)
+      prompt_len   — prompt bucket: prompts are left-padded to this length
+      max_len      — per-slot cache capacity (prompt + decode budget)
+      attn_impl    — "xla" | "pallas" | "naive" (capability-checked per mode)
+      chunk        — max decode steps fused per device dispatch
+
+    Paged KV pool (``paged=True``):
+      page_size / n_pages / page_quota / reserve_pages — see
+      ``serving.batcher`` module docs.  ``prefix_cache`` (bool or a shared
+      ``PrefixCache`` instance) rides on the pool.
+
+    Fault guards: ``watchdog_s`` (wall-time bound per chunk), ``audit``
+    (page-table self-check; paged mode only, silently inert otherwise —
+    shim compatibility).
+
+    Speculative decoding (``speculative=True``): the chunk scan drafts
+    ``draft_window - 1`` tokens per slot from an on-device n-gram history
+    (``draft_ngram`` match length over the last ``draft_hist`` committed
+    tokens) and verifies the whole window in one multi-query pass —
+    token-identical to greedy decode by construction.  Requires a greedy,
+    pure-attention, non-sliding-window setup and a verify-capable
+    ``attn_impl``.
+
+    ``overlap=True`` dispatches admission prefill concurrently with the
+    in-flight decode chunk (one merge point per round) so prefill-heavy
+    traffic overlaps host work with device decode instead of serializing.
+    """
+
+    slots: int
+    prompt_len: int
+    max_len: int
+    attn_impl: str = "xla"
+    chunk: int = 8
+    # paged KV pool
+    paged: bool = False
+    page_size: int = 16
+    n_pages: Optional[int] = None
+    page_quota: Optional[int] = None
+    reserve_pages: bool = True
+    prefix_cache: Any = None          # bool | PrefixCache | None
+    # fault guards
+    watchdog_s: Optional[float] = None
+    audit: bool = False
+    # speculative decode + admission/decode overlap
+    speculative: bool = False
+    draft_window: int = 4
+    draft_ngram: int = 2
+    draft_hist: int = 64
+    overlap: bool = False
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.prompt_len < 1:
+            raise ValueError(
+                f"prompt_len must be >= 1, got {self.prompt_len}")
+        if self.max_len <= self.prompt_len:
+            raise ValueError(
+                f"max_len ({self.max_len}) must exceed prompt_len "
+                f"({self.prompt_len}) — there is no room to decode")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        # one shared capability table gates every mode this config will
+        # exercise, at construction (models.attention.ATTN_CAPABILITIES)
+        check_attn_impl(self.attn_impl, "dense")
+        if self.paged:
+            check_attn_impl(self.attn_impl, "paged")
+            if self.page_size < 1:
+                raise ValueError(
+                    f"page_size must be >= 1, got {self.page_size}")
+            if self.n_pages is not None and self.n_pages < 1:
+                raise ValueError(
+                    f"n_pages must be >= 1, got {self.n_pages}")
+        if self.prefix_cache:
+            if not self.paged:
+                raise ValueError("the prefix cache rides on the paged pool; "
+                                 "pass paged=True")
+            check_attn_impl(self.attn_impl, "prefix")
+        if self.speculative:
+            check_attn_impl(self.attn_impl, "verify")
+            if self.draft_window < 2:
+                raise ValueError(
+                    f"draft_window must be >= 2 (one committed token plus "
+                    f"at least one draft), got {self.draft_window}")
+            if self.draft_ngram < 1:
+                raise ValueError(
+                    f"draft_ngram must be >= 1, got {self.draft_ngram}")
+            if self.draft_hist < self.draft_ngram + self.draft_window:
+                raise ValueError(
+                    f"draft_hist ({self.draft_hist}) must hold at least "
+                    f"draft_ngram + draft_window "
+                    f"({self.draft_ngram + self.draft_window}) tokens")
+
+
+def config_from_legacy_kwargs(**kwargs) -> ServingConfig:
+    """Map the pre-:class:`ServingConfig` ``ContinuousBatcher`` kwargs onto
+    a config.  Raises ``TypeError`` on unknown names so a typo'd kwarg
+    fails like it always did instead of being swallowed."""
+    fields = {f.name for f in dataclasses.fields(ServingConfig)}
+    unknown = sorted(set(kwargs) - fields)
+    if unknown:
+        raise TypeError(
+            f"unknown ContinuousBatcher argument(s): {unknown}; "
+            f"valid ServingConfig fields: {sorted(fields)}")
+    return ServingConfig(**kwargs)

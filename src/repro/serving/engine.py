@@ -42,7 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, encoder_forward, prefill, prefix_prefill
+from repro.models import (
+    decode_step, encoder_forward, prefill, prefix_prefill, verify_step,
+)
 from repro.models.attention import check_attn_impl
 from repro.models.transformer import Caches
 
@@ -225,35 +227,72 @@ def make_decode_chunk(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
     return decode_chunk
 
 
-# Process-wide executable LRU: one compile per (arch cfg × serve shape ×
-# chunk length) — the AOT "instruction frame package" discipline.  A new
-# batcher for the same tenant shape reuses the compiled program instead of
-# re-jitting (policy objects are compared by identity and pinned by the
-# cached value so their id cannot be recycled while cached).  Bounded so a
-# long-running server that churns policies/shapes cannot grow without limit.
-_PROGRAM_CACHE: "OrderedDict[Tuple, Tuple[Any, Any]]" = OrderedDict()
-_PROGRAM_CACHE_SIZE = 64
+class ProgramRegistry:
+    """Process-wide executable LRU: one compile per (program kind × arch cfg
+    × serve shape × trace-relevant shape ints) — the AOT "instruction frame
+    package" discipline of the paper's static compilation stage.
+
+    Every serving program (decode chunks, admits, speculative variants, the
+    page-push helper) registers through :meth:`get` with the **same key
+    scheme**: ``(kind, cfg, scfg-with-chunk-normalized, shapes, id(policy))``
+    — no per-program hand-rolled key tuples.  ``scfg.chunk`` is normalized
+    out because the traced program never reads it (the chunk length rides in
+    ``shapes``), so batchers that differ only in their max chunk share
+    executables.  Policy objects are compared by identity and pinned by the
+    cached value so their id cannot be recycled while cached.  Bounded LRU:
+    a long-running server that churns policies/shapes cannot grow without
+    limit.
+
+    A new batcher for the same tenant shape reuses the compiled program
+    instead of re-jitting; :data:`PROGRAMS` is the module singleton every
+    ``*_program`` wrapper routes through.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = int(maxsize)
+        self._cache: "OrderedDict[Tuple, Tuple[Any, Any]]" = OrderedDict()
+
+    @staticmethod
+    def make_key(kind: str, cfg, scfg: Optional[ServeConfig],
+                 shapes: Tuple, policy) -> Tuple:
+        key_scfg = (None if scfg is None
+                    else dataclasses.replace(scfg, chunk=0))
+        return (kind, cfg, key_scfg, tuple(shapes), id(policy))
+
+    def get(self, kind: str, cfg, scfg: Optional[ServeConfig],
+            shapes: Tuple, policy, build):
+        """Return the cached executable for the key, building (and pinning
+        ``policy``) on miss."""
+        return self.get_raw(self.make_key(kind, cfg, scfg, shapes, policy),
+                            policy, build)
+
+    def get_raw(self, key: Tuple, policy, build):
+        hit = self._cache.get(key)
+        if hit is None:
+            self._cache[key] = hit = (build(), policy)
+            if len(self._cache) > self.maxsize:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
+        return hit[0]
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._cache
+
+    def clear(self) -> None:
+        self._cache.clear()
 
 
-def _cached_program(key: Tuple, policy, build):
-    hit = _PROGRAM_CACHE.get(key)
-    if hit is None:
-        _PROGRAM_CACHE[key] = hit = (build(), policy)
-        if len(_PROGRAM_CACHE) > _PROGRAM_CACHE_SIZE:
-            _PROGRAM_CACHE.popitem(last=False)
-    else:
-        _PROGRAM_CACHE.move_to_end(key)
-    return hit[0]
+PROGRAMS = ProgramRegistry()
 
 
 def decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
     """Jitted :func:`make_decode_chunk` with the cache/state donated."""
-    # the traced program never reads scfg.chunk (n_steps is the chunk);
-    # normalize it out of the key so batchers that differ only in their max
-    # chunk share executables
-    key_scfg = dataclasses.replace(scfg, chunk=0)
-    return _cached_program(
-        ("chunk", cfg, key_scfg, int(n_steps), id(policy)), policy,
+    return PROGRAMS.get(
+        "chunk", cfg, scfg, (int(n_steps),), policy,
         lambda: jax.jit(make_decode_chunk(cfg, scfg, n_steps, policy=policy),
                         donate_argnums=(1, 2)),
     )
@@ -261,9 +300,8 @@ def decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
 
 def admit_program(cfg, scfg: ServeConfig, *, policy=None):
     """Jitted :func:`make_admit_step` with the cache/state donated."""
-    key_scfg = dataclasses.replace(scfg, chunk=0)
-    return _cached_program(
-        ("admit", cfg, key_scfg, id(policy)), policy,
+    return PROGRAMS.get(
+        "admit", cfg, scfg, (), policy,
         lambda: jax.jit(make_admit_step(cfg, scfg, policy=policy),
                         donate_argnums=(2, 3)),
     )
@@ -613,10 +651,8 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
 def paged_decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int,
                                page_size: int, *, policy=None):
     """Jitted :func:`make_paged_decode_chunk`, caches/state/pages donated."""
-    key_scfg = dataclasses.replace(scfg, chunk=0)
-    return _cached_program(
-        ("paged_chunk", cfg, key_scfg, int(n_steps), int(page_size),
-         id(policy)), policy,
+    return PROGRAMS.get(
+        "paged_chunk", cfg, scfg, (int(n_steps), int(page_size)), policy,
         lambda: jax.jit(
             make_paged_decode_chunk(cfg, scfg, n_steps, page_size,
                                     policy=policy),
@@ -626,9 +662,8 @@ def paged_decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int,
 
 def paged_admit_program(cfg, scfg: ServeConfig, *, policy=None):
     """Jitted :func:`make_paged_admit_step`, caches/state/pages donated."""
-    key_scfg = dataclasses.replace(scfg, chunk=0)
-    return _cached_program(
-        ("paged_admit", cfg, key_scfg, id(policy)), policy,
+    return PROGRAMS.get(
+        "paged_admit", cfg, scfg, (), policy,
         lambda: jax.jit(make_paged_admit_step(cfg, scfg, policy=policy),
                         donate_argnums=(2, 3, 4)),
     )
@@ -730,10 +765,8 @@ def cached_admit_program(cfg, scfg: ServeConfig, n_prefix_pages: int,
     One executable per (arch × serve shape × prefix-page count) — the
     prefix-page counts are bounded by ``prompt_len / page_size``, so the
     program cache stays small."""
-    key_scfg = dataclasses.replace(scfg, chunk=0)
-    return _cached_program(
-        ("cached_admit", cfg, key_scfg, int(n_prefix_pages), id(policy)),
-        policy,
+    return PROGRAMS.get(
+        "cached_admit", cfg, scfg, (int(n_prefix_pages),), policy,
         lambda: jax.jit(
             make_cached_admit_step(cfg, scfg, n_prefix_pages, policy=policy),
             donate_argnums=(2, 3, 4)),
@@ -761,9 +794,335 @@ def make_page_push():
 def page_push_program():
     """Jitted :func:`make_page_push` (page state donated); one cached
     executable, re-traced per pid-vector shape by jit itself."""
-    return _cached_program(
-        ("page_push",), None,
+    return PROGRAMS.get(
+        "page_push", None, None, (), None,
         lambda: jax.jit(make_page_push(), donate_argnums=(0,)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: n-gram drafting + batched verify inside the chunk scan
+# ---------------------------------------------------------------------------
+#
+# The chunked scan's unit of work changes from one token to one **window**:
+# a drafter proposes ``W - 1`` continuation tokens per slot from an
+# on-device n-gram history, a single multi-query ``verify_step`` scores the
+# committed token plus all drafts in one pass (W query positions instead of
+# 1), and accept/rollback bookkeeping commits the longest draft prefix the
+# greedy model agrees with, plus one bonus token.  Greedy acceptance is
+# exact: position ``w`` of the verify logits is conditioned on exactly the
+# tokens sequential greedy decode would have seen iff drafts ``1..w`` all
+# matched — so the committed tokens are **token-identical to non-speculative
+# greedy decode by construction**, and the win is purely dispatch/bandwidth
+# (one cache sweep serves W positions).
+#
+# Rollback is *overwrite-before-attend*, not state surgery: rejected
+# positions' KV writes are left in place (dense: masked beyond the budget so
+# the ring never wraps onto live context; paged: stale offsets in mapped
+# pages), ``cur_pos`` rewinds by simply not advancing past the commit point,
+# and the next window rewrites every stale position before any query can
+# attend to it (the window always spans at least as far as the previous
+# window's overshoot).  Likewise "page-table rewind" for rejected tokens:
+# pages mapped for the overshoot are *retained* as prefetched capacity —
+# they are exactly the pages the next window needs — and are recycled by
+# ``_free_finished_pages`` the moment the slot finishes.
+
+
+class DraftState(NamedTuple):
+    """On-device n-gram drafter history, donated alongside the caches.
+
+    hist: (B, N) int32 — last ``N`` committed tokens per slot, newest at
+          index ``N - 1``, front-padded with -1 (never a valid token, so
+          padding cannot match).
+    n:    (B,) int32 — count of valid entries (≤ N).
+    """
+
+    hist: jax.Array
+    n: jax.Array
+
+
+def init_draft_state(batch: int, hist_len: int) -> DraftState:
+    return DraftState(
+        hist=jnp.full((batch, hist_len), -1, jnp.int32),
+        n=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _propose_drafts(draft: DraftState, last, n_draft: int, ngram: int):
+    """(B, n_draft) draft tokens: find the most recent earlier occurrence of
+    the trailing ``ngram`` committed tokens and propose its continuation;
+    slots with no match fall back to repeating the last token (free to
+    verify — the window runs at fixed width W regardless)."""
+    hist, n = draft.hist, draft.n
+    B, N = hist.shape
+    idx = jnp.arange(N, dtype=jnp.int32)
+    m = jnp.ones((B, N), bool)
+    for g in range(ngram):
+        # shifted[:, i] = hist[:, i - g] (−1 beyond the front): candidate
+        # n-gram *ending* at i matches the trailing n-gram ending at N-1
+        shifted = (hist if g == 0 else
+                   jnp.pad(hist, ((0, 0), (g, 0)),
+                           constant_values=-1)[:, :N])
+        m = m & (shifted == hist[:, N - 1 - g][:, None])
+    # candidate must end strictly before the trailing n-gram and span only
+    # valid history: i - ngram + 1 >= N - n
+    m = m & (idx[None, :] < N - 1) & (idx[None, :] >= (N - n + ngram - 1)[:, None])
+    match_idx = jnp.max(jnp.where(m, idx[None, :], -1), axis=1)       # (B,)
+    found = (match_idx >= 0) & (n >= ngram + 1)
+    cont = jnp.clip(
+        match_idx[:, None] + 1 + jnp.arange(n_draft, dtype=jnp.int32)[None, :],
+        0, N - 1)
+    proposed = jnp.take_along_axis(hist, cont, axis=1)
+    fallback = jnp.broadcast_to(last[:, None], (B, n_draft))
+    return jnp.where(found[:, None], proposed, fallback).astype(jnp.int32)
+
+
+def _advance_draft(draft: DraftState, toks, c):
+    """Shift ``c[b]`` committed tokens (``toks[b, :c[b]]``) into each slot's
+    history.  Gather indices never reach past position ``N - 1 + c[b]`` of
+    the concatenation, so uncommitted window tokens are never read."""
+    hist, n = draft.hist, draft.n
+    N = hist.shape[1]
+    ext = jnp.concatenate([hist, toks.astype(jnp.int32)], axis=1)
+    idx = jnp.arange(N, dtype=jnp.int32)[None, :] + c[:, None]
+    return DraftState(
+        hist=jnp.take_along_axis(ext, idx, axis=1),
+        n=jnp.minimum(n + c, N).astype(jnp.int32),
+    )
+
+
+def _spec_accept(q_toks, g, st: SlotState, active):
+    """The acceptance algebra shared by the dense and paged spec chunks.
+
+    ``g[b, w]`` is the greedy token given the prefix through ``q_toks[b, w]``
+    — valid as a sequential-greedy output iff drafts ``1..w`` all matched,
+    which is exactly what the cumulative-product acceptance scan checks, so
+    garbage positions (wrong-context logits after the first mismatch) can
+    never be committed.  Returns (c, nxt, done, emitted):
+
+      c       (B,) int32 — committed tokens this window: the accepted draft
+              prefix + 1 bonus token, cut at the first EOS and at the
+              remaining budget; ≥ 1 for active slots (the bonus token is
+              unconditional, mirroring one non-speculative step).
+      nxt     (B,) int32 — last committed token (next window's root).
+      done    (B,) bool  — EOS committed or budget exhausted.
+      emitted (B, W) bool — prefix mask ``w < c`` over the window outputs.
+    """
+    W = g.shape[1]
+    wi = jnp.arange(W, dtype=jnp.int32)
+    acc = (q_toks[:, 1:] == g[:, :-1]).astype(jnp.int32)       # (B, W-1)
+    e = 1 + jnp.cumprod(acc, axis=1).sum(axis=1)               # (B,) in [1,W]
+    is_eos = (st.eos[:, None] >= 0) & (g == st.eos[:, None])
+    fe = jnp.where(is_eos.any(axis=1),
+                   jnp.argmax(is_eos, axis=1), W)              # first EOS
+    # EOS beyond the accepted prefix (fe >= e) is a garbage-position token
+    # and is correctly ignored: c = min(e, ...) cuts before it
+    c = jnp.minimum(jnp.minimum(e, fe + 1), st.remaining)
+    c = jnp.where(active, c, 0)
+    hit_eos = fe < c                 # ⟺ the EOS is the last committed token
+    done = active & (hit_eos | (st.remaining - c <= 0))
+    nxt = jnp.take_along_axis(g, jnp.clip(c - 1, 0, W - 1)[:, None],
+                              axis=1)[:, 0]
+    nxt = jnp.where(active, nxt, st.tokens)
+    emitted = active[:, None] & (wi[None, :] < c[:, None])
+    return c, nxt, done, emitted
+
+
+def make_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
+                           window: int, ngram: int, *, policy=None):
+    """spec_chunk(params, caches, state, draft, key) ->
+    (caches, state, draft, tokens (Tw, B, W), emitted (Tw, B, W), poisoned).
+
+    The speculative twin of :func:`make_decode_chunk`: ``n_windows``
+    draft-and-verify windows of width ``window`` per dispatch.  Greedy only
+    — acceptance compares argmax tokens, which is meaningless under
+    sampling.  ``emitted`` is a per-window *prefix* mask (the committed
+    tokens are ``tokens[t, b, :c]``); the poison sentinel discards the whole
+    window for a slot whose committable logits come back non-finite.  The
+    dense ring writes are masked at the remaining budget (``write_limit``)
+    so overshoot writes can never wrap the ring onto live context.  Jit
+    with ``donate_argnums=(1, 2, 3)``.
+    """
+    assert scfg.greedy, "speculative decode requires greedy selection"
+    mask = scfg.logit_mask(cfg)
+    W = int(window)
+
+    def spec_chunk(params, caches: Caches, state: SlotState,
+                   draft: DraftState, key):
+        del key  # greedy: kept for signature parity with the sampled chunk
+        B = state.tokens.shape[0]
+        wi = jnp.arange(W, dtype=jnp.int32)
+
+        def body(carry, _):
+            caches, st, dr, poisoned = carry
+            drafts = _propose_drafts(dr, st.tokens, W - 1, ngram)
+            q_toks = jnp.concatenate([st.tokens[:, None], drafts], axis=1)
+            logits, caches = verify_step(
+                params, q_toks, caches, st.cur_pos, cfg,
+                impl=scfg.attn_impl, policy=policy,
+                write_limit=st.remaining,
+            )
+            if mask is not None:
+                logits = logits + mask.astype(logits.dtype)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, W)
+            # poison only on committable positions: beyond the remaining
+            # budget the ring write was masked and the query may read stale
+            # slots — garbage there is expected and can never be emitted
+            finite = jnp.isfinite(logits).all(axis=-1)          # (B, W)
+            committable = wi[None, :] < st.remaining[:, None]
+            bad = st.active & ~(finite | ~committable).all(axis=1)
+            active = st.active & ~bad
+            c, nxt, done, emitted = _spec_accept(q_toks, g, st, active)
+            dr = _advance_draft(dr, g, c)
+            st = SlotState(
+                tokens=nxt,
+                cur_pos=st.cur_pos + c,
+                active=active & ~done,
+                remaining=st.remaining - c,
+                eos=st.eos,
+            )
+            return (caches, st, dr, poisoned | bad), (g, emitted)
+
+        poisoned0 = jnp.zeros((B,), bool)
+        (caches, state, draft, poisoned), (toks, emitted) = jax.lax.scan(
+            body, (caches, state, draft, poisoned0), None, length=n_windows
+        )
+        return caches, state, draft, toks, emitted, poisoned
+
+    return spec_chunk
+
+
+def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
+                                 window: int, ngram: int, page_size: int,
+                                 *, policy=None):
+    """spec_chunk(params, caches, state, pages, draft, key) ->
+    (caches, state, pages, draft, tokens (Tw, B, W), emitted, poisoned).
+
+    Paged speculative chunk: the page fault inside the scan maps **every
+    logical page the window's committable span touches** (up to
+    ``(W - 2) // page_size + 2`` pages), all-or-nothing per slot — a slot
+    that cannot map its full span is denied and requeued like a single-page
+    OOM, so a half-mapped window can never commit tokens whose KV landed in
+    the trash page.  Grants stay prefix-feasible: the per-slot page need is
+    cumsum-ranked, both the stack bound and the quota bound are monotone in
+    that rank, so denials cut a suffix and pops stay contiguous at the top
+    of the stack.  Overshoot pages are retained (they are the next window's
+    pages) and recycled by :func:`_free_finished_pages` when the slot
+    finishes.  Jit with ``donate_argnums=(1, 2, 3, 4)``.
+    """
+    assert scfg.greedy, "speculative decode requires greedy selection"
+    mask = scfg.logit_mask(cfg)
+    W = int(window)
+    ps = int(page_size)
+    # max logical pages [cur, cur + W - 1] can span: the first page may be
+    # entered mid-page, every later one is full
+    max_span = (W - 2) // ps + 2
+
+    def spec_chunk(params, caches: Caches, state: SlotState,
+                   pages: PageState, draft: DraftState, key):
+        del key  # greedy: kept for signature parity with the sampled chunk
+        n_pages = pages.free.shape[0] - 1
+        B = state.tokens.shape[0]
+        maxp = pages.table.shape[1]
+        bidx = jnp.arange(B)
+        wi = jnp.arange(W, dtype=jnp.int32)
+
+        def body(carry, _):
+            caches, st, pg, dr, poisoned = carry
+            # -- multi-page fault over the window's committable span -------
+            weff = jnp.minimum(W, st.remaining)      # positions that can
+            l0 = (st.cur_pos // ps).astype(jnp.int32)  # ever be committed
+            l1 = ((st.cur_pos + jnp.maximum(weff, 1) - 1) // ps).astype(
+                jnp.int32)
+            span = l0[:, None] + jnp.arange(max_span, dtype=jnp.int32)[None, :]
+            in_span = span <= l1[:, None]
+            col = jnp.clip(span, 0, maxp - 1)
+            cur = jnp.take_along_axis(pg.table, col, axis=1)  # (B, max_span)
+            need = st.active[:, None] & in_span & (cur < 0)
+            need_cnt = need.sum(axis=1)
+            base = jnp.cumsum(need_cnt) - need_cnt
+            allocated = n_pages - pg.free_top
+            fits = ((base + need_cnt <= pg.free_top)
+                    & (allocated + base + need_cnt <= pg.quota))
+            got = (need_cnt > 0) & fits
+            oom = st.active & (need_cnt > 0) & ~fits
+            rank_in = jnp.cumsum(need.astype(jnp.int32), axis=1) - need
+            flat_rank = base[:, None] + rank_in
+            pop = need & got[:, None]
+            pid = pg.free[jnp.clip(pg.free_top - 1 - flat_rank, 0, n_pages)]
+            table = pg.table
+            for s in range(max_span):
+                table = table.at[bidx, col[:, s]].set(
+                    jnp.where(pop[:, s], pid[:, s], cur[:, s]))
+            free_top = pg.free_top - pop.sum(dtype=jnp.int32)
+            active = st.active & ~oom
+            # -- draft + batched verify against the (updated) table --------
+            drafts = _propose_drafts(dr, st.tokens, W - 1, ngram)
+            q_toks = jnp.concatenate([st.tokens[:, None], drafts], axis=1)
+            logits, caches = verify_step(
+                params, q_toks, caches, st.cur_pos, cfg,
+                impl=scfg.attn_impl, policy=policy, page_table=table,
+            )
+            if mask is not None:
+                logits = logits + mask.astype(logits.dtype)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            # overshoot positions past the budget may write to / read from
+            # unmapped (trash-redirected) pages — only committable positions
+            # can poison
+            finite = jnp.isfinite(logits).all(axis=-1)
+            committable = wi[None, :] < st.remaining[:, None]
+            bad = active & ~(finite | ~committable).all(axis=1)
+            active = active & ~bad
+            c, nxt, done, emitted = _spec_accept(q_toks, g, st, active)
+            dr = _advance_draft(dr, g, c)
+            # -- recycle pages of finished / denied / poisoned slots -------
+            table, free, free_top, pinned = _free_finished_pages(
+                table, pg.free, free_top, done | oom | bad, pg.pinned)
+            st = SlotState(
+                tokens=nxt,
+                cur_pos=st.cur_pos + c,
+                active=active & ~done,
+                remaining=st.remaining - c,
+                eos=st.eos,
+            )
+            pg = PageState(table=table, free=free, free_top=free_top,
+                           quota=pg.quota, pinned=pinned)
+            return (caches, st, pg, dr, poisoned | bad), (g, emitted)
+
+        poisoned0 = jnp.zeros((B,), bool)
+        (caches, state, pages, draft, poisoned), (toks, emitted) = (
+            jax.lax.scan(body, (caches, state, pages, draft, poisoned0),
+                         None, length=n_windows))
+        return caches, state, pages, draft, toks, emitted, poisoned
+
+    return spec_chunk
+
+
+def spec_decode_chunk_program(cfg, scfg: ServeConfig, n_windows: int,
+                              window: int, ngram: int, *, policy=None):
+    """Jitted :func:`make_spec_decode_chunk`, caches/state/draft donated."""
+    return PROGRAMS.get(
+        "spec_chunk", cfg, scfg, (int(n_windows), int(window), int(ngram)),
+        policy,
+        lambda: jax.jit(
+            make_spec_decode_chunk(cfg, scfg, n_windows, window, ngram,
+                                   policy=policy),
+            donate_argnums=(1, 2, 3)),
+    )
+
+
+def paged_spec_decode_chunk_program(cfg, scfg: ServeConfig, n_windows: int,
+                                    window: int, ngram: int, page_size: int,
+                                    *, policy=None):
+    """Jitted :func:`make_paged_spec_decode_chunk`, caches/state/pages/draft
+    donated."""
+    return PROGRAMS.get(
+        "paged_spec_chunk", cfg, scfg,
+        (int(n_windows), int(window), int(ngram), int(page_size)), policy,
+        lambda: jax.jit(
+            make_paged_spec_decode_chunk(cfg, scfg, n_windows, window,
+                                         ngram, page_size, policy=policy),
+            donate_argnums=(1, 2, 3, 4)),
     )
 
 

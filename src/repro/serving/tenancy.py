@@ -286,7 +286,9 @@ class ServingExecutor:
         ``ContinuousBatcher.live_state``): a stored pytree reference would
         be dead by the time a resize lands between chunks.  ``on_migrate``
         is invoked with the migrated tree after a resize so the owner can
-        adopt it (``ContinuousBatcher.adopt_state``)."""
+        adopt it (``ContinuousBatcher.adopt_state``).  For a speculative
+        batcher the tree also carries the n-gram draft state, so drafter
+        history survives a policy-driven resize along with the caches."""
         self.live_state[tenant] = live_state
         if state_specs is not None:
             self.state_specs[tenant] = state_specs

@@ -1,0 +1,523 @@
+"""Speculative decode inside the chunked scan + prefill/decode overlap +
+the unified ServingConfig API.
+
+The headline invariant: speculative greedy decode is **token-identical** to
+non-speculative greedy decode, by construction — through the batcher, at
+f32, dense and paged, including EOS landing inside a draft window and
+accepted runs crossing page boundaries.  Everything else (acceptance
+algebra, drafter, verify kernel, config validation, program registry,
+draft-state migration) defends a piece of that construction.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.config import ServingConfig, config_from_legacy_kwargs
+from repro.serving.engine import (
+    PROGRAMS,
+    DraftState,
+    ProgramRegistry,
+    SlotState,
+    _advance_draft,
+    _propose_drafts,
+    _spec_accept,
+    init_draft_state,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_reduced("qwen3-0.6b")
+    return cfg, init_params(cfg, KEY)
+
+
+def _slot_state(B, *, remaining, eos=-1, tokens=0):
+    return SlotState(
+        tokens=jnp.full((B,), tokens, jnp.int32),
+        cur_pos=jnp.zeros((B,), jnp.int32),
+        active=jnp.ones((B,), bool),
+        remaining=jnp.asarray(remaining, jnp.int32).reshape(B),
+        eos=jnp.asarray(eos, jnp.int32).reshape(-1).repeat(B)[:B]
+        if np.isscalar(eos) else jnp.asarray(eos, jnp.int32),
+    )
+
+
+class TestSpecAccept:
+    """The acceptance algebra in isolation: c / nxt / done / emitted."""
+
+    def test_full_accept_commits_window(self):
+        # drafts q[1:] all equal the verified greedy tokens g[:-1]
+        q = jnp.asarray([[7, 3, 4, 5]], jnp.int32)
+        g = jnp.asarray([[3, 4, 5, 6]], jnp.int32)
+        st = _slot_state(1, remaining=[10])
+        c, nxt, done, emitted = _spec_accept(q, g, st, st.active)
+        assert int(c[0]) == 4 and int(nxt[0]) == 6
+        assert not bool(done[0])
+        np.testing.assert_array_equal(np.asarray(emitted[0]),
+                                      [True] * 4)
+
+    def test_first_mismatch_cuts_commit(self):
+        # draft at w=2 (token 9) != g[:,1] (4): accept prefix len e = 2
+        q = jnp.asarray([[7, 3, 9, 5]], jnp.int32)
+        g = jnp.asarray([[3, 4, 5, 6]], jnp.int32)
+        st = _slot_state(1, remaining=[10])
+        c, nxt, done, emitted = _spec_accept(q, g, st, st.active)
+        assert int(c[0]) == 2 and int(nxt[0]) == 4
+        np.testing.assert_array_equal(np.asarray(emitted[0]),
+                                      [True, True, False, False])
+
+    def test_full_reject_still_commits_bonus_token(self):
+        # every draft wrong: exactly one token commits — the w=0 verify
+        # output, which is what one plain greedy step would have produced
+        q = jnp.asarray([[7, 9, 9, 9]], jnp.int32)
+        g = jnp.asarray([[3, 4, 5, 6]], jnp.int32)
+        st = _slot_state(1, remaining=[10])
+        c, nxt, done, emitted = _spec_accept(q, g, st, st.active)
+        assert int(c[0]) == 1 and int(nxt[0]) == 3
+        np.testing.assert_array_equal(np.asarray(emitted[0]),
+                                      [True, False, False, False])
+
+    def test_eos_inside_accepted_prefix_cuts_and_finishes(self):
+        # full agreement, but g[:,1] is the EOS: commit through it (c=2),
+        # mark done, never emit the post-EOS positions
+        q = jnp.asarray([[7, 3, 4, 5]], jnp.int32)
+        g = jnp.asarray([[3, 2, 5, 6]], jnp.int32)
+        st = _slot_state(1, remaining=[10], eos=2)
+        c, nxt, done, emitted = _spec_accept(q, g, st, st.active)
+        assert int(c[0]) == 2 and int(nxt[0]) == 2
+        assert bool(done[0])
+        np.testing.assert_array_equal(np.asarray(emitted[0]),
+                                      [True, True, False, False])
+
+    def test_eos_beyond_accepted_prefix_is_garbage_and_ignored(self):
+        # mismatch at w=1 (draft 9 != g 4) makes positions w>=2 garbage;
+        # a spurious EOS there must not finish the slot
+        q = jnp.asarray([[7, 3, 9, 9]], jnp.int32)
+        g = jnp.asarray([[3, 4, 2, 2]], jnp.int32)
+        st = _slot_state(1, remaining=[10], eos=2)
+        c, nxt, done, emitted = _spec_accept(q, g, st, st.active)
+        assert int(c[0]) == 2 and int(nxt[0]) == 4
+        assert not bool(done[0])
+
+    def test_budget_clamps_commit_and_finishes(self):
+        q = jnp.asarray([[7, 3, 4, 5]], jnp.int32)
+        g = jnp.asarray([[3, 4, 5, 6]], jnp.int32)
+        st = _slot_state(1, remaining=[2])
+        c, nxt, done, emitted = _spec_accept(q, g, st, st.active)
+        assert int(c[0]) == 2 and int(nxt[0]) == 4
+        assert bool(done[0])
+
+    def test_inactive_slot_commits_nothing(self):
+        q = jnp.asarray([[7, 3, 4, 5]], jnp.int32)
+        g = jnp.asarray([[3, 4, 5, 6]], jnp.int32)
+        st = _slot_state(1, remaining=[10], tokens=7)
+        c, nxt, done, emitted = _spec_accept(q, g, st,
+                                             jnp.zeros((1,), bool))
+        assert int(c[0]) == 0 and int(nxt[0]) == 7   # keeps st.tokens
+        assert not bool(done[0]) and not bool(emitted.any())
+
+
+class TestDrafter:
+    """On-device n-gram self-speculation: propose + history advance."""
+
+    def test_repeated_ngram_proposes_continuation(self):
+        # history ... 5 6 9 5 6 : trailing bigram (5,6) recurs with
+        # continuation 9 — the drafter must propose 9 first
+        d = init_draft_state(1, 16)
+        toks = jnp.asarray([[1, 2, 5, 6, 9, 5, 6]], jnp.int32)
+        d = _advance_draft(DraftState(hist=d.hist, n=d.n), toks,
+                           jnp.asarray([7], jnp.int32))
+        prop = _propose_drafts(d, jnp.asarray([6], jnp.int32),
+                               n_draft=3, ngram=2)
+        assert int(prop[0, 0]) == 9
+
+    def test_no_match_falls_back_to_last_token(self):
+        d = init_draft_state(1, 16)
+        toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        d = _advance_draft(d, toks, jnp.asarray([4], jnp.int32))
+        prop = _propose_drafts(d, jnp.asarray([4], jnp.int32),
+                               n_draft=3, ngram=2)
+        np.testing.assert_array_equal(np.asarray(prop[0]), [4, 4, 4])
+
+    def test_advance_is_a_shift_register(self):
+        d = init_draft_state(1, 4)
+        d = _advance_draft(d, jnp.asarray([[1, 2, 3, 0]], jnp.int32),
+                           jnp.asarray([3], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(d.hist[0]), [-1, 1, 2, 3])
+        assert int(d.n[0]) == 3
+        d = _advance_draft(d, jnp.asarray([[7, 8, 0, 0]], jnp.int32),
+                           jnp.asarray([2], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(d.hist[0]), [2, 3, 7, 8])
+        assert int(d.n[0]) == 4          # saturates at capacity
+
+    def test_advance_never_reads_uncommitted_window_tokens(self):
+        # c=1 of a W=4 window: rejected drafts (positions 1..3) must not
+        # enter the history
+        d = init_draft_state(1, 4)
+        d = _advance_draft(d, jnp.asarray([[5, 666, 666, 666]], jnp.int32),
+                           jnp.asarray([1], jnp.int32))
+        assert 666 not in np.asarray(d.hist[0])
+
+
+def _mk_requests(cfg, n, *, seed=7, plen=6, max_new=24, eos=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab, size=plen).astype(np.int32),
+                    max_new=max_new if np.isscalar(max_new) else max_new[i],
+                    eos=eos)
+            for i in range(n)]
+
+
+def _run(params, cfg, sc, reqs, *, max_steps=4000):
+    b = ContinuousBatcher(params, cfg, sc)
+    for r in reqs:
+        b.submit(r)
+    stats = b.run(max_steps=max_steps)
+    return b, stats
+
+
+class TestSpecBatcherIdentity:
+    """spec == greedy, token for token, through the full batcher at f32."""
+
+    def _ref(self, qwen, **kw):
+        cfg, params = qwen
+        reqs = _mk_requests(cfg, 6, **kw)
+        _run(params, cfg,
+             ServingConfig(slots=4, prompt_len=8, max_len=48,
+                           attn_impl="xla", chunk=4), reqs)
+        return {r.rid: list(r.out) for r in reqs}
+
+    def test_dense_spec_identical(self, qwen):
+        cfg, params = qwen
+        ref = self._ref(qwen)
+        reqs = _mk_requests(cfg, 6)
+        _, st = _run(params, cfg,
+                     ServingConfig(slots=4, prompt_len=8, max_len=48,
+                                   attn_impl="xla", chunk=4,
+                                   speculative=True, draft_window=4), reqs)
+        assert {r.rid: r.out for r in reqs} == ref
+        assert st.spec_windows > 0
+        assert st.drafted_tokens >= st.accepted_tokens >= 0
+        assert 0.0 <= st.acceptance_rate <= 1.0
+
+    def test_paged_spec_identical_small_pages(self, qwen):
+        """page_size=4 < draft_window+1 forces accepted runs (and single
+        verify windows) to cross page boundaries and multi-page-fault."""
+        cfg, params = qwen
+        ref = self._ref(qwen)
+        reqs = _mk_requests(cfg, 6)
+        _, st = _run(params, cfg,
+                     ServingConfig(slots=4, prompt_len=8, max_len=48,
+                                   attn_impl="xla", chunk=4, paged=True,
+                                   page_size=4, n_pages=96,
+                                   speculative=True, draft_window=6), reqs)
+        assert {r.rid: r.out for r in reqs} == ref
+        assert st.spec_windows > 0
+
+    def test_eos_inside_draft_window(self, qwen):
+        """Pick an EOS id straight out of the reference stream so it lands
+        mid-generation; both runs must stop at the same token."""
+        cfg, params = qwen
+        ref_free = self._ref(qwen)
+        # an id that occurs at least 2 tokens into some stream
+        eos = None
+        for out in ref_free.values():
+            if len(out) > 3:
+                eos = out[3]
+                break
+        assert eos is not None
+        ref_reqs = _mk_requests(cfg, 6, eos=eos)
+        _run(params, cfg,
+             ServingConfig(slots=4, prompt_len=8, max_len=48,
+                           attn_impl="xla", chunk=4), ref_reqs)
+        ref = {r.rid: list(r.out) for r in ref_reqs}
+        assert any(r.out and r.out[-1] == eos and len(r.out) < 24
+                   for r in ref_reqs)          # EOS actually fired early
+        reqs = _mk_requests(cfg, 6, eos=eos)
+        _run(params, cfg,
+             ServingConfig(slots=4, prompt_len=8, max_len=48,
+                           attn_impl="xla", chunk=4,
+                           speculative=True, draft_window=4), reqs)
+        assert {r.rid: r.out for r in reqs} == ref
+
+    def test_overlap_identical_with_stats(self, qwen):
+        cfg, params = qwen
+        ref = self._ref(qwen)
+        reqs = _mk_requests(cfg, 6)
+        _, st = _run(params, cfg,
+                     ServingConfig(slots=4, prompt_len=8, max_len=48,
+                                   attn_impl="xla", chunk=4, paged=True,
+                                   page_size=8, n_pages=64,
+                                   speculative=True, draft_window=4,
+                                   overlap=True), reqs)
+        assert {r.rid: r.out for r in reqs} == ref
+        assert st.overlap_rounds > 0
+
+    def test_dense_overlap_identical_without_spec(self, qwen):
+        cfg, params = qwen
+        ref = self._ref(qwen)
+        reqs = _mk_requests(cfg, 6)
+        _, st = _run(params, cfg,
+                     ServingConfig(slots=4, prompt_len=8, max_len=48,
+                                   attn_impl="xla", chunk=4, overlap=True),
+                     reqs)
+        assert {r.rid: r.out for r in reqs} == ref
+        assert st.spec_windows == 0
+
+
+class TestDraftStateSurvival:
+    """Draft history must ride along with every state-movement path."""
+
+    def test_live_state_carries_draft(self, qwen):
+        cfg, params = qwen
+        sc = ServingConfig(slots=2, prompt_len=8, max_len=32,
+                           attn_impl="xla", speculative=True)
+        b = ContinuousBatcher(params, cfg, sc)
+        state = b.live_state()
+        assert "draft" in state
+        b.adopt_state(jax.tree.map(jnp.copy, state))
+        assert isinstance(b.draft, DraftState)
+
+    def test_set_page_limit_shrink_preserves_identity(self, qwen):
+        """Shrinking the page pool mid-run evicts/requeues slots; resumed
+        requests re-seed the drafter from their kept output and the final
+        streams still match unconstrained greedy."""
+        cfg, params = qwen
+        ref_reqs = _mk_requests(cfg, 4, plen=6, max_new=20)
+        _run(params, cfg,
+             ServingConfig(slots=4, prompt_len=8, max_len=48,
+                           attn_impl="xla", chunk=2), ref_reqs)
+        ref = {r.rid: list(r.out) for r in ref_reqs}
+
+        sc = ServingConfig(slots=4, prompt_len=8, max_len=48,
+                           attn_impl="xla", chunk=2, paged=True,
+                           page_size=4, n_pages=64,
+                           speculative=True, draft_window=4)
+        reqs = _mk_requests(cfg, 4, plen=6, max_new=20)
+        b = ContinuousBatcher(params, cfg, sc)
+        for r in reqs:
+            b.submit(r)
+        for _ in range(3):
+            b.step()
+        b.set_page_limit(28)                    # force evictions + resumes
+        b.run(max_steps=4000)
+        assert {r.rid: r.out for r in reqs} == ref
+
+    def test_migration_between_chunks_preserves_identity(self, qwen):
+        """TwoStageCompiler.reconfigure pulls live_state (incl. draft) and
+        pushes it back through adopt_state; decode resumes identically."""
+        from repro.core import TenantSpec
+        from repro.serving.tenancy import (
+            VirtualAcceleratorPool, make_serving_hypervisor,
+        )
+
+        cfg, params = qwen
+        ref_reqs = _mk_requests(cfg, 3, plen=4, max_new=12)
+        _run(params, cfg,
+             ServingConfig(slots=4, prompt_len=8, max_len=64,
+                           attn_impl="xla", chunk=4), ref_reqs)
+        ref = {r.rid: list(r.out) for r in ref_reqs}
+
+        pool = VirtualAcceleratorPool(devices=jax.devices() * 4,
+                                      devices_per_core=1)
+        hv, ex = make_serving_hypervisor(pool, policy="no_realloc")
+
+        def mesh_builder(n):
+            import jax.sharding as jsh
+            devs = np.array(jax.devices() * n, dtype=object)[:n].reshape(n, 1)
+            return jsh.Mesh(devs, ("data", "model"))
+
+        ex.compiler.static_compile(
+            "decode", lambda x: x,
+            (jax.ShapeDtypeStruct((4,), jnp.float32),),
+            lease_sizes=[1, 2], mesh_builder=mesh_builder)
+        assert hv.admit(TenantSpec("t", 1, artifact="decode"))
+
+        sc = ServingConfig(slots=4, prompt_len=8, max_len=64,
+                           attn_impl="xla", chunk=4,
+                           speculative=True, draft_window=4)
+        b = ContinuousBatcher(params, cfg, sc)
+        ex.register_state("t", b.live_state, on_migrate=b.adopt_state)
+        reqs = _mk_requests(cfg, 3, plen=4, max_new=12)
+        for r in reqs:
+            b.submit(r)
+        b.step()                                 # drafts + tokens in flight
+        hv.resize_request("t", 2)                # migration between chunks
+        assert ex.reconfig_log and "t_migrate" in ex.reconfig_log[-1]
+        b.run(max_steps=2000)
+        assert {r.rid: r.out for r in reqs} == ref
+
+
+class TestPagedVerifyKernel:
+    """Pallas multi-query verify vs the materialized-gather oracle."""
+
+    def _pools(self, key, P, ps, Hkv, dh):
+        kk, kv = jax.random.split(key)
+        kp = jax.random.normal(kk, (P + 1, ps, Hkv, dh), jnp.float32)
+        vp = jax.random.normal(kv, (P + 1, ps, Hkv, dh), jnp.float32)
+        return kp.at[P].set(1e4), vp.at[P].set(1e4)   # poisoned trash page
+
+    @pytest.mark.parametrize("H,Hkv", [(4, 2), (8, 1), (8, 8)])
+    @pytest.mark.parametrize("W", [2, 4])
+    def test_matches_ref(self, H, Hkv, W):
+        from repro.kernels.paged_attention import ops, ref
+
+        B, dh, P, ps, maxp = 3, 32, 10, 8, 4
+        kq, kp_key = jax.random.split(KEY)
+        q = jax.random.normal(kq, (B, W, H, dh), jnp.float32)
+        kp, vp = self._pools(kp_key, P, ps, Hkv, dh)
+        table = jnp.asarray([[0, 3, 9, -1], [5, 1, 7, -1], [2, 4, 6, 8]],
+                            jnp.int32)
+        # windows straddling page boundaries and the capacity edge
+        cur = jnp.asarray([6, 14, 32 - W], jnp.int32)
+        got = ops.paged_verify_attention(q, kp, vp, table, cur,
+                                         interpret=True)
+        want = ref.paged_verify_attention_ref(q, kp, vp, table, cur)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_window_rows_see_increasing_context(self):
+        """Row w attends through cur+w only: verify outputs must equal W
+        independent single-query decode calls at successive positions."""
+        from repro.kernels.paged_attention import ops, ref
+
+        B, W, H, Hkv, dh, P, ps = 1, 4, 4, 2, 32, 6, 8
+        kq, kp_key = jax.random.split(KEY)
+        q = jax.random.normal(kq, (B, W, H, dh), jnp.float32)
+        kp, vp = self._pools(kp_key, P, ps, Hkv, dh)
+        table = jnp.asarray([[1, 4]], jnp.int32)
+        cur = jnp.asarray([5], jnp.int32)            # crosses into page 2
+        got = ops.paged_verify_attention(q, kp, vp, table, cur,
+                                         interpret=True)
+        for w in range(W):
+            want = ref.paged_decode_attention_ref(
+                q[:, w], kp, vp, table, cur + w)
+            np.testing.assert_allclose(np.asarray(got[:, w]),
+                                       np.asarray(want),
+                                       rtol=2e-4, atol=2e-4, err_msg=f"w={w}")
+
+
+class TestServingConfigAPI:
+    def test_config_construction_path(self, qwen):
+        cfg, params = qwen
+        sc = ServingConfig(slots=2, prompt_len=8, max_len=32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")       # no deprecation on new path
+            b = ContinuousBatcher(params, cfg, sc)
+        assert b.config is sc
+
+    def test_legacy_kwargs_warn_and_match(self, qwen):
+        cfg, params = qwen
+        with pytest.warns(DeprecationWarning):
+            b = ContinuousBatcher(params, cfg, slots=2, prompt_len=8,
+                                  max_len=32, chunk=4)
+        assert b.config == ServingConfig(slots=2, prompt_len=8, max_len=32,
+                                         chunk=4)
+
+    def test_config_plus_kwargs_is_an_error(self, qwen):
+        cfg, params = qwen
+        sc = ServingConfig(slots=2, prompt_len=8, max_len=32)
+        with pytest.raises(TypeError):
+            ContinuousBatcher(params, cfg, sc, slots=4)
+
+    def test_unknown_legacy_kwarg_raises(self):
+        with pytest.raises(TypeError, match="slotz"):
+            config_from_legacy_kwargs(slotz=4, prompt_len=8, max_len=32)
+
+    def test_cross_field_validation(self):
+        with pytest.raises(ValueError):        # prefix cache needs paging
+            ServingConfig(slots=2, prompt_len=8, max_len=32,
+                          prefix_cache=True)
+        with pytest.raises(ValueError):        # no room to decode
+            ServingConfig(slots=2, prompt_len=32, max_len=32)
+        with pytest.raises(ValueError):        # window too small
+            ServingConfig(slots=2, prompt_len=8, max_len=32,
+                          speculative=True, draft_window=1)
+        with pytest.raises(ValueError):        # capability-gated impl
+            ServingConfig(slots=2, prompt_len=8, max_len=32,
+                          attn_impl="naive", speculative=True)
+
+    def test_speculative_rejects_ssm_arch(self, qwen):
+        from repro.configs import get_reduced as gr
+        cfg = gr("mamba2-370m")
+        params = init_params(cfg, KEY)
+        with pytest.raises(ValueError, match="rolled back"):
+            ContinuousBatcher(params, cfg,
+                              ServingConfig(slots=2, prompt_len=8,
+                                            max_len=32, speculative=True))
+
+
+class TestProgramRegistry:
+    def test_same_key_hits_cache(self):
+        reg = ProgramRegistry(maxsize=4)
+        calls = []
+
+        def build():
+            calls.append(1)
+            return object()
+
+        a = reg.get("k", None, None, (3,), None, build)
+        b = reg.get("k", None, None, (3,), None, build)
+        assert a is b and len(calls) == 1
+        c = reg.get("k", None, None, (4,), None, build)
+        assert c is not a and len(calls) == 2
+
+    def test_lru_eviction(self):
+        reg = ProgramRegistry(maxsize=2)
+        for i in range(3):
+            reg.get("k", None, None, (i,), None, object)
+        assert len(reg) == 2
+        assert reg.make_key("k", None, None, (0,), None) not in reg
+        assert reg.make_key("k", None, None, (2,), None) in reg
+
+    def test_batcher_programs_share_global_registry(self, qwen):
+        cfg, params = qwen
+        PROGRAMS.clear()
+        sc = ServingConfig(slots=2, prompt_len=8, max_len=32, chunk=2)
+        reqs = _mk_requests(cfg, 2, plen=4, max_new=4)
+        _run(params, cfg, sc, reqs)
+        n1 = len(PROGRAMS)
+        assert n1 > 0
+        reqs = _mk_requests(cfg, 2, plen=4, max_new=4)
+        _run(params, cfg, sc, reqs)              # second batcher, same shapes
+        assert len(PROGRAMS) == n1               # no recompilation entries
+
+
+class TestResumePrefixMiss:
+    def test_resumed_rows_count_prefix_misses(self, qwen):
+        """An OOM-resumed row is left-padded differently than its original
+        prompt, so its re-admission prefix lookup misses — now a
+        first-class stat (the lookup itself is the re-attempt: rows resumed
+        at the same output length do align and can share)."""
+        cfg, params = qwen
+        sc = ServingConfig(slots=2, prompt_len=8, max_len=32,
+                           attn_impl="xla", chunk=2, paged=True,
+                           page_size=4, n_pages=64, prefix_cache=True)
+        b = ContinuousBatcher(params, cfg, sc)
+        rng = np.random.default_rng(3)
+        fresh = Request(rid=0,
+                        prompt=rng.integers(1, cfg.vocab, size=4).astype(np.int32),
+                        max_new=4, namespace="t")
+        b.submit(fresh)
+        b.run(max_steps=200)
+        assert b.stats.resume_prefix_misses == 0     # fresh rows never count
+        # a requeued-with-kept-output request, exactly as _requeue_slot
+        # re-enqueues it after an OOM eviction
+        resumed = Request(rid=1,
+                          prompt=rng.integers(1, cfg.vocab, size=4).astype(np.int32),
+                          max_new=6, namespace="t")
+        resumed.out = [5, 9]
+        resumed.resumed = True
+        b.submit(resumed)
+        b.run(max_steps=200)
+        assert b.stats.resume_prefix_misses == 1
+        assert resumed.done
