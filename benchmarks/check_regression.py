@@ -155,6 +155,9 @@ PREFIX_SKIPPED_FRAC_FLOOR = 0.8
 PREFIX_HIT_RATE_FLOOR = 0.8
 KERNEL_TOKENS_RATIO_FLOOR = 1.0
 CHAOS_GOODPUT_FLOOR = 0.7
+SHARDED_TP2_RATIO_FLOOR = 1.15
+SHARDED_PACKING_TOKENS_FLOOR = 0.85
+SHARDED_PACKING_TURNAROUND_FLOOR = 1.2
 
 
 def _check_kernel_leg(bench: str, row: dict, xla_row: dict) -> list:
@@ -274,6 +277,57 @@ def check_chaos(fresh: dict) -> list:
     return errors
 
 
+def check_sharded(fresh: dict) -> list:
+    """Recorded acceptance bits AND the re-derived tensor-parallel ratios.
+    Both are same-host same-run comparisons (tp legs and packing legs run
+    back to back in one process), so they gate exactly."""
+    errors = []
+    for bit in ("acceptance_tp2_scaling", "acceptance_packing_tokens",
+                "acceptance_packing_turnaround"):
+        if not fresh.get(bit):
+            errors.append(f"sharded: snapshot does not record {bit}")
+    by_mode = {row["mode"]: row for row in fresh.get("rows", [])}
+    tp1, tp2 = by_mode.get("tp1"), by_mode.get("tp2")
+    if not (tp1 and tp2):
+        errors.append(f"sharded: tp rows missing, have {sorted(by_mode)}")
+        return errors
+    ratio = tp2["tokens_per_s"] / max(tp1["tokens_per_s"], 1e-9)
+    if ratio < SHARDED_TP2_RATIO_FLOOR:
+        errors.append(
+            f"sharded: tp=2 decode tokens/s at {ratio:.3f}x tp=1 "
+            f"< {SHARDED_TP2_RATIO_FLOOR} floor")
+    # host-independent: sharding must keep the chunked dispatch discipline
+    for mode, row in by_mode.items():
+        if "decode_dispatches_per_token" in row and \
+                row["decode_dispatches_per_token"] > 1.0 / 8 + 1e-9:
+            errors.append(
+                f"sharded[{mode}]: decode dispatches/token "
+                f"{row['decode_dispatches_per_token']} > 1/8")
+        if "syncs_per_token" in row and \
+                row["syncs_per_token"] > 1.0 / 8 + 1e-9:
+            errors.append(
+                f"sharded[{mode}]: host syncs/token "
+                f"{row['syncs_per_token']} > 1/8")
+    exclusive = by_mode.get("exclusive")
+    packed = by_mode.get("packed")
+    if not (exclusive and packed):
+        errors.append(
+            f"sharded: packing rows missing, have {sorted(by_mode)}")
+        return errors
+    pk = packed["tokens_per_s"] / max(exclusive["tokens_per_s"], 1e-9)
+    if pk < SHARDED_PACKING_TOKENS_FLOOR:
+        errors.append(
+            f"sharded: packed pool tokens/s at {pk:.3f}x exclusive "
+            f"time-sharing < {SHARDED_PACKING_TOKENS_FLOOR} floor")
+    ta = exclusive["mean_turnaround_s"] / max(
+        packed["mean_turnaround_s"], 1e-9)
+    if ta < SHARDED_PACKING_TURNAROUND_FLOOR:
+        errors.append(
+            f"sharded: packed mean tenant turnaround only {ta:.3f}x better "
+            f"than exclusive < {SHARDED_PACKING_TURNAROUND_FLOOR} floor")
+    return errors
+
+
 def _guard(name: str, fn, *snaps) -> list:
     """Run one checker, translating schema drift into a clear gate failure
     instead of a traceback: a malformed snapshot IS a regression."""
@@ -308,7 +362,8 @@ def main(argv=None) -> int:
     except SnapshotError as e:
         errors.append(f"serving: {e}")
     for name, checker in (("slo", check_slo), ("paging", check_paging),
-                          ("prefix", check_prefix), ("chaos", check_chaos)):
+                          ("prefix", check_prefix), ("chaos", check_chaos),
+                          ("sharded", check_sharded)):
         try:
             snap = _load(os.path.join(args.fresh, f"BENCH_{name}.json"))
         except SnapshotError as e:

@@ -27,6 +27,7 @@ BENCHES = [
     ("paging", "bench_paging", "beyond-paper — paged KV pool capacity at equal HBM"),
     ("prefix", "bench_prefix", "beyond-paper — shared-prefix KV cache admission speedup"),
     ("chaos", "bench_chaos", "beyond-paper — seeded fault injection, recovery, blast radius"),
+    ("sharded", "bench_sharded", "beyond-paper — tensor-sharded decode scaling on an emulated 8-device pool"),
 ]
 
 

@@ -421,3 +421,208 @@ def cache_specs(cfg, mesh: Mesh, *, batch: int):
             for p in range(len(specs))
         }
     return Caches(kv=kv, ssm=ssm, cross=cross)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel serving (full-manual shard_map over a flat ("tp",) mesh)
+# ---------------------------------------------------------------------------
+#
+# The serving fast path shards ONE tenant's decode over the devices of its
+# hypervisor lease: attention heads and MLP hidden features are split over a
+# 1D "tp" axis, slot bookkeeping / page tables / draft state stay replicated,
+# and each layer costs exactly two psums (attention output + MLP output).
+# Unlike the train-side partial-manual policy above, these helpers run the
+# model *entirely* inside shard_map (manual over every mesh axis) — the only
+# mode the jax-0.4.37 SPMD partitioner handles without the PartitionId issue
+# that gates tests/test_multidevice.py.  The trick that keeps the model code
+# untouched: every program is traced with a *shard-local* cfg
+# (n_heads/n_kv_heads/d_ff divided by tp, d_head unchanged), so per-shard
+# shapes are just a smaller model, and the TPShardPolicy turns the two
+# residual hooks ("attn_out"/"mlp_out") into psums.
+
+
+class TPShardPolicy:
+    """Activation policy for fully-manual tensor-parallel decode.
+
+    Sums the row-sharded attention/MLP output projections over the "tp"
+    axis; identity for every other rule name.  Deliberately has NO ``embed``
+    attribute (the table is replicated, each shard does the plain take) and
+    ``kv_len_sharded`` False (KV is sharded over *heads*, never length).
+    """
+
+    kv_len_sharded = False
+
+    def __init__(self, axis: str = "tp") -> None:
+        self.axis = axis
+
+    def __call__(self, x, name: str):
+        if name not in ("attn_out", "mlp_out"):
+            return x
+        if x.dtype == jnp.float32:
+            return jax.lax.psum(x, self.axis)
+        # psum in f32: XLA-CPU check-fails cloning bf16 all-reduces emitted
+        # inside shard_map (AllReducePromotion), same issue as .embed above
+        return jax.lax.psum(x.astype(jnp.float32), self.axis).astype(x.dtype)
+
+
+#: Shared instance for the default "tp" axis.  The program registry keys on
+#: policy *identity*, so every batcher (and every re-mesh) must shard
+#: through the same object for same-shape programs to cache-hit; the policy
+#: is stateless, so sharing it is free.
+TP_POLICY = TPShardPolicy()
+
+
+def tp_supported(cfg) -> Optional[str]:
+    """None when ``cfg`` can tensor-shard on the serving path, else the
+    reason it cannot (pure-attention dense-MLP text archs only — SSM state,
+    MoE dispatch, and cross-attention caches have no head axis to split)."""
+    if cfg.family in ("audio", "vlm"):
+        return f"family {cfg.family!r} has cross-attention/encoder state"
+    specs = period_structure(cfg)
+    if any(s.mixer != "attn" for s in specs):
+        return "SSM/hybrid archs have no head axis in their recurrent state"
+    if any(s.mlp == "moe" for s in specs):
+        return "MoE expert dispatch is not tensor-shardable on this path"
+    return None
+
+
+def check_tp(cfg, tp: int) -> None:
+    """Validate that ``cfg`` divides into ``tp`` shards; raises ValueError."""
+    why = tp_supported(cfg)
+    if why is not None:
+        raise ValueError(f"tp={tp} unsupported for {cfg.name}: {why}")
+    for dim, val in (("n_heads", cfg.n_heads), ("n_kv_heads", cfg.n_kv_heads),
+                     ("d_ff", cfg.d_ff)):
+        if val % tp:
+            raise ValueError(
+                f"tp={tp} must divide {dim}={val} for {cfg.name}")
+
+
+def tp_local_cfg(cfg, tp: int):
+    """The shard-local model: heads and hidden width divided by tp.  d_head
+    is an explicit field (set in __post_init__), so it survives the replace;
+    vocab / rope / norms are untouched (embeddings stay replicated)."""
+    if tp <= 1:
+        return cfg
+    check_tp(cfg, tp)
+    return dataclasses.replace(
+        cfg,
+        n_heads=cfg.n_heads // tp,
+        n_kv_heads=cfg.n_kv_heads // tp,
+        d_ff=cfg.d_ff // tp,
+    )
+
+
+def make_tp_mesh(tp: int, devices=None) -> Mesh:
+    """Flat 1D ("tp",) mesh over ``devices`` (default: the first ``tp``
+    process devices) — the per-tenant sub-mesh a hypervisor lease maps to."""
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if len(devices) < tp:
+        raise ValueError(f"need {tp} devices for tp={tp}, have {len(devices)}")
+    return Mesh(np.asarray(devices[:tp]), ("tp",))
+
+
+def _swiglu_tp_perm(d_ff: int, tp: int):
+    """Column permutation putting swiglu's packed [gate | up] wi into
+    per-shard-contiguous [gate_i | up_i] blocks, so a plain contiguous
+    chunking over the last axis hands shard i exactly its gate/up columns
+    (and the silu(gate_i)*up_i features line up with wo's row shard i)."""
+    import numpy as np
+
+    f = d_ff // tp
+    idx = []
+    for i in range(tp):
+        idx.extend(range(i * f, (i + 1) * f))
+        idx.extend(range(d_ff + i * f, d_ff + (i + 1) * f))
+    return np.asarray(idx, dtype=np.int64)
+
+
+def permute_params_for_tp(params, cfg, tp: int):
+    """Host-side relayout making every sharded matrix *contiguously*
+    chunkable over its tp axis.  Only swiglu's packed wi needs moving;
+    attention projections are head-contiguous already (contiguous head
+    chunks preserve the GQA group ratio because tp divides both head
+    counts).  Returns a new pytree; leaves come back as host numpy."""
+    import numpy as np
+
+    host = jax.device_get(params)
+    if tp <= 1 or cfg.mlp_kind != "swiglu":
+        return host
+    perm = _swiglu_tp_perm(cfg.d_ff, tp)
+    out = dict(host)
+    out["blocks"] = [dict(layer) for layer in host["blocks"]]
+    for layer in out["blocks"]:
+        if "mlp" in layer:
+            m = dict(layer["mlp"])
+            m["wi"] = np.ascontiguousarray(np.asarray(m["wi"])[..., perm])
+            layer["mlp"] = m
+    return out
+
+
+def tp_param_specs(cfg) -> Dict[str, Any]:
+    """PartitionSpec pytree over the "tp" axis, structurally matching
+    ``init_params`` for the pure-attention archs ``check_tp`` admits.
+    Attention q/k/v are column-sharded (head-contiguous), output projections
+    row-sharded; embeddings / lm_head / every norm scale replicated.  All
+    leaves carry the leading stacked-blocks axis (hence the extra None)."""
+    attn: Dict[str, Any] = {
+        "wq": P(None, None, "tp"),
+        "wk": P(None, None, "tp"),
+        "wv": P(None, None, "tp"),
+        "wo": P(None, "tp", None),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = {"scale": P()}
+        attn["k_norm"] = {"scale": P()}
+    layer = {
+        "ln1": {"scale": P()},
+        "attn": attn,
+        "ln2": {"scale": P()},
+        "mlp": {"wi": P(None, None, "tp"), "wo": P(None, "tp", None)},
+    }
+    out: Dict[str, Any] = {
+        "embed": {"w": P()},
+        "final_norm": {"scale": P()},
+        "blocks": [layer for _ in period_structure(cfg)],
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = {"w": P()}
+    return out
+
+
+def tp_cache_specs(cfg, *, paged: bool):
+    """Spec pytree matching serving's ``Caches``: K/V sharded over the head
+    axis (axis 3 of both the dense ring and the page pool), positions
+    replicated."""
+    from repro.models.attention import KVCacheView, PagedKVView
+    from repro.models.transformer import Caches
+
+    kvspec = P(None, None, None, "tp", None)
+    kv: Dict[str, Any] = {}
+    for p, sp in enumerate(period_structure(cfg)):
+        if sp.mixer != "attn":        # unreachable under check_tp; defensive
+            raise ValueError("tp caches require a pure-attention arch")
+        if paged:
+            kv[str(p)] = PagedKVView(k=kvspec, v=kvspec)
+        else:
+            kv[str(p)] = KVCacheView(k=kvspec, v=kvspec, pos=P())
+    return Caches(kv=kv, ssm={}, cross=None)
+
+
+def tp_shardings(mesh: Mesh, spec_tree):
+    """NamedShardings for a spec pytree (PartitionSpec leaves)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def tp_put_replicated(mesh: Mesh, tree):
+    """device_put every leaf of ``tree`` replicated over the tp mesh (slot
+    bookkeeping, page tables, draft state, PRNG keys)."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)

@@ -182,7 +182,7 @@ def _apply_layer_train(
         )
     else:
         y, sstate = ssm_mod.ssm_forward(lp["ssm"], h, cfg, impl=impl, return_state=True)
-    x = x + _shard(y, policy, "residual")
+    x = x + _shard(_shard(y, policy, "attn_out"), policy, "residual")
     if enc_kv is not None and "cross" in lp:
         hx = rmsnorm(lp["ln_x"], x, eps=cfg.norm_eps)
         x = x + attn_mod.cross_attention(lp["cross"], hx, enc_kv, cfg, impl=impl)
@@ -193,7 +193,7 @@ def _apply_layer_train(
                                         policy=policy)
         else:
             y2 = mlp(lp["mlp"], h2, kind=cfg.mlp_kind)
-        x = x + _shard(y2, policy, "residual")
+        x = x + _shard(_shard(y2, policy, "mlp_out"), policy, "residual")
     return x, aux, kv, sstate
 
 
@@ -215,7 +215,7 @@ def _apply_layer_decode(
         )
     else:
         y, new_ssm = ssm_mod.ssm_decode(lp["ssm"], h, ssm_state, cfg)
-    x = x + y
+    x = x + _shard(y, policy, "attn_out")
     if cross_kv is not None and "cross" in lp:
         hx = rmsnorm(lp["ln_x"], x, eps=cfg.norm_eps)
         x = x + attn_mod.cross_attention(lp["cross"], hx, cross_kv, cfg, impl=impl)
@@ -226,7 +226,7 @@ def _apply_layer_decode(
                                       policy=policy)
         else:
             y2 = mlp(lp["mlp"], h2, kind=cfg.mlp_kind)
-        x = x + y2
+        x = x + _shard(y2, policy, "mlp_out")
     return x, new_kv, new_ssm
 
 
@@ -683,7 +683,7 @@ def verify_step(
                     policy=policy, write_limit=write_limit,
                 )
             kv_out[str(p)] = nkv
-            x = x + y
+            x = x + _shard(y, policy, "attn_out")
             if spec.mlp is not None:
                 h2 = rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
                 if spec.mlp == "moe":
@@ -691,7 +691,7 @@ def verify_step(
                                               policy=policy)
                 else:
                     y2 = mlp(lp["mlp"], h2, kind=cfg.mlp_kind)
-                x = x + y2
+                x = x + _shard(y2, policy, "mlp_out")
         return x, kv_out
 
     x, kv_new = jax.lax.scan(body, x, (params["blocks"], caches.kv))

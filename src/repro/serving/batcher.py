@@ -107,6 +107,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import (
+    TP_POLICY, check_tp, make_tp_mesh, permute_params_for_tp,
+    tp_cache_specs, tp_param_specs, tp_put_replicated, tp_shardings,
+)
 from repro.models.attention import check_attn_impl
 from repro.models.transformer import (
     Caches, init_caches, init_paged_caches, period_structure,
@@ -212,6 +216,8 @@ class BatcherStats:
     overlap_rounds: int = 0      # rounds with chunk + admission both in flight
     # prefix cache: resumed rows whose shifted padding missed the cache
     resume_prefix_misses: int = 0
+    # tensor parallelism
+    remeshes: int = 0            # live tp-width migrations (hypervisor resizes)
 
     @property
     def prefix_tokens_saved(self) -> int:
@@ -267,13 +273,15 @@ class ContinuousBatcher:
     """
 
     def __init__(self, params, cfg, config: Optional[ServingConfig] = None,
-                 *, policy=None,
+                 *, policy=None, mesh=None,
                  clock: Optional[Callable[[], float]] = None, **legacy):
         if config is None:
+            offending = ", ".join(sorted(legacy)) if legacy else "<none>"
             warnings.warn(
-                "ContinuousBatcher(**kwargs) is deprecated; pass a "
-                "ServingConfig: ContinuousBatcher(params, cfg, "
-                "ServingConfig(...))", DeprecationWarning, stacklevel=2)
+                f"ContinuousBatcher(**kwargs) is deprecated — move the "
+                f"legacy kwarg(s) [{offending}] onto a ServingConfig: "
+                f"ContinuousBatcher(params, cfg, ServingConfig(...))",
+                DeprecationWarning, stacklevel=2)
             config = config_from_legacy_kwargs(**legacy)
         elif legacy:
             raise TypeError(
@@ -309,6 +317,37 @@ class ContinuousBatcher:
                 "non-sliding-window text arch (SSM state cannot be rolled "
                 "back to the accepted prefix)")
         self._policy = policy
+        # tensor parallelism: resolve the tenant sub-mesh before any device
+        # state is allocated, so params/caches land sharded from the start
+        self.tp = int(config.tp)
+        self._mesh = None
+        self._device = None           # single-device pin (width-1 lease)
+        self._host_params = None      # un-permuted host copy, for re-meshing
+        if mesh is not None:
+            if "tp" not in getattr(mesh, "axis_names", ()):
+                raise ValueError(
+                    "batcher meshes must be flat ('tp',) meshes "
+                    "(distributed.sharding.make_tp_mesh)")
+            if int(mesh.shape["tp"]) != self.tp:
+                raise ValueError(
+                    f"mesh is tp={int(mesh.shape['tp'])} wide but "
+                    f"ServingConfig.tp={self.tp}")
+        if self.tp > 1:
+            if policy is not None:
+                raise ValueError(
+                    "tp>1 installs its own TPShardPolicy; custom activation "
+                    "policies are single-device")
+            check_tp(cfg, self.tp)
+            self._mesh = mesh if mesh is not None else make_tp_mesh(self.tp)
+            self._policy = TP_POLICY
+            self._host_params = jax.device_get(params)
+            self.params = jax.device_put(
+                permute_params_for_tp(self._host_params, cfg, self.tp),
+                tp_shardings(self._mesh, tp_param_specs(cfg)))
+        elif mesh is not None:
+            # a width-1 lease still names WHICH device the tenant runs on
+            self._device = list(mesh.devices.flat)[0]
+            self.params = jax.device_put(params, self._device)
         self.paged = paged
         self._clock = clock if clock is not None else time.monotonic
         self._has_deadlines = False
@@ -338,11 +377,13 @@ class ContinuousBatcher:
                 raise ValueError("paged mode needs at least one attn layer")
             self.pages: Optional[PageState] = init_page_state(
                 slots, self.n_pages, self.max_pages, quota=self._page_limit)
-            self._admit_fn = paged_admit_program(cfg, scfg, policy=policy)
+            self._admit_fn = paged_admit_program(
+                cfg, scfg, policy=self._policy, mesh=self._mesh)
         else:
             self.caches = init_caches(cfg, slots, config.max_len)
             self.pages = None
-            self._admit_fn = admit_program(cfg, scfg, policy=policy)
+            self._admit_fn = admit_program(
+                cfg, scfg, policy=self._policy, mesh=self._mesh)
         # speculative decode: the chunk unit becomes a draft-and-verify
         # window; the drafter history is device state donated like the rest
         self._spec = bool(config.speculative)
@@ -368,6 +409,8 @@ class ContinuousBatcher:
         # residency at the survivors so restarted requests stop thrashing
         # the ones still making progress; recover one slot per clean round
         self._resident_cap = slots
+        if self._mesh is not None:
+            self._place_state()
 
     # -- request intake ------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -502,6 +545,96 @@ class ContinuousBatcher:
             self.pages = state["pages"]
         if self._spec:
             self.draft = state["draft"]
+
+    def _place_state(self) -> None:
+        """device_put the donated device state with its layout: KV head axis
+        split over the tp mesh, slot/page/draft bookkeeping replicated (or
+        everything onto the default device when single-device), so
+        steady-state chunks never pay a layout transfer inside a dispatch."""
+        mesh = self._mesh
+        if mesh is None:
+            dev = self._device
+            self.caches = jax.device_put(self.caches, dev)
+            self.state = jax.device_put(self.state, dev)
+            if self.pages is not None:
+                self.pages = jax.device_put(self.pages, dev)
+            if self.draft is not None:
+                self.draft = jax.device_put(self.draft, dev)
+            self._key = jax.device_put(self._key, dev)
+            return
+        self.caches = jax.device_put(
+            self.caches,
+            tp_shardings(mesh, tp_cache_specs(self.cfg, paged=self.paged)))
+        self.state = tp_put_replicated(mesh, self.state)
+        if self.pages is not None:
+            self.pages = tp_put_replicated(mesh, self.pages)
+        if self.draft is not None:
+            self.draft = tp_put_replicated(mesh, self.draft)
+        self._key = tp_put_replicated(mesh, self._key)
+
+    def remesh(self, tp: Optional[int] = None, *, mesh=None) -> None:
+        """Live-migrate this batcher onto a new TP width / device set.
+
+        The hypervisor's elastic-resize path: snapshot the donated device
+        state to host (:meth:`live_state`), swap in the new mesh + sharded
+        programs (registry hits when the mesh was seen before), re-place
+        params — re-permuting the swiglu pack from the kept un-permuted
+        host copy, since the column permutation depends on tp — and adopt
+        the state back.  State *values* are untouched, so the decode stream
+        is token-identical across the move; resident requests, queued
+        requests, and the drafter history all ride along.
+        """
+        if mesh is not None:
+            if "tp" not in getattr(mesh, "axis_names", ()):
+                raise ValueError(
+                    "batcher meshes must be flat ('tp',) meshes "
+                    "(distributed.sharding.make_tp_mesh)")
+            new_tp = int(mesh.shape["tp"])
+            if tp is not None and int(tp) != new_tp:
+                raise ValueError(
+                    f"tp={tp} conflicts with the mesh width {new_tp}")
+        elif tp is None:
+            raise ValueError("remesh needs a tp width or a mesh")
+        else:
+            new_tp = int(tp)
+        if new_tp > 1:
+            if self.config.attn_impl != "xla":
+                raise ValueError(
+                    f"tp={new_tp} requires attn_impl='xla' (the "
+                    f"{self.config.attn_impl!r} kernels are single-device)")
+            check_tp(self.cfg, new_tp)
+        if self._host_params is None:
+            # currently single-device: the resident params ARE the host
+            # layout (no permutation was applied)
+            self._host_params = jax.device_get(self.params)
+        state = jax.device_get(self.live_state())
+        self.config = dataclasses.replace(self.config, tp=new_tp)
+        self.tp = new_tp
+        if new_tp > 1:
+            self._mesh = (mesh if mesh is not None
+                          else make_tp_mesh(new_tp))
+            self._device = None
+            self._policy = TP_POLICY
+            self.params = jax.device_put(
+                permute_params_for_tp(self._host_params, self.cfg, new_tp),
+                tp_shardings(self._mesh, tp_param_specs(self.cfg)))
+        else:
+            dev = list(mesh.devices.flat)[0] if mesh is not None else None
+            self._mesh = None
+            self._device = dev
+            self._policy = None
+            self.params = (jax.device_put(self._host_params, dev)
+                           if dev is not None
+                           else jax.device_put(self._host_params))
+        if self.paged:
+            self._admit_fn = paged_admit_program(
+                self.cfg, self.scfg, policy=self._policy, mesh=self._mesh)
+        else:
+            self._admit_fn = admit_program(
+                self.cfg, self.scfg, policy=self._policy, mesh=self._mesh)
+        self.adopt_state(state)
+        self._place_state()
+        self.stats.remeshes += 1
 
     # -- fault guards: requeue, watchdog, page-table audit ----------------
     def inject_stall(self, slot: int, seconds: float) -> None:
@@ -924,7 +1057,7 @@ class ContinuousBatcher:
         real[:n] = True
         if k:
             fn = cached_admit_program(self.cfg, self.scfg, k,
-                                      policy=self._policy)
+                                      policy=self._policy, mesh=self._mesh)
             nxt, self.caches, self.state, self.pages, out_rows = fn(
                 self.params, {"tokens": jnp.asarray(toks)}, self.caches,
                 self.state, self.pages, jnp.asarray(slots),
@@ -1041,16 +1174,17 @@ class ContinuousBatcher:
             if self.paged:
                 return paged_spec_decode_chunk_program(
                     self.cfg, self.scfg, n_steps, self._draft_window,
-                    self._draft_ngram, self.page_size, policy=self._policy)
+                    self._draft_ngram, self.page_size, policy=self._policy,
+                    mesh=self._mesh)
             return spec_decode_chunk_program(
                 self.cfg, self.scfg, n_steps, self._draft_window,
-                self._draft_ngram, policy=self._policy)
+                self._draft_ngram, policy=self._policy, mesh=self._mesh)
         if self.paged:
             return paged_decode_chunk_program(
                 self.cfg, self.scfg, n_steps, self.page_size,
-                policy=self._policy)
+                policy=self._policy, mesh=self._mesh)
         return decode_chunk_program(self.cfg, self.scfg, n_steps,
-                                    policy=self._policy)
+                                    policy=self._policy, mesh=self._mesh)
 
     def _dispatch_chunk(self, active: List[int]) -> Dict[str, Any]:
         """Dispatch one decode chunk (speculative: T draft-and-verify

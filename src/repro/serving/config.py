@@ -62,6 +62,13 @@ class ServingConfig:
     ``overlap=True`` dispatches admission prefill concurrently with the
     in-flight decode chunk (one merge point per round) so prefill-heavy
     traffic overlaps host work with device decode instead of serializing.
+
+    ``tp`` (tensor parallel width, default 1) shards the decode over a flat
+    ``("tp",)`` device mesh: attention heads and MLP features split across
+    the tenant's leased devices, slot bookkeeping replicated, two psums per
+    layer.  ``tp > 1`` requires ``attn_impl="xla"`` (the Pallas kernels are
+    single-device) and a pure-attention dense-MLP arch (checked against the
+    model config in ``ContinuousBatcher.__init__``).
     """
 
     slots: int
@@ -85,6 +92,8 @@ class ServingConfig:
     draft_ngram: int = 2
     draft_hist: int = 64
     overlap: bool = False
+    # tensor-parallel width (devices per tenant sub-mesh)
+    tp: int = 1
 
     def __post_init__(self):
         if self.slots < 1:
@@ -98,6 +107,12 @@ class ServingConfig:
                 f"({self.prompt_len}) — there is no room to decode")
         if self.chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {self.tp}")
+        if self.tp > 1 and self.attn_impl != "xla":
+            raise ValueError(
+                f"tp={self.tp} requires attn_impl='xla' (the "
+                f"{self.attn_impl!r} kernels are single-device)")
         # one shared capability table gates every mode this config will
         # exercise, at construction (models.attention.ATTN_CAPABILITIES)
         check_attn_impl(self.attn_impl, "dense")
@@ -137,7 +152,16 @@ def config_from_legacy_kwargs(**kwargs) -> ServingConfig:
     fields = {f.name for f in dataclasses.fields(ServingConfig)}
     unknown = sorted(set(kwargs) - fields)
     if unknown:
+        import difflib
+
+        hints = []
+        for name in unknown:
+            close = difflib.get_close_matches(name, fields, n=1)
+            if close:
+                hints.append(f"{name!r} (did you mean {close[0]!r}?)")
+            else:
+                hints.append(repr(name))
         raise TypeError(
-            f"unknown ContinuousBatcher argument(s): {unknown}; "
+            f"unknown ContinuousBatcher argument(s): {', '.join(hints)}; "
             f"valid ServingConfig fields: {sorted(fields)}")
     return ServingConfig(**kwargs)

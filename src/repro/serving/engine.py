@@ -246,33 +246,54 @@ class ProgramRegistry:
     A new batcher for the same tenant shape reuses the compiled program
     instead of re-jitting; :data:`PROGRAMS` is the module singleton every
     ``*_program`` wrapper routes through.
+
+    Tensor-sharded programs additionally key on the **mesh fingerprint**
+    (axis names × shape × concrete device ids): two tenants whose leases
+    differ in TP width *or* device set must never collide — same-shape
+    programs over different devices are different executables.  Per-key
+    ``hits`` counters expose registry effectiveness (a re-meshed batcher
+    re-keying onto an existing mesh should hit, never rebuild).
     """
 
     def __init__(self, maxsize: int = 64):
         self.maxsize = int(maxsize)
         self._cache: "OrderedDict[Tuple, Tuple[Any, Any]]" = OrderedDict()
+        self.hits: Dict[Tuple, int] = {}
+
+    @staticmethod
+    def mesh_key(mesh) -> Optional[Tuple]:
+        """Hashable fingerprint of a mesh (None passes through)."""
+        if mesh is None:
+            return None
+        return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+                tuple(int(d.id) for d in mesh.devices.flat))
 
     @staticmethod
     def make_key(kind: str, cfg, scfg: Optional[ServeConfig],
-                 shapes: Tuple, policy) -> Tuple:
+                 shapes: Tuple, policy, mesh=None) -> Tuple:
         key_scfg = (None if scfg is None
                     else dataclasses.replace(scfg, chunk=0))
-        return (kind, cfg, key_scfg, tuple(shapes), id(policy))
+        return (kind, cfg, key_scfg, tuple(shapes), id(policy),
+                ProgramRegistry.mesh_key(mesh))
 
     def get(self, kind: str, cfg, scfg: Optional[ServeConfig],
-            shapes: Tuple, policy, build):
+            shapes: Tuple, policy, build, *, mesh=None):
         """Return the cached executable for the key, building (and pinning
         ``policy``) on miss."""
-        return self.get_raw(self.make_key(kind, cfg, scfg, shapes, policy),
-                            policy, build)
+        return self.get_raw(
+            self.make_key(kind, cfg, scfg, shapes, policy, mesh),
+            policy, build)
 
     def get_raw(self, key: Tuple, policy, build):
         hit = self._cache.get(key)
         if hit is None:
             self._cache[key] = hit = (build(), policy)
+            self.hits.setdefault(key, 0)
             if len(self._cache) > self.maxsize:
-                self._cache.popitem(last=False)
+                evicted, _ = self._cache.popitem(last=False)
+                self.hits.pop(evicted, None)
         else:
+            self.hits[key] += 1
             self._cache.move_to_end(key)
         return hit[0]
 
@@ -284,13 +305,64 @@ class ProgramRegistry:
 
     def clear(self) -> None:
         self._cache.clear()
+        self.hits.clear()
 
 
 PROGRAMS = ProgramRegistry()
 
 
-def decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
-    """Jitted :func:`make_decode_chunk` with the cache/state donated."""
+def _tp_program(kind: str, cfg, scfg, shapes: Tuple, policy, mesh,
+                build_local, *, paged: bool, n_in: int, cache_in: int,
+                n_out: int, cache_out: int, donate: Tuple[int, ...]):
+    """Register + build one tensor-sharded serving program.
+
+    ``build_local(local_cfg)`` returns the un-jitted program traced at the
+    shard-local model (heads/d_ff divided by tp) — the *same* make_* the
+    single-device path uses.  It is wrapped in a fully-manual shard_map over
+    the tenant's flat ("tp",) mesh: params follow ``tp_param_specs``, the
+    KV tree ``tp_cache_specs`` (head axis split), and every other argument
+    and output — slot state, page tables, draft state, token batches, PRNG
+    keys — is replicated (identical on every shard: replicated inputs plus
+    the policy's per-layer psums keep all non-head-sharded values
+    bit-identical, which is what makes the replicated out_specs sound under
+    check_rep=False).  One jit, same donation pattern as the single-device
+    twin, so the ≤1 dispatch / ≤1 sync per chunk contract is unchanged.
+    """
+    from jax.sharding import PartitionSpec
+    from repro.distributed.sharding import (
+        shard_map_compat, tp_cache_specs, tp_local_cfg, tp_param_specs)
+
+    lcfg = tp_local_cfg(cfg, int(mesh.shape["tp"]))
+
+    def build():
+        cspec = tp_cache_specs(cfg, paged=paged)
+        in_specs = [PartitionSpec()] * n_in
+        in_specs[0] = tp_param_specs(cfg)
+        in_specs[cache_in] = cspec
+        out_specs = [PartitionSpec()] * n_out
+        out_specs[cache_out] = cspec
+        fn = shard_map_compat(
+            build_local(lcfg), mesh,
+            in_specs=tuple(in_specs), out_specs=tuple(out_specs),
+            manual_axes={"tp"},
+        )
+        return jax.jit(fn, donate_argnums=donate)
+
+    return PROGRAMS.get(kind, cfg, scfg, shapes, policy, build, mesh=mesh)
+
+
+def decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int, *, policy=None,
+                         mesh=None):
+    """Jitted :func:`make_decode_chunk` with the cache/state donated.  With
+    ``mesh`` (a flat ("tp",) mesh) the chunk runs tensor-sharded and
+    ``policy`` must be the batcher's ``TPShardPolicy``."""
+    if mesh is not None:
+        return _tp_program(
+            "chunk", cfg, scfg, (int(n_steps),), policy, mesh,
+            lambda lcfg: make_decode_chunk(lcfg, scfg, n_steps,
+                                           policy=policy),
+            paged=False, n_in=4, cache_in=1, n_out=5, cache_out=0,
+            donate=(1, 2))
     return PROGRAMS.get(
         "chunk", cfg, scfg, (int(n_steps),), policy,
         lambda: jax.jit(make_decode_chunk(cfg, scfg, n_steps, policy=policy),
@@ -298,8 +370,14 @@ def decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int, *, policy=None):
     )
 
 
-def admit_program(cfg, scfg: ServeConfig, *, policy=None):
+def admit_program(cfg, scfg: ServeConfig, *, policy=None, mesh=None):
     """Jitted :func:`make_admit_step` with the cache/state donated."""
+    if mesh is not None:
+        return _tp_program(
+            "admit", cfg, scfg, (), policy, mesh,
+            lambda lcfg: make_admit_step(lcfg, scfg, policy=policy),
+            paged=False, n_in=8, cache_in=2, n_out=3, cache_out=1,
+            donate=(2, 3))
     return PROGRAMS.get(
         "admit", cfg, scfg, (), policy,
         lambda: jax.jit(make_admit_step(cfg, scfg, policy=policy),
@@ -649,8 +727,19 @@ def make_paged_admit_step(cfg, scfg: ServeConfig, *, policy=None):
 
 
 def paged_decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int,
-                               page_size: int, *, policy=None):
-    """Jitted :func:`make_paged_decode_chunk`, caches/state/pages donated."""
+                               page_size: int, *, policy=None, mesh=None):
+    """Jitted :func:`make_paged_decode_chunk`, caches/state/pages donated.
+    Sharded under ``mesh``: the page pool's head axis splits, the page-fault
+    machinery (tables, free stack, grants) is replicated — every shard pops
+    the same pages, writes its own heads into them."""
+    if mesh is not None:
+        return _tp_program(
+            "paged_chunk", cfg, scfg, (int(n_steps), int(page_size)),
+            policy, mesh,
+            lambda lcfg: make_paged_decode_chunk(lcfg, scfg, n_steps,
+                                                 page_size, policy=policy),
+            paged=True, n_in=5, cache_in=1, n_out=6, cache_out=0,
+            donate=(1, 2, 3))
     return PROGRAMS.get(
         "paged_chunk", cfg, scfg, (int(n_steps), int(page_size)), policy,
         lambda: jax.jit(
@@ -660,8 +749,14 @@ def paged_decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int,
     )
 
 
-def paged_admit_program(cfg, scfg: ServeConfig, *, policy=None):
+def paged_admit_program(cfg, scfg: ServeConfig, *, policy=None, mesh=None):
     """Jitted :func:`make_paged_admit_step`, caches/state/pages donated."""
+    if mesh is not None:
+        return _tp_program(
+            "paged_admit", cfg, scfg, (), policy, mesh,
+            lambda lcfg: make_paged_admit_step(lcfg, scfg, policy=policy),
+            paged=True, n_in=11, cache_in=2, n_out=5, cache_out=1,
+            donate=(2, 3, 4))
     return PROGRAMS.get(
         "paged_admit", cfg, scfg, (), policy,
         lambda: jax.jit(make_paged_admit_step(cfg, scfg, policy=policy),
@@ -760,11 +855,18 @@ def make_cached_admit_step(cfg, scfg: ServeConfig, n_prefix_pages: int,
 
 
 def cached_admit_program(cfg, scfg: ServeConfig, n_prefix_pages: int,
-                         *, policy=None):
+                         *, policy=None, mesh=None):
     """Jitted :func:`make_cached_admit_step`, caches/state/pages donated.
     One executable per (arch × serve shape × prefix-page count) — the
     prefix-page counts are bounded by ``prompt_len / page_size``, so the
     program cache stays small."""
+    if mesh is not None:
+        return _tp_program(
+            "cached_admit", cfg, scfg, (int(n_prefix_pages),), policy, mesh,
+            lambda lcfg: make_cached_admit_step(lcfg, scfg, n_prefix_pages,
+                                                policy=policy),
+            paged=True, n_in=12, cache_in=2, n_out=5, cache_out=1,
+            donate=(2, 3, 4))
     return PROGRAMS.get(
         "cached_admit", cfg, scfg, (int(n_prefix_pages),), policy,
         lambda: jax.jit(
@@ -1099,8 +1201,21 @@ def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
 
 
 def spec_decode_chunk_program(cfg, scfg: ServeConfig, n_windows: int,
-                              window: int, ngram: int, *, policy=None):
-    """Jitted :func:`make_spec_decode_chunk`, caches/state/draft donated."""
+                              window: int, ngram: int, *, policy=None,
+                              mesh=None):
+    """Jitted :func:`make_spec_decode_chunk`, caches/state/draft donated.
+    Sharded under ``mesh``: the n-gram draft history is replicated (drafting
+    and accept/rollback are identical per shard), only the verify pass's
+    KV/head math splits."""
+    if mesh is not None:
+        return _tp_program(
+            "spec_chunk", cfg, scfg,
+            (int(n_windows), int(window), int(ngram)), policy, mesh,
+            lambda lcfg: make_spec_decode_chunk(lcfg, scfg, n_windows,
+                                                window, ngram,
+                                                policy=policy),
+            paged=False, n_in=5, cache_in=1, n_out=6, cache_out=0,
+            donate=(1, 2, 3))
     return PROGRAMS.get(
         "spec_chunk", cfg, scfg, (int(n_windows), int(window), int(ngram)),
         policy,
@@ -1113,9 +1228,19 @@ def spec_decode_chunk_program(cfg, scfg: ServeConfig, n_windows: int,
 
 def paged_spec_decode_chunk_program(cfg, scfg: ServeConfig, n_windows: int,
                                     window: int, ngram: int, page_size: int,
-                                    *, policy=None):
+                                    *, policy=None, mesh=None):
     """Jitted :func:`make_paged_spec_decode_chunk`, caches/state/pages/draft
     donated."""
+    if mesh is not None:
+        return _tp_program(
+            "paged_spec_chunk", cfg, scfg,
+            (int(n_windows), int(window), int(ngram), int(page_size)),
+            policy, mesh,
+            lambda lcfg: make_paged_spec_decode_chunk(
+                lcfg, scfg, n_windows, window, ngram, page_size,
+                policy=policy),
+            paged=True, n_in=6, cache_in=1, n_out=7, cache_out=0,
+            donate=(1, 2, 3, 4))
     return PROGRAMS.get(
         "paged_spec_chunk", cfg, scfg,
         (int(n_windows), int(window), int(ngram), int(page_size)), policy,

@@ -85,6 +85,19 @@ class VirtualAcceleratorPool:
         ).reshape(len(lease.cores), self.devices_per_core)
         return Mesh(devs, axis_names)
 
+    def tp_mesh_for(self, lease: Lease) -> Mesh:
+        """Flat ``("tp",)`` sub-mesh over *all* the lease's devices — the
+        shape ``ContinuousBatcher`` shards its decode over.  A lease of
+        ``n`` cores at ``devices_per_core`` each becomes a tensor-parallel
+        width of ``n * devices_per_core``; resizing the lease re-meshes the
+        tenant's batcher to the new width (``exec_resize`` → the tenant's
+        registered remesh callback)."""
+        devs = np.array(
+            [d for c in lease.cores for d in self.core_devices[c]],
+            dtype=object,
+        )
+        return Mesh(devs, ("tp",))
+
     def check_hbm(self, cfg, lease: Lease, *, batch: int, max_len: int) -> None:
         """Admission control: model + KV bytes must fit the lease's HBM
         (the paper's DDR-port-budget rule, §4.2.2)."""
@@ -260,6 +273,7 @@ class ServingExecutor:
         self._keys: Dict[str, Optional[str]] = {}
         self._on_migrate: Dict[str, Callable[[Any], None]] = {}
         self._kv_limit_cbs: Dict[str, Callable[[int], None]] = {}
+        self._remesh_cbs: Dict[str, Callable[[Mesh], None]] = {}
         # fault-domain plumbing
         self._fault_sinks: Dict[str, Callable[[Any], None]] = {}
         self.fault_log: List[Dict[str, Any]] = []
@@ -309,6 +323,18 @@ class ServingExecutor:
         ``batcher.set_page_limit``, so a hypervisor trading memory between
         tenants throttles the live page pool mid-run."""
         self._kv_limit_cbs[tenant] = fn
+
+    def register_remesh(self, tenant: str,
+                        fn: Callable[[Mesh], None]) -> None:
+        """Where the tenant's lease-driven mesh changes land — typically
+        ``lambda mesh: batcher.remesh(mesh=mesh)``.  When the hypervisor
+        resizes the lease, ``exec_resize`` builds the new flat ``("tp",)``
+        sub-mesh over the leased devices (``tp_mesh_for``) and hands it to
+        the callback, so a live ContinuousBatcher re-shards its params and
+        donated caches onto the new device set mid-stream, token-identically.
+        Applies to tenants managed outside the AOT cache (``artifact=None``);
+        AOT tenants migrate through ``TwoStageCompiler.reconfigure``."""
+        self._remesh_cbs[tenant] = fn
 
     def register_fault_sink(self, tenant: str,
                             fn: Callable[[Any], None]) -> None:
@@ -442,8 +468,14 @@ class ServingExecutor:
             return
         key = self._keys.get(name)
         if key is None:
-            self.vpool.resize(name, n_cores)
-            self.reconfig_log.append({"tenant": name, "n_cores": n_cores})
+            new_lease = self.vpool.resize(name, n_cores)
+            entry = {"tenant": name, "n_cores": n_cores}
+            cb = self._remesh_cbs.get(name)
+            if cb is not None:
+                t0 = time.perf_counter()
+                cb(self.vpool.tp_mesh_for(new_lease))
+                entry["t_remesh"] = time.perf_counter() - t0
+            self.reconfig_log.append(entry)
             return
         state = self.live_state.get(name)
         pulled = callable(state)
@@ -476,7 +508,8 @@ class ServingExecutor:
         for table in (self.programs, self.live_state, self.state_specs,
                       self._keys, self._on_migrate, self._request_sinks,
                       self.pending_requests, self._latency_models,
-                      self._kv_limit_cbs, self._fault_sinks):
+                      self._kv_limit_cbs, self._fault_sinks,
+                      self._remesh_cbs):
             table.pop(name, None)
 
     def exec_request(self, name: str, record: RequestRecord, at: float) -> None:

@@ -62,6 +62,28 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+def test_shard_map_gate_matches_ci_expectation():
+    """A version-gated test that silently skips forever is a dead test.
+
+    Each CI matrix leg sets ``EXPECT_SHARD_MAP`` (0 on the pinned-old-jax
+    leg, 1 on the latest leg); this asserts the installed jax agrees, so
+    the gated multidevice test below is *guaranteed* to run somewhere — if
+    pip ever resolves an old jax on the latest leg (or the gate's condition
+    rots), the suite fails loudly instead of skip-passing.  Unset locally:
+    this check then skips, and the gate below speaks for itself."""
+    expect = os.environ.get("EXPECT_SHARD_MAP")
+    if expect is None:
+        pytest.skip("EXPECT_SHARD_MAP unset (local run); the CI matrix "
+                    "legs own this assertion")
+    have = hasattr(jax, "shard_map")
+    assert have == bool(int(expect)), (
+        f"CI leg expected shard_map={expect} but jax {jax.__version__} "
+        f"has shard_map={have} — the version gate on "
+        f"test_sharded_kv_decode_matches_reference is now "
+        f"{'never' if not have else 'always'} exercised on this leg"
+    )
+
+
 @pytest.mark.slow
 @pytest.mark.skipif(
     not hasattr(jax, "shard_map"),
