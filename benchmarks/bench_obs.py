@@ -1,0 +1,212 @@
+"""Telemetry-plane benchmark — overhead gate + contract + sample artifacts.
+
+Runs the same paged serving trace twice on the reduced qwen3-0.6b decode
+path: once with telemetry disabled (``NULL_TRACER`` — the default every
+layer gets) and once with a live :class:`repro.obs.Tracer` collecting
+spans/instants from every batcher round.  The metrics registry backs
+``BatcherStats`` in *both* legs (there is no registry-off mode — counters
+ARE the stats now), so the measured delta is the tracer's marginal cost.
+
+Acceptance (asserted here at generation time AND re-derived by
+``check_regression.check_obs``):
+
+* telemetry overhead < 3% decode tokens/s vs disabled (paired reps:
+  both legs back-to-back per rep, min of the per-pair on/off overhead
+  ratios — same host, one-sided noise, so the calmest pair is the
+  stable estimator);
+* the ≤1-dispatch/≤1-sync-per-chunk contract holds **with telemetry
+  enabled** (dispatches ≤ chunks + prefills, syncs ≤ chunks + prefills);
+* the enabled leg exports a valid Chrome-trace JSON (≥1 span, ≥1 track)
+  and a registry snapshot — both written next to the CSV so CI uploads
+  them as artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run obs
+    BENCH_OBS_SMOKE=1 ... # CI: fewer requests/reps, same gates
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, write_csv
+
+ARCH = "qwen3-0.6b"
+SLOTS = 4
+PROMPT_LEN = 8
+SMOKE = bool(os.environ.get("BENCH_OBS_SMOKE"))
+MAX_NEW = 96 if SMOKE else 256
+N_REQUESTS = 8 if SMOKE else 12
+# paired estimator: each rep runs both legs back-to-back (order
+# alternating) and contributes one on/off ratio; host load that slows a
+# whole pair cancels in the ratio, and the MIN overhead across reps means
+# a single calm pair suffices.  The 3% ceiling is far tighter than the
+# repo's ratio floors, so independent per-leg best-of is not robust here.
+REPS = 7
+OBS_OVERHEAD_CEILING = 0.03     # keep in sync with check_regression.py
+# smoke (CI) runs on shared loaded runners: allow scheduler noise on top
+# of the ceiling at generation time — the same 35% allowance CI's
+# CHECK_TOLERANCE grants check_obs — while the committed full-mode
+# snapshot stays strictly <3%
+GEN_CEILING = OBS_OVERHEAD_CEILING * (1.35 if SMOKE else 1.0)
+
+
+def _requests(cfg, n: int):
+    from repro.serving.batcher import Request
+
+    rng = np.random.default_rng(0)
+    return [
+        Request(rid=i,
+                prompt=rng.integers(1, cfg.vocab,
+                                    size=2 + i % (PROMPT_LEN - 2)
+                                    ).astype(np.int32),
+                max_new=MAX_NEW)
+        for i in range(n)
+    ]
+
+
+def _config():
+    from repro.serving import ServingConfig
+
+    return ServingConfig(
+        slots=SLOTS, prompt_len=PROMPT_LEN,
+        max_len=PROMPT_LEN + MAX_NEW + 8, attn_impl="xla", chunk=8,
+        paged=True, page_size=16, n_pages=192, overlap=True,
+    )
+
+
+def _one_run(params, cfg, sc, telemetry):
+    import jax
+
+    from repro.serving.batcher import ContinuousBatcher
+
+    b = ContinuousBatcher(params, cfg, sc, telemetry=telemetry)
+    for r in _requests(cfg, N_REQUESTS):
+        b.submit(r)
+    t0 = time.perf_counter()
+    stats = b.run(max_steps=100_000)
+    jax.block_until_ready(b.caches)
+    return stats, time.perf_counter() - t0
+
+
+def run() -> List[Dict]:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.obs import Telemetry, Tracer
+
+    cfg = get_reduced(ARCH)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sc = _config()
+
+    _one_run(params, cfg, sc, Telemetry())          # warmup / compile
+
+    # paired reps: both legs back-to-back per rep (order alternating so
+    # neither leg always runs into the same cache/GC state), one on/off
+    # ratio per pair, MIN overhead across pairs — load that slows a whole
+    # pair cancels in the ratio, and a single calm pair suffices
+    best = {"off": 0.0, "on": 0.0}
+    kept = {"off": None, "on": None}
+    trace = None
+    overhead = float("inf")
+    for i in range(REPS):
+        legs = ("off", "on") if i % 2 == 0 else ("on", "off")
+        rate = {}
+        for leg in legs:
+            tel = Telemetry() if leg == "off" else Telemetry(
+                tracer=Tracer(max_events=500_000))
+            stats, dt = _one_run(params, cfg, sc, tel)
+            rate[leg] = stats.decode_tokens / dt
+            if rate[leg] > best[leg]:
+                best[leg], kept[leg] = rate[leg], stats
+                if leg == "on":
+                    trace = (tel.tracer, tel.registry)
+        overhead = min(overhead,
+                       1.0 - rate["on"] / max(rate["off"], 1e-9))
+
+    rows = []
+    for leg in ("off", "on"):
+        st = kept[leg]
+        rows.append({
+            "arch": cfg.name,
+            "mode": f"telemetry_{leg}",
+            "requests": N_REQUESTS,
+            "completed": st.completed,
+            "tokens": st.tokens,
+            "decode_tokens_per_s": round(best[leg], 2),
+            "chunks": st.chunks,
+            "prefills": st.prefills,
+            "dispatches": st.dispatches,
+            "host_syncs": st.host_syncs,
+            "device_pages_popped": st.device_pages_popped,
+            "device_pages_pushed": st.device_pages_pushed,
+            "fault_denied_slots": st.fault_denied_slots,
+            "overhead_frac": round(overhead, 4),
+        })
+
+    # artifacts from the kept enabled leg: Perfetto trace + registry dump
+    tracer, registry = trace
+    os.makedirs(OUT_DIR, exist_ok=True)
+    trace_path = tracer.export(os.path.join(OUT_DIR, "obs_trace.json"))
+    metrics_path = registry.export(os.path.join(OUT_DIR, "obs_metrics.json"))
+    rows[1]["trace_events"] = len(tracer.events)
+    rows[1]["trace_tracks"] = len(tracer.tracks())
+    rows[1]["trace_path"] = trace_path
+    rows[1]["metrics_path"] = metrics_path
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    path = write_csv("obs", rows)
+    on = next(r for r in rows if r["mode"] == "telemetry_on")
+    overhead = on["overhead_frac"]
+    contract_ok = all(
+        r["dispatches"] <= r["chunks"] + r["prefills"]
+        and r["host_syncs"] <= r["chunks"] + r["prefills"]
+        for r in rows)
+    # the device counters must actually have ridden back: a paged run pops
+    # at least one page per resident request inside the scan
+    counters_ok = on["device_pages_popped"] > 0
+    trace_ok = on["trace_events"] > 0 and on["trace_tracks"] >= 1
+    snap = {
+        "bench": "obs",
+        "arch": ARCH,
+        "unix_time": time.time(),
+        "smoke": SMOKE,
+        "overhead_frac": overhead,
+        "overhead_ceiling": GEN_CEILING,
+        "acceptance_overhead": overhead < GEN_CEILING,
+        "acceptance_contract": bool(contract_ok),
+        "acceptance_device_counters": bool(counters_ok),
+        "acceptance_trace": bool(trace_ok),
+        "rows": rows,
+    }
+    jpath = os.path.join(OUT_DIR, "BENCH_obs.json")
+    with open(jpath, "w") as f:
+        json.dump(snap, f, indent=2)
+    print(f"{'mode':>14} {'tok/s':>9} {'disp':>6} {'syncs':>6} "
+          f"{'pages±':>12} {'overhead':>9}")
+    for r in rows:
+        print(f"{r['mode']:>14} {r['decode_tokens_per_s']:>9} "
+              f"{r['dispatches']:>6} {r['host_syncs']:>6} "
+              f"{str(r['device_pages_popped']) + '/' + str(r['device_pages_pushed']):>12} "
+              f"{r['overhead_frac']:>9}")
+    assert contract_ok, (
+        "≤1-dispatch/≤1-sync per chunk violated with telemetry enabled: "
+        f"{rows}")
+    assert counters_ok, f"device counters never rode back: {on}"
+    assert trace_ok, f"exported trace is empty: {on}"
+    assert overhead < GEN_CEILING, (
+        f"telemetry overhead {overhead:.1%} >= "
+        f"{GEN_CEILING:.1%} generation ceiling")
+    print(f"wrote {path} and {jpath} (+ obs_trace.json, obs_metrics.json)")
+
+
+if __name__ == "__main__":
+    main()

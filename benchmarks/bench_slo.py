@@ -44,6 +44,7 @@ from repro.core import (
     fpga_small_core,
 )
 from repro.core.hypervisor import SLO_HEADROOM, queueing_latency
+from repro.obs import percentile as _percentile
 
 from .common import OUT_DIR, static_artifact, write_csv
 
@@ -75,14 +76,6 @@ POLICIES = (
     ("priority", dict(policy="priority")),
     ("no_realloc", dict(policy="no_realloc")),
 )
-
-
-def _percentile(values: List[float], q: float) -> float:
-    if not values:
-        return float("nan")
-    vals = sorted(values)
-    idx = min(int(q * len(vals)), len(vals) - 1)
-    return vals[idx]
 
 
 def _scenario(load: float):
@@ -145,6 +138,7 @@ def _run_policy(name: str, hv_kwargs: Dict, load: float) -> Dict:
         "goodput_rps": round(met / HORIZON, 3),
         "p50_latency_ms": round(_percentile(latencies, 0.50) * 1e3, 2),
         "p95_latency_ms": round(_percentile(latencies, 0.95) * 1e3, 2),
+        "p99_latency_ms": round(_percentile(latencies, 0.99) * 1e3, 2),
         "preemptions": len(hv.preemptions),
         "still_waiting": len(hv.waiting_tenants()),
         "completion_events": len(hv.completion_log),

@@ -29,7 +29,14 @@ build when
 * the fresh ``BENCH_chaos.json`` no longer meets the fault-tolerance
   acceptance: goodput retention under the seeded fault schedule below
   0.7, a displaced tenant never re-placed, any token divergence outside
-  the fault domain, or a non-deterministic seeded replay.
+  the fault domain, or a non-deterministic seeded replay, or
+* the fresh ``BENCH_obs.json`` no longer meets the telemetry-plane
+  acceptance: tracer overhead at or above 3% decode tokens/s (widened by
+  ``--tolerance`` for loaded runners — the on/off legs share one host so
+  the ratio itself is exact, but the ceiling is tight enough that
+  scheduler noise needs headroom), the ≤1-dispatch/≤1-sync-per-chunk
+  contract broken with telemetry enabled, device counters that never
+  rode back in the per-chunk fetch, or a missing/empty exported trace.
 
 Absolute tokens/s moves with the host, so the tolerance is deliberately
 loose; the ``CHECK_TOLERANCE`` env var (or ``--tolerance``) can widen it for
@@ -158,6 +165,7 @@ CHAOS_GOODPUT_FLOOR = 0.7
 SHARDED_TP2_RATIO_FLOOR = 1.15
 SHARDED_PACKING_TOKENS_FLOOR = 0.85
 SHARDED_PACKING_TURNAROUND_FLOOR = 1.2
+OBS_OVERHEAD_CEILING = 0.03     # keep in sync with bench_obs.py
 
 
 def _check_kernel_leg(bench: str, row: dict, xla_row: dict) -> list:
@@ -328,6 +336,45 @@ def check_sharded(fresh: dict) -> list:
     return errors
 
 
+def check_obs(fresh: dict, tolerance: float) -> list:
+    """Recorded acceptance bits AND the re-derived telemetry gates.  The
+    overhead ratio is on-vs-off on one host in one run, but the 3% ceiling
+    is tight enough that scheduler noise needs the same ``--tolerance``
+    headroom the tokens/s floors get; the contract, device counters, and
+    trace checks are host-independent and gated exactly."""
+    errors = []
+    for bit in ("acceptance_overhead", "acceptance_contract",
+                "acceptance_device_counters", "acceptance_trace"):
+        if not fresh.get(bit):
+            errors.append(f"obs: snapshot does not record {bit}")
+    ceiling = OBS_OVERHEAD_CEILING * (1.0 + tolerance)
+    if fresh["overhead_frac"] >= ceiling:
+        errors.append(
+            f"obs: telemetry overhead {fresh['overhead_frac']:.1%} >= "
+            f"{ceiling:.1%} ceiling")
+    by_mode = {row["mode"]: row for row in fresh.get("rows", [])}
+    off = by_mode.get("telemetry_off")
+    on = by_mode.get("telemetry_on")
+    if not (off and on):
+        errors.append(f"obs: telemetry rows missing, have {sorted(by_mode)}")
+        return errors
+    for mode, row in by_mode.items():
+        budget = row["chunks"] + row["prefills"]
+        if row["dispatches"] > budget or row["host_syncs"] > budget:
+            errors.append(
+                f"obs[{mode}]: contract broken — {row['dispatches']} "
+                f"dispatches / {row['host_syncs']} syncs for "
+                f"{row['chunks']} chunks + {row['prefills']} prefills")
+    if on["device_pages_popped"] <= 0:
+        errors.append("obs: device counters never rode back "
+                      "(device_pages_popped == 0 in a paged run)")
+    if on["trace_events"] <= 0 or on["trace_tracks"] < 1:
+        errors.append(
+            f"obs: exported trace is empty ({on.get('trace_events')} "
+            f"events, {on.get('trace_tracks')} tracks)")
+    return errors
+
+
 def _guard(name: str, fn, *snaps) -> list:
     """Run one checker, translating schema drift into a clear gate failure
     instead of a traceback: a malformed snapshot IS a regression."""
@@ -370,6 +417,13 @@ def main(argv=None) -> int:
             errors.append(f"{name}: {e}")
             continue
         errors.extend(_guard(name, checker, snap))
+    # obs gets the tolerance (its ceiling is noise-sensitive), so it can't
+    # ride the single-snapshot loop above
+    try:
+        snap = _load(os.path.join(args.fresh, "BENCH_obs.json"))
+        errors.extend(_guard("obs", check_obs, snap, args.tolerance))
+    except SnapshotError as e:
+        errors.append(f"obs: {e}")
 
     if errors:
         for e in errors:

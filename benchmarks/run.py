@@ -28,6 +28,7 @@ BENCHES = [
     ("prefix", "bench_prefix", "beyond-paper — shared-prefix KV cache admission speedup"),
     ("chaos", "bench_chaos", "beyond-paper — seeded fault injection, recovery, blast radius"),
     ("sharded", "bench_sharded", "beyond-paper — tensor-sharded decode scaling on an emulated 8-device pool"),
+    ("obs", "bench_obs", "beyond-paper — telemetry plane overhead gate + trace export"),
 ]
 
 

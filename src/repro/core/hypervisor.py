@@ -127,6 +127,8 @@ import dataclasses
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Union
 
+from repro.obs import Telemetry
+
 from .dispatch import SwitchMode
 from .events import Event, EventKind, EventQueue, RequestRecord, emit_requests
 from .faults import FaultKind, FaultSpec
@@ -561,6 +563,7 @@ class Hypervisor:
                                      Dict[str, int]]] = None,
         fault_retry_backoff: float = 0.05,
         on_event: Optional[Callable[["Hypervisor", Event], None]] = None,
+        telemetry: Optional[Telemetry] = None,
     ) -> None:
         if pool is None:
             if executor is None or not hasattr(executor, "pool"):
@@ -584,6 +587,13 @@ class Hypervisor:
         self.kv_policy = kv_policy if kv_policy is not None \
             else kv_pages_proportional
         self.on_event = on_event
+        # telemetry: every handled event becomes a trace instant on the
+        # "hypervisor" track (stamped with *event* time, so a sim run and a
+        # real-time run both render), a per-kind counter in the registry,
+        # and — for completions — a per-tenant latency histogram
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._tracer = self.telemetry.tracer
+        self._reg = self.telemetry.registry
         self.clock = 0.0
         self.trace: List[Event] = []
         # open-loop request plumbing: finished records (COMPLETION events),
@@ -771,6 +781,11 @@ class Hypervisor:
         self.pool.check_kv_quota()
         self.pool.check_health()
         self.trace.append(ev)
+        if self._tracer.enabled:
+            track = ev.tenant if ev.tenant is not None else "hypervisor"
+            self._tracer.instant(ev.kind.value, track, ts=ev.time,
+                                 args={"tenant": ev.tenant})
+        self._reg.counter(f"hypervisor.events.{ev.kind.value}").inc()
         if self.on_event is not None:
             self.on_event(self, ev)
 
@@ -841,6 +856,11 @@ class Hypervisor:
             rec = ev.payload.get("record")
             if rec is not None:
                 self.completion_log.append(rec)
+                lat = getattr(rec, "latency", None)
+                if lat is not None:
+                    self._reg.histogram(
+                        "hypervisor.request_latency_s",
+                        rec.tenant).record(lat)
         elif ev.kind is EventKind.FAILURE:
             self._handle_failure(ev.payload["fault"], t)
         elif ev.kind is EventKind.RECOVERY:
@@ -975,6 +995,11 @@ class Hypervisor:
                 "tenant": spec.name, "failed_at": t0, "recovered_at": t,
                 "recovery_latency": t - t0,
             })
+            # the displaced→re-admitted window as one span on the tenant's
+            # track, in event time (matches the instants _post_event emits)
+            self._tracer.complete("recovery", spec.name, t0, t - t0)
+            self._reg.histogram("hypervisor.recovery_latency_s",
+                                spec.name).record(t - t0)
         return True
 
     def _evict(self, victim: TenantSpec, t: float) -> None:

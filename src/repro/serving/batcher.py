@@ -115,6 +115,7 @@ from repro.models.attention import check_attn_impl
 from repro.models.transformer import (
     Caches, init_caches, init_paged_caches, period_structure,
 )
+from repro.obs import MetricsRegistry, Telemetry
 from .config import ServingConfig, config_from_legacy_kwargs
 from .kv_cache import PagedKVPool, PageQuotaError, pages_for, tree_bytes
 from .prefix_cache import PrefixCache, PrefixNode
@@ -173,51 +174,111 @@ class Request:
         default_factory=list, repr=False)
 
 
-@dataclasses.dataclass
-class BatcherStats:
-    steps: int = 0               # device decode steps executed (Σ chunk T)
-    chunks: int = 0              # decode_chunk dispatches
-    prefills: int = 0            # admission dispatches
-    completed: int = 0
-    slot_busy_steps: int = 0
-    slot_total_steps: int = 0
-    dispatches: int = 0          # all jitted dispatches (admit + chunk)
-    host_syncs: int = 0          # blocking device→host fetches
-    decode_tokens: int = 0       # tokens emitted by decode chunks
-    admit_tokens: int = 0        # first tokens emitted at admission
-    cache_bytes: int = 0         # resident cache-tree size (donated in place)
-    admit_scatter_bytes: int = 0  # bytes scattered at admission (vs. full-tree)
+# Every BatcherStats counter, in declaration order.  Each name is a view
+# over the ``serving.<name>`` counter in the batcher's MetricsRegistry.
+_STATS_FIELDS: Tuple[str, ...] = (
+    "steps",                    # device decode steps executed (Σ chunk T)
+    "chunks",                   # decode_chunk dispatches
+    "prefills",                 # admission dispatches
+    "completed",
+    "slot_busy_steps",
+    "slot_total_steps",
+    "dispatches",               # all jitted dispatches (admit + chunk)
+    "host_syncs",               # blocking device→host fetches
+    "decode_tokens",            # tokens emitted by decode chunks
+    "admit_tokens",             # first tokens emitted at admission
+    "cache_bytes",              # resident cache-tree size (donated in place)
+    "admit_scatter_bytes",      # bytes scattered at admission (vs. full-tree)
     # paged mode
-    oom_requeues: int = 0        # requests requeued after a denied page fault
-    oom_discarded_tokens: int = 0  # emitted tokens thrown away by requeues
-    oom_resumed: int = 0         # OOM requeues that kept their tokens
-    resumed_tokens_kept: int = 0  # tokens kept across requeues (any cause)
-    pages_in_use: int = 0        # device-allocated pages after the last sync
-    peak_pages_in_use: int = 0
-    peak_resident: int = 0       # most simultaneously-resident requests
+    "oom_requeues",             # requests requeued after a denied page fault
+    "oom_discarded_tokens",     # emitted tokens thrown away by requeues
+    "oom_resumed",              # OOM requeues that kept their tokens
+    "resumed_tokens_kept",      # tokens kept across requeues (any cause)
+    "pages_in_use",             # device-allocated pages after the last sync
+    "peak_pages_in_use",
+    "peak_resident",            # most simultaneously-resident requests
+    # device counters (ride back inside the per-chunk sync, paged modes)
+    "device_pages_popped",      # pages popped off the free stack in-scan
+    "device_pages_pushed",      # pages pushed back by in-scan frees
+    "fault_denied_slots",       # slot-steps denied a page grant in-scan
+    "device_draft_accepted",    # draft tokens accepted, counted on-device
     # prefix cache
-    prefix_hits: int = 0         # admissions that mapped >= 1 cached page
-    prefill_tokens_skipped: int = 0  # prompt tokens served from shared pages
-    prefix_inserts: int = 0      # pages newly indexed into the cache
-    prefix_evictions: int = 0    # cached pages reclaimed to the free stack
-    shared_pages: int = 0        # cache-owned pages right now (gauge)
+    "prefix_hits",              # admissions that mapped >= 1 cached page
+    "prefill_tokens_skipped",   # prompt tokens served from shared pages
+    "prefix_inserts",           # pages newly indexed into the cache
+    "prefix_evictions",         # cached pages reclaimed to the free stack
+    "shared_pages",             # cache-owned pages right now (gauge)
     # deadlines
-    deadline_drops: int = 0      # requests shed before start (past deadline)
+    "deadline_drops",           # requests shed before start (past deadline)
     # fault guards (NaN sentinel / watchdog / page-table audit)
-    poisoned_slots: int = 0      # slots retired by the non-finite sentinel
-    watchdog_trips: int = 0      # chunks that exceeded watchdog_s
-    audit_repairs: int = 0       # page-table entries the audit cleared
-    quarantined_pages: int = 0   # pool pages permanently out of circulation
+    "poisoned_slots",           # slots retired by the non-finite sentinel
+    "watchdog_trips",           # chunks that exceeded watchdog_s
+    "audit_repairs",            # page-table entries the audit cleared
+    "quarantined_pages",        # pool pages permanently out of circulation
     # speculative decode
-    spec_windows: int = 0        # draft-and-verify windows with >= 1 commit
-    drafted_tokens: int = 0      # draft tokens proposed in those windows
-    accepted_tokens: int = 0     # draft tokens the verify pass accepted
+    "spec_windows",             # draft-and-verify windows with >= 1 commit
+    "drafted_tokens",           # draft tokens proposed in those windows
+    "accepted_tokens",          # draft tokens the verify pass accepted
     # prefill/decode overlap
-    overlap_rounds: int = 0      # rounds with chunk + admission both in flight
+    "overlap_rounds",           # rounds with chunk + admission both in flight
     # prefix cache: resumed rows whose shifted padding missed the cache
-    resume_prefix_misses: int = 0
+    "resume_prefix_misses",
     # tensor parallelism
-    remeshes: int = 0            # live tp-width migrations (hypervisor resizes)
+    "remeshes",                 # live tp-width migrations (hypervisor resizes)
+)
+_STATS_FIELD_SET = frozenset(_STATS_FIELDS)
+
+
+class BatcherStats:
+    """The batcher's counter bundle, now backed by a ``MetricsRegistry``.
+
+    Historically a plain dataclass of ints; each field is now a *view*
+    over the ``serving.<field>`` counter in a registry (optionally
+    per-tenant labeled), so ``batcher.stats.chunks`` and
+    ``registry.counter("serving.chunks", tenant).value`` are literally the
+    same number.  The keyword constructor, ``+=`` on fields, and every
+    derived ratio property behave exactly as before.
+    """
+
+    __slots__ = ("_registry", "_tenant")
+
+    def __init__(self, *, registry: Optional[MetricsRegistry] = None,
+                 tenant: Optional[str] = None, **overrides: int):
+        object.__setattr__(self, "_registry",
+                           registry if registry is not None
+                           else MetricsRegistry())
+        object.__setattr__(self, "_tenant", tenant)
+        for name in _STATS_FIELDS:
+            self._registry.counter(f"serving.{name}", self._tenant)
+        for name, value in overrides.items():
+            if name not in _STATS_FIELD_SET:
+                raise TypeError(
+                    f"BatcherStats got an unexpected field {name!r}")
+            setattr(self, name, value)
+
+    @property
+    def registry(self) -> MetricsRegistry:
+        return self._registry
+
+    def __getattr__(self, name: str) -> int:
+        if name in _STATS_FIELD_SET:
+            return self._registry.counter(
+                f"serving.{name}", self._tenant).value
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in _STATS_FIELD_SET:
+            self._registry.counter(
+                f"serving.{name}", self._tenant).value = value
+        else:
+            object.__setattr__(self, name, value)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {name: getattr(self, name) for name in _STATS_FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v}" for k, v in self.as_dict().items())
+        return f"BatcherStats({body})"
 
     @property
     def prefix_tokens_saved(self) -> int:
@@ -274,7 +335,8 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, config: Optional[ServingConfig] = None,
                  *, policy=None, mesh=None,
-                 clock: Optional[Callable[[], float]] = None, **legacy):
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry: Optional[Telemetry] = None, **legacy):
         if config is None:
             offending = ", ".join(sorted(legacy)) if legacy else "<none>"
             warnings.warn(
@@ -394,7 +456,14 @@ class ContinuousBatcher:
             init_draft_state(slots, config.draft_hist) if self._spec
             else None)
         self._overlap = bool(config.overlap)
-        self.stats = BatcherStats(cache_bytes=tree_bytes(self.caches))
+        # telemetry: registry backs every BatcherStats field; the tracer
+        # (NULL_TRACER by default — zero-cost) records round/chunk spans
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._tracer = self.telemetry.tracer
+        self._track = self.telemetry.track
+        self.stats = BatcherStats(registry=self.telemetry.registry,
+                                  tenant=self.telemetry.tenant,
+                                  cache_bytes=tree_bytes(self.caches))
         # fault guards: watchdog_s bounds the wall time of one chunk
         # dispatch+sync (None = off); audit=True cross-checks the fetched
         # page tables against the no-double-mapping invariant every chunk
@@ -635,6 +704,7 @@ class ContinuousBatcher:
         self.adopt_state(state)
         self._place_state()
         self.stats.remeshes += 1
+        self._tracer.instant("remesh", self._track, args={"tp": new_tp})
 
     # -- fault guards: requeue, watchdog, page-table audit ----------------
     def inject_stall(self, slot: int, seconds: float) -> None:
@@ -717,6 +787,7 @@ class ContinuousBatcher:
         request multiplexed on this batcher.  Tokens emitted before the
         trip are kept whenever they still fit the prompt bucket."""
         self.stats.watchdog_trips += 1
+        self._tracer.instant("watchdog_trip", self._track)
         candidates = [i for i, r in enumerate(self.slot_req)
                       if r is not None]
         if stall_slot is not None and self.slot_req[stall_slot] is not None:
@@ -775,6 +846,8 @@ class ContinuousBatcher:
         self.pages = self.pages._replace(
             table=self.pages.table.at[rows, cols].set(-1))
         self.stats.audit_repairs += len(entries)
+        self._tracer.instant("audit_repair", self._track,
+                             args={"entries": len(entries)})
         new_q = corrupt - self._quarantined
         self._quarantined |= corrupt
         self.stats.quarantined_pages = len(self._quarantined)
@@ -1196,10 +1269,11 @@ class ContinuousBatcher:
         T = self._pick_chunk(active)
         self._key, sub = jax.random.split(self._key)
         t0 = self._clock()
+        ctr = None     # (4,) int32 device counters, paged modes only
         if self._spec:
             if self.paged:
                 (self.caches, self.state, self.pages, self.draft, toks,
-                 emitted, poisoned) = self._chunk_fn(T)(
+                 emitted, poisoned, ctr) = self._chunk_fn(T)(
                     self.params, self.caches, self.state, self.pages,
                     self.draft, sub)
             else:
@@ -1209,7 +1283,7 @@ class ContinuousBatcher:
             self.stats.steps += T * self._draft_window
         elif self.paged:
             (self.caches, self.state, self.pages, toks, emitted,
-             poisoned) = self._chunk_fn(T)(
+             poisoned, ctr) = self._chunk_fn(T)(
                 self.params, self.caches, self.state, self.pages, sub
             )
             self.stats.steps += T
@@ -1234,8 +1308,16 @@ class ContinuousBatcher:
             fetch += (act, top)
             if tab is not None:
                 fetch += (tab,)
+            # the device-counter vector rides LAST in the same fetch (it is
+            # a fresh chunk output, never donated, so no copy needed even
+            # when overlap admission dispatches behind this chunk)
+            fetch += (ctr,)
         self.stats.chunks += 1
         self.stats.dispatches += 1
+        if self._tracer.enabled:
+            self._tracer.complete("dispatch", self._track, t0,
+                                  self._clock() - t0,
+                                  {"T": T, "active": len(active)})
         return {"fetch": fetch, "t0": t0, "T": T, "active": active}
 
     def _finish_chunk(self, pending: Dict[str, Any],
@@ -1246,8 +1328,15 @@ class ContinuousBatcher:
         dispatched *behind* this chunk has popped — the fetched ``free_top``
         predates those pops, so they survive the counter reset."""
         T, active = pending["T"], pending["active"]
+        t_sync0 = self._clock() if self._tracer.enabled else 0.0
         fetched = jax.device_get(pending["fetch"])           # ONE host sync
         elapsed = self._clock() - pending["t0"]
+        if self._tracer.enabled:
+            t_end = pending["t0"] + elapsed
+            self._tracer.complete("host_sync", self._track, t_sync0,
+                                  t_end - t_sync0)
+            self._tracer.complete("chunk", self._track, pending["t0"],
+                                  elapsed, {"T": T, "slots": len(active)})
         stall_slot: Optional[int] = None
         if self._stall is not None:
             stall_slot, extra = self._stall
@@ -1295,9 +1384,18 @@ class ContinuousBatcher:
             req = self.slot_req[i]
             if req is not None and bool(poison_np[i]):
                 self.stats.poisoned_slots += 1
+                self._tracer.instant("poisoned_slot", self._track,
+                                     args={"slot": i})
                 self._requeue_slot(i, req)
         if self.paged:
             active_np = fetched[3]
+            # device counters: in-scan paging/accept activity that rode
+            # back inside this same sync (last element of the fetch)
+            ctr_np = fetched[-1]
+            self.stats.device_pages_popped += int(ctr_np[0])
+            self.stats.device_pages_pushed += int(ctr_np[1])
+            self.stats.fault_denied_slots += int(ctr_np[2])
+            self.stats.device_draft_accepted += int(ctr_np[3])
             self._stalled = self._stalled + 1 \
                 if int(emit_np.sum()) == 0 else 0
             # a slot that deactivated without finishing was denied a page
@@ -1315,6 +1413,8 @@ class ContinuousBatcher:
             for i in active:
                 req = self.slot_req[i]
                 if req is not None and not bool(active_np[i]):
+                    self._tracer.instant("oom_requeue", self._track,
+                                         args={"slot": i})
                     if self._requeue_slot(i, req):
                         self.stats.oom_resumed += 1
                     self.stats.oom_requeues += 1
@@ -1362,24 +1462,31 @@ class ContinuousBatcher:
         fetched ``active``/``free_top`` never see the new slots; this
         round's admission pops are carried across the counter reset."""
         if not self._overlap:
-            self._admit()
+            with self._tracer.span("round", self._track):
+                with self._tracer.span("admission", self._track):
+                    self._admit()
+                active = [i for i, r in enumerate(self.slot_req)
+                          if r is not None]
+                if not active:
+                    return
+                self._finish_chunk(self._dispatch_chunk(active))
+            return
+        with self._tracer.span("round", self._track):
             active = [i for i, r in enumerate(self.slot_req)
                       if r is not None]
-            if not active:
-                return
-            self._finish_chunk(self._dispatch_chunk(active))
-            return
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        pending = self._dispatch_chunk(active) if active else None
-        pops_before = self._admitted_pages_since_sync
-        admits = self._admit(defer=True)
-        round_pops = self._admitted_pages_since_sync - pops_before
-        if pending is not None and admits:
-            self.stats.overlap_rounds += 1
-        if pending is not None:
-            self._finish_chunk(pending, keep_admitted_pages=round_pops)
-        for rec in admits:
-            self._finish_admit(rec)
+            pending = self._dispatch_chunk(active) if active else None
+            pops_before = self._admitted_pages_since_sync
+            with self._tracer.span("admission", self._track):
+                admits = self._admit(defer=True)
+            round_pops = self._admitted_pages_since_sync - pops_before
+            if pending is not None and admits:
+                self.stats.overlap_rounds += 1
+                self._tracer.instant("overlap_merge", self._track,
+                                     args={"admits": len(admits)})
+            if pending is not None:
+                self._finish_chunk(pending, keep_admitted_pages=round_pops)
+            for rec in admits:
+                self._finish_admit(rec)
 
     def run(self, *, max_steps: int = 10_000) -> BatcherStats:
         while (self.queue or any(r is not None for r in self.slot_req)) and \

@@ -509,7 +509,15 @@ def _free_finished_pages(pages_table, free, free_top, finished, pinned):
 def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
                             page_size: int, *, policy=None):
     """decode_chunk(params, caches, state, pages, key) ->
-    (caches, state, pages, tokens (T, B), emitted (T, B), poisoned (B,)).
+    (caches, state, pages, tokens (T, B), emitted (T, B), poisoned (B,),
+    ctr (4,) int32).
+
+    ``ctr`` is the chunk's device-counter vector — pages popped off the
+    free stack, pages pushed back by in-scan frees, slot-steps denied a
+    grant, and (speculative twin only; 0 here) draft tokens accepted —
+    accumulated across the scan so the host-side telemetry sees in-chunk
+    paging activity without an extra sync (it rides back in the same
+    fetch as the tokens).
 
     The paged twin of :func:`make_decode_chunk`: same ``lax.scan`` with the
     same EOS/budget bookkeeping, plus **page faults handled inside the
@@ -537,7 +545,7 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
         bidx = jnp.arange(B)
 
         def body(carry, _):
-            caches, st, pg, key, poisoned = carry
+            caches, st, pg, key, poisoned, ctr = carry
             key, sub = jax.random.split(key)
             # -- page fault: map the write position's logical page --------
             logical = (st.cur_pos // ps).astype(jnp.int32)
@@ -549,7 +557,8 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
             pid = pg.free[jnp.clip(pg.free_top - 1 - rank, 0, n_pages)]
             table = pg.table.at[bidx, logical].set(
                 jnp.where(got, pid, cur_pid))
-            free_top = pg.free_top - got.sum(dtype=jnp.int32)
+            popped = got.sum(dtype=jnp.int32)
+            free_top = pg.free_top - popped
             oom = need & ~got
             active = st.active & ~oom
             # -- decode against the (updated) page table ------------------
@@ -565,8 +574,12 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
             remaining = st.remaining - active.astype(jnp.int32)
             done = active & ((nxt == st.eos) | (remaining <= 0))
             # -- recycle pages of finished slots --------------------------
+            ft_pop = free_top
             table, free, free_top, pinned = _free_finished_pages(
-                table, pg.free, free_top, done | oom | bad, pg.pinned)
+                table, pg.free, ft_pop, done | oom | bad, pg.pinned)
+            ctr = ctr + jnp.stack(
+                [popped, free_top - ft_pop, oom.sum(dtype=jnp.int32),
+                 jnp.int32(0)])
             st = SlotState(
                 tokens=nxt,
                 cur_pos=st.cur_pos + active.astype(jnp.int32),
@@ -576,14 +589,16 @@ def make_paged_decode_chunk(cfg, scfg: ServeConfig, n_steps: int,
             )
             pg = PageState(table=table, free=free, free_top=free_top,
                            quota=pg.quota, pinned=pinned)
-            return (caches, st, pg, key, poisoned | bad), (nxt, emitted)
+            return (caches, st, pg, key, poisoned | bad, ctr), (nxt, emitted)
 
         poisoned0 = jnp.zeros((B,), bool)
-        (caches, state, pages, _, poisoned), (toks, emitted) = jax.lax.scan(
-            body, (caches, state, pages, key, poisoned0), None,
-            length=n_steps
-        )
-        return caches, state, pages, toks, emitted, poisoned
+        ctr0 = jnp.zeros((4,), jnp.int32)
+        (caches, state, pages, _, poisoned, ctr), (toks, emitted) = \
+            jax.lax.scan(
+                body, (caches, state, pages, key, poisoned0, ctr0), None,
+                length=n_steps
+            )
+        return caches, state, pages, toks, emitted, poisoned, ctr
 
     return decode_chunk
 
@@ -738,7 +753,7 @@ def paged_decode_chunk_program(cfg, scfg: ServeConfig, n_steps: int,
             policy, mesh,
             lambda lcfg: make_paged_decode_chunk(lcfg, scfg, n_steps,
                                                  page_size, policy=policy),
-            paged=True, n_in=5, cache_in=1, n_out=6, cache_out=0,
+            paged=True, n_in=5, cache_in=1, n_out=7, cache_out=0,
             donate=(1, 2, 3))
     return PROGRAMS.get(
         "paged_chunk", cfg, scfg, (int(n_steps), int(page_size)), policy,
@@ -1098,7 +1113,14 @@ def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
                                  window: int, ngram: int, page_size: int,
                                  *, policy=None):
     """spec_chunk(params, caches, state, pages, draft, key) ->
-    (caches, state, pages, draft, tokens (Tw, B, W), emitted, poisoned).
+    (caches, state, pages, draft, tokens (Tw, B, W), emitted, poisoned,
+    ctr (4,) int32).
+
+    ``ctr`` = (pages popped, pages pushed, fault-denied slots, draft
+    tokens accepted), accumulated in-scan — the same device-counter
+    vector :func:`make_paged_decode_chunk` returns, with the speculative
+    accept count in the last slot so telemetry sees per-window acceptance
+    without an extra sync.
 
     Paged speculative chunk: the page fault inside the scan maps **every
     logical page the window's committable span touches** (up to
@@ -1130,7 +1152,7 @@ def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
         wi = jnp.arange(W, dtype=jnp.int32)
 
         def body(carry, _):
-            caches, st, pg, dr, poisoned = carry
+            caches, st, pg, dr, poisoned, ctr = carry
             # -- multi-page fault over the window's committable span -------
             weff = jnp.minimum(W, st.remaining)      # positions that can
             l0 = (st.cur_pos // ps).astype(jnp.int32)  # ever be committed
@@ -1156,7 +1178,8 @@ def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
             for s in range(max_span):
                 table = table.at[bidx, col[:, s]].set(
                     jnp.where(pop[:, s], pid[:, s], cur[:, s]))
-            free_top = pg.free_top - pop.sum(dtype=jnp.int32)
+            popped = pop.sum(dtype=jnp.int32)
+            free_top = pg.free_top - popped
             active = st.active & ~oom
             # -- draft + batched verify against the (updated) table --------
             drafts = _propose_drafts(dr, st.tokens, W - 1, ngram)
@@ -1178,8 +1201,12 @@ def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
             c, nxt, done, emitted = _spec_accept(q_toks, g, st, active)
             dr = _advance_draft(dr, g, c)
             # -- recycle pages of finished / denied / poisoned slots -------
+            ft_pop = free_top
             table, free, free_top, pinned = _free_finished_pages(
-                table, pg.free, free_top, done | oom | bad, pg.pinned)
+                table, pg.free, ft_pop, done | oom | bad, pg.pinned)
+            ctr = ctr + jnp.stack(
+                [popped, free_top - ft_pop, oom.sum(dtype=jnp.int32),
+                 jnp.maximum(c - 1, 0).sum(dtype=jnp.int32)])
             st = SlotState(
                 tokens=nxt,
                 cur_pos=st.cur_pos + c,
@@ -1189,13 +1216,15 @@ def make_paged_spec_decode_chunk(cfg, scfg: ServeConfig, n_windows: int,
             )
             pg = PageState(table=table, free=free, free_top=free_top,
                            quota=pg.quota, pinned=pinned)
-            return (caches, st, pg, dr, poisoned | bad), (g, emitted)
+            return (caches, st, pg, dr, poisoned | bad, ctr), (g, emitted)
 
         poisoned0 = jnp.zeros((B,), bool)
-        (caches, state, pages, draft, poisoned), (toks, emitted) = (
-            jax.lax.scan(body, (caches, state, pages, draft, poisoned0),
+        ctr0 = jnp.zeros((4,), jnp.int32)
+        (caches, state, pages, draft, poisoned, ctr), (toks, emitted) = (
+            jax.lax.scan(body,
+                         (caches, state, pages, draft, poisoned0, ctr0),
                          None, length=n_windows))
-        return caches, state, pages, draft, toks, emitted, poisoned
+        return caches, state, pages, draft, toks, emitted, poisoned, ctr
 
     return spec_chunk
 
@@ -1239,7 +1268,7 @@ def paged_spec_decode_chunk_program(cfg, scfg: ServeConfig, n_windows: int,
             lambda lcfg: make_paged_spec_decode_chunk(
                 lcfg, scfg, n_windows, window, ngram, page_size,
                 policy=policy),
-            paged=True, n_in=6, cache_in=1, n_out=7, cache_out=0,
+            paged=True, n_in=6, cache_in=1, n_out=8, cache_out=0,
             donate=(1, 2, 3, 4))
     return PROGRAMS.get(
         "paged_spec_chunk", cfg, scfg,

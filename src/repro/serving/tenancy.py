@@ -35,6 +35,7 @@ from repro.core.dispatch import SwitchMode
 from repro.core.events import RequestRecord
 from repro.core.hrp import HRPError, Lease, ResourcePool
 from repro.core.hypervisor import Hypervisor, TenantSpec
+from repro.obs import Telemetry
 from repro.serving.kv_cache import kv_cache_bytes, paged_kv_cache_bytes
 
 HBM_BYTES_PER_DEVICE = 16 << 30   # TPU v5e
@@ -147,9 +148,12 @@ class TwoStageCompiler:
     benchmarks/bench_compile_cache.py).
     """
 
-    def __init__(self, pool: VirtualAcceleratorPool):
+    def __init__(self, pool: VirtualAcceleratorPool, *,
+                 clock: Optional[Callable[[], float]] = None):
         self.pool = pool
         self._cache: Dict[Tuple, CompiledProgram] = {}
+        # injectable so compile/migrate timings are deterministic in tests
+        self._clock = clock if clock is not None else time.perf_counter
 
     # -- offline -------------------------------------------------------
     def static_compile(
@@ -164,13 +168,13 @@ class TwoStageCompiler:
             in_sh = None
             if shardings_builder is not None:
                 in_sh = shardings_builder(mesh)
-            t0 = time.perf_counter()
+            t0 = self._clock()
             jitted = jax.jit(program, in_shardings=in_sh) if in_sh is not None else jax.jit(program)
             with mesh:
                 lowered = jitted.lower(*abstract_args)
-            t1 = time.perf_counter()
+            t1 = self._clock()
             compiled = lowered.compile()
-            t2 = time.perf_counter()
+            t2 = self._clock()
             prog = CompiledProgram(
                 executable=compiled, lowered_seconds=t1 - t0,
                 compile_seconds=t2 - t1, n_cores=n,
@@ -191,7 +195,7 @@ class TwoStageCompiler:
         timing breakdown).  Raises if the static stage didn't cover
         ``n_cores`` (the paper's design rule: IFPs are pre-generated for
         every allocatable core count)."""
-        t0 = time.perf_counter()
+        t0 = self._clock()
         lease = self.pool.resize(tenant, n_cores)
         prog = self.lookup(key, n_cores)
         if prog is None:
@@ -199,7 +203,7 @@ class TwoStageCompiler:
                 f"no static artifact for ({key}, {n_cores}); "
                 f"static_compile must cover all lease sizes"
             )
-        t1 = time.perf_counter()
+        t1 = self._clock()
         migrated = live_state
         if live_state is not None:
             mesh = self.pool.mesh_for(lease)
@@ -211,7 +215,7 @@ class TwoStageCompiler:
                 migrated = jax.tree.map(jax.device_put, live_state, sh)
             else:
                 migrated = jax.device_put(live_state, mesh.devices.flat[0])
-        t2 = time.perf_counter()
+        t2 = self._clock()
         timing = {
             "t_lookup": t1 - t0,
             "t_migrate": t2 - t1,
@@ -262,9 +266,19 @@ class ServingExecutor:
 
     def __init__(self, vpool: VirtualAcceleratorPool,
                  compiler: Optional[TwoStageCompiler] = None,
-                 *, latency_ewma_alpha: float = 0.3) -> None:
+                 *, latency_ewma_alpha: float = 0.3,
+                 clock: Optional[Callable[[], float]] = None,
+                 telemetry: Optional[Telemetry] = None) -> None:
         self.vpool = vpool
-        self.compiler = compiler if compiler is not None else TwoStageCompiler(vpool)
+        # injectable clock (satellite of the telemetry plane): every
+        # wall-clock stamp in reconfig_log flows through it, so tracing
+        # tests can pin time; the default compiler inherits the same hook
+        self._clock = clock if clock is not None else time.perf_counter
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._reg = self.telemetry.registry
+        self._tracer = self.telemetry.tracer
+        self.compiler = compiler if compiler is not None \
+            else TwoStageCompiler(vpool, clock=clock)
         self.pool = vpool.pool                       # Hypervisor reads .pool
         self.programs: Dict[str, Optional[CompiledProgram]] = {}
         self.live_state: Dict[str, Any] = {}
@@ -285,7 +299,6 @@ class ServingExecutor:
         self._ewma_alpha = latency_ewma_alpha
         # tenant -> (ewma seconds, lease size the measurements came from)
         self._ewma: Dict[str, Tuple[float, int]] = {}
-        self._slo_counts: Dict[str, Dict[str, int]] = {}
 
     def register_state(self, tenant: str, live_state: Any,
                        state_specs: Any = None,
@@ -369,10 +382,10 @@ class ServingExecutor:
             prev_s, prev_k = prev
             self._ewma[tenant] = (a * seconds + (1 - a) * prev_s,
                                   k_now if k_now is not None else prev_k)
-        counts = self._slo_counts.setdefault(tenant, {"n": 0, "met": 0})
-        counts["n"] += 1
+        self._reg.counter("slo.requests", tenant).inc()
         if slo is not None and seconds <= slo:
-            counts["met"] += 1
+            self._reg.counter("slo.met", tenant).inc()
+        self._reg.histogram("slo.latency_s", tenant).record(seconds)
 
     def note_completion(self, record: RequestRecord) -> None:
         """Report a finished request: updates the latency EWMA/SLO counters
@@ -388,10 +401,8 @@ class ServingExecutor:
         start): it counts as offered-but-unserved in :meth:`slo_report` —
         never toward the latency EWMA (it has no service time)."""
         record.dropped = True
-        counts = self._slo_counts.setdefault(
-            record.tenant, {"n": 0, "met": 0})
-        counts["n"] += 1
-        counts["dropped"] = counts.get("dropped", 0) + 1
+        self._reg.counter("slo.requests", record.tenant).inc()
+        self._reg.counter("slo.dropped", record.tenant).inc()
 
     def note_shared_kv(self, tenant: str, pages: int) -> None:
         """Report how many of ``tenant``'s kv pages currently back its
@@ -415,18 +426,41 @@ class ServingExecutor:
         seconds, k0 = observed
         return seconds * k0 / max(n_cores, 1)
 
+    @property
+    def _slo_counts(self) -> Dict[str, Dict[str, int]]:
+        """Legacy view of the registry-backed SLO counters (the pre-obs
+        dict shape, kept so nothing downstream has to change)."""
+        out: Dict[str, Dict[str, int]] = {}
+        for tenant in self._reg.labels("slo.requests"):
+            counts = {"n": self._reg.counter("slo.requests", tenant).value,
+                      "met": self._reg.counter("slo.met", tenant).value}
+            dropped = self._reg.counter("slo.dropped", tenant).value
+            if dropped:
+                counts["dropped"] = dropped
+            out[tenant] = counts
+        return out
+
     def slo_report(self) -> Dict[str, Dict[str, Any]]:
         """Per-tenant SLO attainment over everything fed through
-        :meth:`record_latency` / :meth:`note_completion`."""
+        :meth:`record_latency` / :meth:`note_completion`.  Percentile
+        latencies (p50/p95/p99, seconds) come from the registry's
+        log-bucketed latency histogram — ``None`` for a tenant with no
+        served requests (e.g. all dropped)."""
         out: Dict[str, Dict[str, Any]] = {}
-        for tenant, counts in self._slo_counts.items():
+        for tenant in self._reg.labels("slo.requests"):
+            n = self._reg.counter("slo.requests", tenant).value
+            met = self._reg.counter("slo.met", tenant).value
             ewma = self._ewma.get(tenant)
+            hist = self._reg.histogram("slo.latency_s", tenant)
             out[tenant] = {
-                "requests": counts["n"],
-                "slo_met": counts["met"],
-                "dropped": counts.get("dropped", 0),
-                "attainment": counts["met"] / counts["n"] if counts["n"] else None,
+                "requests": n,
+                "slo_met": met,
+                "dropped": self._reg.counter("slo.dropped", tenant).value,
+                "attainment": met / n if n else None,
                 "ewma_latency": ewma[0] if ewma is not None else None,
+                "p50_latency": hist.quantile(0.50) if hist.count else None,
+                "p95_latency": hist.quantile(0.95) if hist.count else None,
+                "p99_latency": hist.quantile(0.99) if hist.count else None,
             }
         return out
 
@@ -472,20 +506,26 @@ class ServingExecutor:
             entry = {"tenant": name, "n_cores": n_cores}
             cb = self._remesh_cbs.get(name)
             if cb is not None:
-                t0 = time.perf_counter()
+                t0 = self._clock()
                 cb(self.vpool.tp_mesh_for(new_lease))
-                entry["t_remesh"] = time.perf_counter() - t0
+                entry["t_remesh"] = self._clock() - t0
+                self._tracer.complete("remesh", name, t0,
+                                      entry["t_remesh"],
+                                      {"n_cores": n_cores})
             self.reconfig_log.append(entry)
             return
         state = self.live_state.get(name)
         pulled = callable(state)
         if pulled:
             state = state()                  # pull the owner's CURRENT tree
+        t0 = self._clock()
         prog, migrated, timing = self.compiler.reconfigure(
             name, key, n_cores,
             live_state=state,
             state_specs=self.state_specs.get(name),
         )
+        self._tracer.complete("reconfigure", name, t0,
+                              self._clock() - t0, {"n_cores": n_cores})
         self.programs[name] = prog
         if name in self.live_state and not pulled:
             self.live_state[name] = migrated
@@ -501,6 +541,7 @@ class ServingExecutor:
         cb = self._kv_limit_cbs.get(name)
         if cb is not None:
             cb(kv_pages)
+        self._tracer.instant("kv_resize", name, args={"kv_pages": kv_pages})
         self.reconfig_log.append({"tenant": name, "kv_pages": kv_pages})
 
     def exec_remove(self, name: str, at: float) -> None:
@@ -552,6 +593,7 @@ class ServingExecutor:
         resumes where the eviction cut it off."""
         self.vpool.release(name)
         self.programs.pop(name, None)
+        self._tracer.instant("evict", name)
         self.reconfig_log.append({"tenant": name, "evicted": True})
 
 
@@ -560,9 +602,15 @@ def make_serving_hypervisor(
     *,
     compiler: Optional[TwoStageCompiler] = None,
     policy: Any = "even_split",
+    clock: Optional[Callable[[], float]] = None,
+    telemetry: Optional[Telemetry] = None,
     **kwargs: Any,
 ) -> Tuple[Hypervisor, ServingExecutor]:
     """One-call wiring of pool + two-stage compiler + hypervisor: returns the
-    (hypervisor, executor) pair the serving stack schedules through."""
-    executor = ServingExecutor(vpool, compiler)
-    return Hypervisor(vpool.pool, policy=policy, executor=executor, **kwargs), executor
+    (hypervisor, executor) pair the serving stack schedules through.  A
+    ``telemetry`` bundle is shared by both halves, so hypervisor events and
+    executor reconfigs land in one registry and one trace timeline."""
+    executor = ServingExecutor(vpool, compiler, clock=clock,
+                               telemetry=telemetry)
+    return Hypervisor(vpool.pool, policy=policy, executor=executor,
+                      telemetry=executor.telemetry, **kwargs), executor
